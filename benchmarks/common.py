@@ -1,0 +1,83 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Each figure module exposes ``run(quick: bool) -> list[dict]`` returning rows
+with at least {name, us_per_call, derived}; ``benchmarks.run`` prints the
+``name,us_per_call,derived`` CSV (scaffold contract) and dumps the full rows
+to results/benchmarks/<figure>.json.
+
+Figures of merit follow paper §V-A: IPC gain is measured against the
+*baseline config* (no core prefetch, no DRAM-cache prefetch) of the same
+workload/node-count; relative FAM latency likewise; relative prefetches are
+against the non-adaptive (FIFO) prefetcher.
+"""
+from __future__ import annotations
+
+import json
+import time
+from functools import lru_cache
+from pathlib import Path
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import FamConfig, fam_replace
+from repro.core.famsim import SimFlags, build_sim
+from repro.core.ipc_model import geomean
+from repro.core.traces import generate
+
+RESULTS = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
+
+# default workload subset (one per suite + the cache/BW-sensitive ones the
+# paper highlights); --full runs all 19
+QUICK_WORKLOADS = ["603.bwaves_s", "628.pop2_s", "LU", "bfs", "canneal",
+                   "mg"]
+FULL_WORKLOADS = None  # resolved lazily from traces.WORKLOAD_NAMES
+
+BASELINE = SimFlags(core_prefetch=False, dram_prefetch=False)
+CORE = SimFlags(dram_prefetch=False)
+DRAM = SimFlags()
+ADAPT = SimFlags(bw_adapt=True)
+
+
+def WFQ(w: int) -> SimFlags:
+    return SimFlags(wfq=True, wfq_weight=w)
+
+
+_SIM_CACHE: Dict = {}
+
+
+def run_sim(cfg: FamConfig, flags: SimFlags, workloads: Sequence[str],
+            T: int, seed: int = 0) -> Tuple[Dict[str, np.ndarray], float]:
+    """Returns (metrics, wall seconds/step-call). Compiled sims are cached
+    by (cfg, flags, n_nodes)."""
+    import jax.numpy as jnp
+    N = len(workloads)
+    key = (cfg, flags, N)
+    if key not in _SIM_CACHE:
+        _SIM_CACHE[key] = build_sim(cfg, flags, N)
+    run = _SIM_CACHE[key]
+    addrs = np.stack([generate(w, T, seed + 17 * i)[0]
+                      for i, w in enumerate(workloads)])
+    gaps = np.stack([generate(w, T, seed + 17 * i)[1]
+                     for i, w in enumerate(workloads)])
+    t0 = time.perf_counter()
+    out = run(jnp.asarray(addrs), jnp.asarray(gaps))
+    out = {k: np.asarray(v) for k, v in out.items()}
+    dt = time.perf_counter() - t0
+    return out, dt
+
+
+def copies(workload: str, n: int) -> List[str]:
+    return [workload] * n
+
+
+def save_rows(figure: str, rows: List[dict]):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{figure}.json").write_text(json.dumps(rows, indent=2))
+
+
+def workloads(quick: bool) -> List[str]:
+    if quick:
+        return QUICK_WORKLOADS
+    from repro.core.traces import WORKLOAD_NAMES
+    return list(WORKLOAD_NAMES)

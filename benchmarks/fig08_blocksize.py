@@ -1,0 +1,40 @@
+"""Fig. 8 — sub-page block size vs IPC gain and relative FAM latency.
+
+Paper claim: IPC gain flat for 64-512 B (slight peak at 128-256 B), falling
+beyond; 4096 B (page-on-touch) blows FAM latency up ~17x and IPC collapses.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (BASELINE, DRAM, fam_replace, FamConfig,
+                               geomean, run_sim, save_rows, workloads)
+
+BLOCK_SIZES = [64, 128, 256, 512, 1024, 4096]
+T = 12_000
+
+
+def run(quick: bool = True):
+    wls = workloads(quick)
+    rows = []
+    for bs in BLOCK_SIZES:
+        cfg = fam_replace(FamConfig(), block_bytes=bs, num_nodes=1)
+        gains, rels, wall = [], [], 0.0
+        for w in wls:
+            base, dt0 = run_sim(cfg, BASELINE, [w], T)
+            out, dt1 = run_sim(cfg, DRAM, [w], T)
+            gains.append(float(out["ipc"][0] / max(base["ipc"][0], 1e-9)))
+            rels.append(float(out["fam_latency"][0] /
+                              max(base["fam_latency"][0], 1e-9)))
+            wall += dt0 + dt1
+        rows.append({
+            "name": f"fig08_block{bs}",
+            "us_per_call": wall / (2 * len(wls) * T) * 1e6,
+            "derived": f"ipc_gain={geomean(gains):.3f};"
+                       f"rel_fam_latency={geomean(rels):.3f}",
+            "block_bytes": bs,
+            "ipc_gain_geomean": geomean(gains),
+            "rel_fam_latency_geomean": geomean(rels),
+        })
+    save_rows("fig08_blocksize", rows)
+    return rows

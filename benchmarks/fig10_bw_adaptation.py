@@ -1,0 +1,74 @@
+"""Fig. 10 (A-D) + Fig. 11 — DRAM-cache prefetching with and without
+prefetch bandwidth adaptation, on 1/2/4-node systems (same-app copies).
+
+Paper claims (geomeans): core-pf IPC gain 1.20/1.18/1.10 for 1/2/4 nodes;
++DRAM prefetch -> 1.26/1.24/1.11; BW adaptation adds +4%/+8% at 2/4 nodes;
+FAM latency -29%/-34% (1/2 nodes); prefetches issued -18%/-21% (2/4 nodes).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (ADAPT, BASELINE, CORE, DRAM, FamConfig,
+                               copies, geomean, run_sim, save_rows,
+                               workloads)
+
+T = 10_000
+NODE_COUNTS = (1, 2, 4)
+
+
+def run(quick: bool = True):
+    wls = workloads(quick)
+    cfg = FamConfig()
+    rows = []
+    per_wl_4node = {}
+    for n in NODE_COUNTS:
+        agg = {k: [] for k in ("core", "dram", "adapt")}
+        rel_lat = {k: [] for k in ("core", "dram", "adapt")}
+        rel_pf = []
+        hits = {"demand": [], "corepf": [], "demand_ad": [], "corepf_ad": []}
+        wall = 0.0
+        for w in wls:
+            nodes = copies(w, n)
+            base, d0 = run_sim(cfg, BASELINE, nodes, T)
+            core, d1 = run_sim(cfg, CORE, nodes, T)
+            dram, d2 = run_sim(cfg, DRAM, nodes, T)
+            adpt, d3 = run_sim(cfg, ADAPT, nodes, T)
+            wall += d0 + d1 + d2 + d3
+            b_ipc = np.maximum(base["ipc"].mean(), 1e-9)
+            b_lat = np.maximum(base["fam_latency"].mean(), 1e-9)
+            agg["core"].append(core["ipc"].mean() / b_ipc)
+            agg["dram"].append(dram["ipc"].mean() / b_ipc)
+            agg["adapt"].append(adpt["ipc"].mean() / b_ipc)
+            rel_lat["core"].append(core["fam_latency"].mean() / b_lat)
+            rel_lat["dram"].append(dram["fam_latency"].mean() / b_lat)
+            rel_lat["adapt"].append(adpt["fam_latency"].mean() / b_lat)
+            rel_pf.append(adpt["prefetches_issued"].sum() /
+                          max(dram["prefetches_issued"].sum(), 1.0))
+            hits["demand"].append(dram["demand_hit_fraction"].mean())
+            hits["corepf"].append(dram["corepf_hit_fraction"].mean())
+            hits["demand_ad"].append(adpt["demand_hit_fraction"].mean())
+            hits["corepf_ad"].append(adpt["corepf_hit_fraction"].mean())
+            if n == 4:
+                per_wl_4node[w] = {
+                    "core": float(core["ipc"].mean() / b_ipc),
+                    "dram": float(dram["ipc"].mean() / b_ipc),
+                    "adapt": float(adpt["ipc"].mean() / b_ipc)}
+        rows.append({
+            "name": f"fig10_nodes{n}",
+            "us_per_call": wall / (4 * len(wls) * T * n) * 1e6,
+            "derived": (f"core={geomean(agg['core']):.3f};"
+                        f"dram={geomean(agg['dram']):.3f};"
+                        f"adapt={geomean(agg['adapt']):.3f};"
+                        f"rel_pf={np.mean(rel_pf):.3f}"),
+            "nodes": n,
+            "ipc_gain": {k: geomean(v) for k, v in agg.items()},
+            "rel_fam_latency": {k: geomean(v) for k, v in rel_lat.items()},
+            "rel_prefetches_adapt": float(np.mean(rel_pf)),
+            "hit_fractions": {k: float(np.mean(v)) for k, v in hits.items()},
+        })
+    rows.append({"name": "fig11_per_workload_4node", "us_per_call": 0.0,
+                 "derived": "see per_workload field",
+                 "per_workload": per_wl_4node})
+    save_rows("fig10_bw_adaptation", rows)
+    return rows

@@ -1,0 +1,53 @@
+"""Fig. 12 (A-D) + Fig. 13 — WFQ scheduling at the FAM controller with
+weights 1/2/3 vs FIFO, on 2/4-node systems.
+
+Paper claims: weights 1/2/3 improve mean IPC by ~8/9/9% (4-node) and
+~3/4/4% (2-node) over FIFO; FAM latency -24% (4n) / -10% (2n); DRAM
+prefetches issued fall 17/31/37% with weight.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (BASELINE, DRAM, WFQ, FamConfig, copies,
+                               geomean, run_sim, save_rows, workloads)
+
+T = 10_000
+WEIGHTS = (1, 2, 3)
+NODE_COUNTS = (2, 4)
+
+
+def run(quick: bool = True):
+    wls = workloads(quick)
+    cfg = FamConfig()
+    rows = []
+    for n in NODE_COUNTS:
+        for w_ in WEIGHTS:
+            gains, lat, pf, dh, ch, wall = [], [], [], [], [], 0.0
+            for w in wls:
+                nodes = copies(w, n)
+                fifo, d0 = run_sim(cfg, DRAM, nodes, T)
+                wfq, d1 = run_sim(cfg, WFQ(w_), nodes, T)
+                wall += d0 + d1
+                gains.append(wfq["ipc"].mean() / max(fifo["ipc"].mean(), 1e-9))
+                lat.append(wfq["fam_latency"].mean() /
+                           max(fifo["fam_latency"].mean(), 1e-9))
+                pf.append(wfq["prefetches_issued"].sum() /
+                          max(fifo["prefetches_issued"].sum(), 1.0))
+                dh.append(wfq["demand_hit_fraction"].mean())
+                ch.append(wfq["corepf_hit_fraction"].mean())
+            rows.append({
+                "name": f"fig12_nodes{n}_w{w_}",
+                "us_per_call": wall / (2 * len(wls) * T * n) * 1e6,
+                "derived": (f"ipc_vs_fifo={geomean(gains):.3f};"
+                            f"rel_lat={geomean(lat):.3f};"
+                            f"rel_pf={np.mean(pf):.3f}"),
+                "nodes": n, "weight": w_,
+                "ipc_gain_vs_fifo": geomean(gains),
+                "rel_fam_latency_vs_fifo": geomean(lat),
+                "rel_prefetches": float(np.mean(pf)),
+                "demand_hit_fraction": float(np.mean(dh)),
+                "corepf_hit_fraction": float(np.mean(ch)),
+            })
+    save_rows("fig12_wfq", rows)
+    return rows

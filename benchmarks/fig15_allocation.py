@@ -1,0 +1,46 @@
+"""Fig. 15 — IPC across allocation ratios (FAM:DRAM footprint split),
+4-node, measured against the all-local configuration.
+
+Paper claims: with core-pf only, IPC decrement grows from ~10% (ratio 1) to
+~28% (ratio 8); DRAM prefetch recovers ~5-6% across ratios; the adaptive
+variants matter most at high ratios.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (ADAPT, CORE, DRAM, WFQ, FamConfig, copies,
+                               fam_replace, geomean, run_sim, save_rows,
+                               workloads)
+from repro.core.famsim import SimFlags
+
+T = 10_000
+RATIOS = (1, 2, 4, 8)
+
+
+def run(quick: bool = True):
+    wls = workloads(quick)[:4] if quick else workloads(False)
+    rows = []
+    for ratio in RATIOS:
+        cfg = fam_replace(FamConfig(), allocation_ratio=ratio)
+        res = {k: [] for k in ("core", "dram", "adapt", "wfq2")}
+        wall = 0.0
+        for w in wls:
+            nodes = copies(w, 4)
+            local, d0 = run_sim(cfg, SimFlags(all_local=True), nodes, T)
+            l_ipc = np.maximum(local["ipc"].mean(), 1e-9)
+            for key, fl in (("core", CORE), ("dram", DRAM),
+                            ("adapt", ADAPT), ("wfq2", WFQ(2))):
+                out, dt = run_sim(cfg, fl, nodes, T)
+                wall += dt
+                res[key].append(out["ipc"].mean() / l_ipc)
+        rows.append({
+            "name": f"fig15_ratio{ratio}",
+            "us_per_call": wall / (4 * len(wls) * T * 4) * 1e6,
+            "derived": ";".join(f"{k}={geomean(v):.3f}"
+                                for k, v in res.items()),
+            "ratio": ratio,
+            **{f"ipc_vs_all_local_{k}": geomean(v) for k, v in res.items()},
+        })
+    save_rows("fig15_allocation", rows)
+    return rows

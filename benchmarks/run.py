@@ -1,0 +1,43 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the scaffold contract and saves
+full JSON rows under results/benchmarks/. ``--full`` runs all 19 workloads
+per figure (slow); default is the quick representative subset.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig08,fig10,fig12,fig14,fig15,fig16")
+    args = ap.parse_args()
+
+    from benchmarks import (fig08_blocksize, fig10_bw_adaptation, fig12_wfq,
+                            fig14_mixes, fig15_allocation, fig16_cachesize)
+    figures = {
+        "fig08": fig08_blocksize, "fig10": fig10_bw_adaptation,
+        "fig12": fig12_wfq, "fig14": fig14_mixes,
+        "fig15": fig15_allocation, "fig16": fig16_cachesize,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        figures = {k: v for k, v in figures.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    for key, mod in figures.items():
+        t0 = time.time()
+        rows = mod.run(quick=not args.full)
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.3f},\"{r['derived']}\"",
+                  flush=True)
+        print(f"# {key} wall={time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

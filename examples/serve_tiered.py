@@ -1,0 +1,63 @@
+"""Serving driver: batched generation with the Engine, plus the paper's
+tiered-KV mechanism on a long-context decode — KV blocks live in the pooled
+tier, the HBM cache + SPP prefetcher serve the decode stream, attention
+reads resident blocks through the Pallas paged_attention kernel.
+
+Run:  PYTHONPATH=src python examples/serve_tiered.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FamConfig, fam_replace
+from repro.configs.registry import get_config
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.models import build_model
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.tiered_kv import TieredKV, TieredKVConfig
+
+
+def demo_engine():
+    print("== batched generation (granite smoke config) ==")
+    cfg = get_config("granite-3-2b-smoke")
+    model = build_model(cfg, None)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params, ServeConfig(max_new_tokens=12))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                 cfg.vocab_size)
+    gen, stats = engine.generate({"tokens": prompts})
+    print(f"  generated {gen.shape} tokens, e.g. {gen[0].tolist()}")
+
+
+def demo_tiered_kv():
+    print("== tiered KV decode (paper mechanism on the KV block stream) ==")
+    # full attention needs every context block resident: capacity 2x the
+    # 32-block context (set-assoc conflicts aside); the windowed variant in
+    # tests/test_tiering.py shows the cache-pressure regime
+    fam = fam_replace(FamConfig(), cache_ways=8)
+    kvc = TieredKVConfig(block_tokens=16, fast_blocks=64)
+    Hq, Hkv, D, S = 8, 2, 32, 512
+    tk = TieredKV(fam, kvc, max_blocks=S // 16, kv_heads=Hkv, head_dim=D)
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    k = jax.random.normal(ks[0], (S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[1], (S, Hkv, D), jnp.float32)
+    slow = tk.pack(k, v)
+    st = tk.init(slow)
+    errs = []
+    for length in range(64, S + 1, 64):      # growing context decode
+        q = jax.random.normal(jax.random.PRNGKey(length), (Hq, D))
+        st, out = tk.decode_step(st, slow, q, jnp.asarray(length, jnp.int32))
+        ref = flash_attention_ref(q[None, None], k[None, :length],
+                                  v[None, :length], causal=False)[0, 0]
+        errs.append(float(jnp.max(jnp.abs(out - ref))))
+    hr = float(tk.pool.hit_rate(st))
+    print(f"  8 decode steps over growing context: max err {max(errs):.2e}, "
+          f"fast-tier hit rate {hr:.2f}, "
+          f"{int(st.prefetches)} prefetches issued")
+    assert max(errs) < 5e-4
+
+
+if __name__ == "__main__":
+    demo_engine()
+    demo_tiered_kv()
+    print("serve_tiered OK")

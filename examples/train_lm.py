@@ -1,0 +1,74 @@
+"""End-to-end training driver: train a ~100M-param LM for a few hundred
+steps with the full substrate — deterministic data pipeline, AdamW,
+layer-remat scan transformer, async checkpointing, preemption hook,
+straggler watchdog, and restart-exactness.
+
+Default size is CPU-friendly; pass --dmodel 768 --layers 12 --steps 300 for
+the full ~100M run on real hardware.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 60
+"""
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.parallel import single_device_context
+from repro.train.steps import build_train_step, init_train_state
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--dmodel", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="train-demo", family="dense", num_layers=args.layers,
+        d_model=args.dmodel, num_heads=max(args.dmodel // 64, 2),
+        num_kv_heads=max(args.dmodel // 128, 1), d_ff=4 * args.dmodel,
+        vocab_size=args.vocab)
+    n = cfg.param_count()
+    print(f"model: {n/1e6:.1f}M params, {args.steps} steps, "
+          f"batch {args.batch}x{args.seq}")
+
+    ctx = single_device_context()
+    model = build_model(cfg, ctx)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step_fn = jax.jit(build_train_step(
+        model, AdamWConfig(lr=1e-3, warmup_steps=20,
+                           total_steps=args.steps)), donate_argnums=0)
+
+    data = SyntheticLM(DataConfig(vocab_size=args.vocab, seq_len=args.seq,
+                                  global_batch=args.batch))
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps, checkpoint_every=25,
+                      checkpoint_dir=args.ckpt_dir),
+        step_fn, state, None)
+    start = trainer.maybe_restore() if args.resume else 0
+    trainer.data_iter = iter(data.iterator(start_step=start))
+
+    report = trainer.run()
+    first = np.mean(report.losses[:5])
+    last = np.mean(report.losses[-5:])
+    print(f"loss {first:.3f} -> {last:.3f} over {report.steps} steps "
+          f"({report.restarts} restarts, "
+          f"{report.straggler_steps} straggler steps)")
+    assert last < first, "loss did not decrease"
+    print("train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Sharded, mesh-agnostic checkpointing with async save and preemption hook.
+
+Layout: <dir>/step_<N>/
+    manifest.json   — flattened tree paths, shapes, dtypes, step metadata
+    arrays.npz      — one entry per leaf (host-gathered)
+
+Restore takes a *target sharding tree* (possibly for a different mesh) and
+device_puts each leaf — that resharding is what makes checkpoints elastic:
+a run checkpointed on 16x16 restores onto 2x16x16 (or 1 CPU device for
+debugging) unchanged. Async mode hands the host-gathered arrays to a writer
+thread so the training loop only blocks for the device->host copy.
+``install_preemption_hook`` checkpoints on SIGTERM (cluster preemption).
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _unflatten_like(template, flat: Dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, state, *, blocking: bool = True,
+             metadata: Optional[Dict] = None):
+        flat = _flatten(state)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        if blocking:
+            self._write(step, host, metadata)
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, metadata), daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host: Dict[str, np.ndarray],
+               metadata: Optional[Dict]):
+        out = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f".tmp_step_{step:08d}"
+        tmp.mkdir(parents=True, exist_ok=True)
+        np.savez(tmp / "arrays.npz", **host)
+        manifest = {
+            "step": step,
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in host.items()},
+            "metadata": metadata or {},
+            "time": time.time(),
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=2))
+        if out.exists():
+            import shutil
+            shutil.rmtree(out)
+        tmp.rename(out)          # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            import shutil
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def all_steps(self):
+        return [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")]
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return max(steps) if steps else None
+
+    def restore(self, step: int, template, shardings=None):
+        """Load; reshard onto ``shardings`` (tree or None = host arrays)."""
+        path = self.dir / f"step_{step:08d}"
+        data = np.load(path / "arrays.npz")
+        flat = {k: data[k] for k in data.files}
+        tree = _unflatten_like(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree
+
+    def restore_latest(self, template, shardings=None
+                       ) -> Tuple[Optional[int], Any]:
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, template, shardings)
+
+
+def install_preemption_hook(save_fn: Callable[[], None]):
+    """Checkpoint on SIGTERM (preemption notice), then exit cleanly."""
+    def handler(signum, frame):
+        save_fn()
+        raise SystemExit(143)
+    signal.signal(signal.SIGTERM, handler)

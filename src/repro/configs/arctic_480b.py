@@ -1,0 +1,25 @@
+"""arctic-480b — MoE 128 experts top-2 + dense residual. [hf:Snowflake/snowflake-arctic-base]
+
+469B-parameter class model: the flagship FAM-offload demo (optimizer state and
+inactive expert slabs live in the pooled-memory tier; see DESIGN.md §2c).
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32000,
+    activation="swiglu",
+    norm="rmsnorm",
+    position="rope",
+    rope_theta=10_000.0,
+    moe=MoEConfig(num_experts=128, top_k=2, d_ff=4864,
+                  dense_residual=True, dense_d_ff=4864),
+    run_long_context=False,
+    source="hf:Snowflake/snowflake-arctic-base",
+)

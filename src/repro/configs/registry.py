@@ -1,0 +1,37 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig, smoke_variant
+
+from repro.configs import (  # noqa: F401
+    yi_9b, gemma_2b, internlm2_20b, granite_3_2b, granite_moe_1b_a400m,
+    arctic_480b, zamba2_2_7b, xlstm_350m, qwen2_vl_72b, whisper_base,
+)
+
+_MODULES = (
+    yi_9b, gemma_2b, internlm2_20b, granite_3_2b, granite_moe_1b_a400m,
+    arctic_480b, zamba2_2_7b, xlstm_350m, qwen2_vl_72b, whisper_base,
+)
+
+REGISTRY: Dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+ARCH_IDS = tuple(REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch.endswith("-smoke"):
+        return smoke_variant(get_config(arch[: -len("-smoke")]))
+    if arch.endswith("-fast"):
+        # §Perf winners as first-class configs (see EXPERIMENTS.md §4)
+        import dataclasses
+        cfg = get_config(arch[: -len("-fast")])
+        if cfg.xlstm is not None:
+            return dataclasses.replace(
+                cfg, xlstm=dataclasses.replace(cfg.xlstm,
+                                               parallel_mlstm=True))
+        return cfg
+    if arch not in REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch]

@@ -1,0 +1,2 @@
+from repro.core.famsim import SimFlags, build_sim, simulate  # noqa: F401
+from repro.core.tiering import TieredBlockPool, TierState  # noqa: F401

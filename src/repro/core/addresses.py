@@ -1,0 +1,38 @@
+"""Address math for sub-page block caching (paper §III).
+
+Node physical addresses are decomposed as  page | block | offset:
+    page  = addr >> page_bits
+    block = (addr >> block_bits) & (blocks_per_page - 1)
+A *block address* (page << blocks_per_page_bits | block) is the unit the
+DRAM cache and prefetcher operate on (128-512 B sub-page blocks).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PAGE_BITS = 12  # 4 KiB pages
+
+
+def block_bits(block_bytes: int) -> int:
+    return int(block_bytes).bit_length() - 1
+
+
+def split(addr, block_bytes: int):
+    """addr (cache-line granular, in bytes) -> (page, block_in_page)."""
+    bb = block_bits(block_bytes)
+    page = addr >> PAGE_BITS
+    block = (addr >> bb) & ((1 << (PAGE_BITS - bb)) - 1)
+    return page, block
+
+
+def block_addr(addr, block_bytes: int):
+    """Global block index of a byte address."""
+    return addr >> block_bits(block_bytes)
+
+
+def blocks_per_page(block_bytes: int) -> int:
+    return 1 << (PAGE_BITS - block_bits(block_bytes))
+
+
+def from_page_block(page, block, block_bytes: int):
+    return (page << (PAGE_BITS - block_bits(block_bytes))) + block

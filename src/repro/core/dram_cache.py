@@ -1,0 +1,96 @@
+"""DRAM cache metadata — set-associative, LRU, sub-page blocks (paper §III-B).
+
+The cache itself is a region of local DRAM; this module manages the
+*metadata* (tags + LRU state), exactly like the paper: FAM block addresses
+hash into sets, tag compare guards collisions, LRU within the set picks the
+victim. ~7 B/block metadata => <5% of cache capacity (paper's 16 MB example).
+
+Functional jnp state -> jit/vmap/scan-safe; the same structure backs both
+the simulator and the production ``TieredBlockPool`` (where the "data" lives
+in an HBM block pool and slot index = HBM pool slot).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CacheState(NamedTuple):
+    tags: jax.Array     # (sets, ways) int32: block_addr + 1; 0 = invalid
+    lru: jax.Array      # (sets, ways) int32: last-touch stamp
+    stamp: jax.Array    # () int32 monotonic counter
+
+
+def init_cache(num_sets: int, ways: int) -> CacheState:
+    return CacheState(tags=jnp.zeros((num_sets, ways), jnp.int32),
+                      lru=jnp.zeros((num_sets, ways), jnp.int32),
+                      stamp=jnp.zeros((), jnp.int32))
+
+
+def _set_index(block_addr, num_sets: int):
+    h = (block_addr.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)) >> 7
+    return (h % jnp.uint32(num_sets)).astype(jnp.int32)
+
+
+def lookup(state: CacheState, block_addr) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (hit, set_idx, way). Pure query; no state change."""
+    si = _set_index(block_addr, state.tags.shape[0])
+    row = state.tags[si]
+    match = row == (block_addr.astype(jnp.int32) + 1)
+    hit = jnp.any(match)
+    way = jnp.argmax(match).astype(jnp.int32)
+    return hit, si, way
+
+
+def touch(state: CacheState, set_idx, way, enable=True) -> CacheState:
+    """LRU update on a hit (paper: 'the corresponding LRU field is updated').
+
+    ``enable`` masks the write *value* (not the op) so XLA keeps the update
+    in place inside loops — no whole-table copies."""
+    en = jnp.asarray(enable)
+    stamp = state.stamp + en.astype(jnp.int32)
+    new_lru = jnp.where(en, stamp, state.lru[set_idx, way])
+    return state._replace(lru=state.lru.at[set_idx, way].set(new_lru),
+                          stamp=stamp)
+
+
+def insert(state: CacheState, block_addr, enable=True
+           ) -> Tuple[CacheState, jax.Array, jax.Array]:
+    """Fill one block: evict set-LRU victim if no vacancy.
+
+    Returns (state, evicted_tag-1 or -1, slot) where slot = set*ways + way
+    identifies the cache data location (used as HBM pool slot in tiering).
+    ``enable`` masks the written values (in-place-friendly, see touch).
+    """
+    en = jnp.asarray(enable)
+    si = _set_index(block_addr, state.tags.shape[0])
+    row_tags = state.tags[si]
+    row_lru = state.lru[si]
+    tag = block_addr.astype(jnp.int32) + 1
+    already = row_tags == tag
+    has = jnp.any(already)
+    vacant = row_tags == 0
+    has_vacant = jnp.any(vacant)
+    way = jnp.where(has, jnp.argmax(already),
+                    jnp.where(has_vacant, jnp.argmax(vacant),
+                              jnp.argmin(row_lru))).astype(jnp.int32)
+    evicted = jnp.where(en & ~(has | has_vacant), row_tags[way] - 1, -1)
+    stamp = state.stamp + en.astype(jnp.int32)
+    new = CacheState(
+        tags=state.tags.at[si, way].set(jnp.where(en, tag, row_tags[way])),
+        lru=state.lru.at[si, way].set(jnp.where(en, stamp, row_lru[way])),
+        stamp=stamp)
+    ways = state.tags.shape[1]
+    return new, evicted, si * ways + way
+
+
+def invalidate(state: CacheState, block_addr) -> CacheState:
+    hit, si, way = lookup(state, block_addr)
+    tags = jnp.where(hit, state.tags.at[si, way].set(0), state.tags)
+    return state._replace(tags=tags)
+
+
+def occupancy(state: CacheState) -> jax.Array:
+    return jnp.mean((state.tags > 0).astype(jnp.float32))

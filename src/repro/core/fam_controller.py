@@ -1,0 +1,93 @@
+"""FAM controller service model (paper §III-D, §IV-A).
+
+The controller translates CXL.mem requests into DDR traffic. Baseline
+(FIFO): one service chain at pooled-DDR bandwidth — prefetch blocks queue
+IN FRONT of later demands, which is exactly the interference §IV attacks.
+Each request's completion follows the queueing recurrence
+
+    busy_i = max(arrival_i, busy_{i-1}) + service_i
+
+evaluated in closed form:  busy_i = cs_i + max_{j<=i}(arr_j - cs_{j-1}),
+with cs = cumsum(service).
+
+WFQ mode: a *fluid* two-class DWRR — demand and prefetch each have their own
+service chain; when the other class is backlogged, a class is served at its
+DWRR share (demand W/(W+1), prefetch 1/(W+1)), else at full bandwidth
+(work-conserving). This is the standard fluid limit of the per-request
+Algorithm 1 (implemented verbatim in repro/core/wfq.py and used directly by
+the TieredBlockPool copy engine); the fluid form is what keeps the
+simulator's step vectorizable. Block-size ratio r is inherent here because
+service time is proportional to bytes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FamConfig
+
+
+def service_chain(arrivals: jax.Array, service: jax.Array, valid: jax.Array,
+                  busy0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Vectorized busy-chain. arrivals/service: (K,) in issue order.
+
+    Returns (finish (K,), new_busy). Invalid slots take zero service and
+    don't advance the chain.
+    """
+    service = jnp.where(valid, service, 0.0)
+    arr = jnp.where(valid, arrivals, -jnp.inf)
+    cs = jnp.cumsum(service)
+    base = jnp.maximum(jnp.maximum.accumulate(arr - (cs - service)), busy0)
+    finish = cs + base
+    new_busy = jnp.max(jnp.where(valid, finish, busy0))
+    return finish, jnp.maximum(new_busy, busy0)
+
+
+class FamTimings(NamedTuple):
+    demand_finish: jax.Array     # (ND,) completion time per demand slot
+    prefetch_finish: jax.Array   # (NP,) completion time per prefetch slot
+    new_busy: jax.Array          # (2,) [demand_chain, prefetch_chain]
+
+
+def arbitrate(cfg: FamConfig, busy0: jax.Array,
+              d_arr, d_valid, d_bytes, p_arr, p_valid, p_bytes, *,
+              use_wfq: bool, weight: int) -> FamTimings:
+    """Time one step's arrivals through the DDR service model.
+
+    busy0: (2,) chain state [demand, prefetch] (equal in FIFO mode).
+    Within a class, requests are served in arrival (FIFO) order.
+    """
+    ND, NP = d_arr.shape[0], p_arr.shape[0]
+    d_service = cfg.fam_service_cycles(1) * d_bytes
+    p_service = cfg.fam_service_cycles(1) * p_bytes
+
+    if use_wfq:
+        W = float(weight)
+        d_busy0, p_busy0 = busy0[0], busy0[1]
+        # demand chain: slowed to its W/(W+1) share while prefetch backlogged
+        f_d = jnp.where(p_busy0 > d_arr, (W + 1.0) / W, 1.0)
+        d_fin, d_busy = service_chain(d_arr, d_service * f_d, d_valid,
+                                      d_busy0)
+        # prefetch chain: gets the 1/(W+1) share while demands backlogged
+        f_p = jnp.where(d_busy0 > p_arr, W + 1.0, 1.0)
+        p_fin, p_busy = service_chain(p_arr, p_service * f_p, p_valid,
+                                      p_busy0)
+        new_busy = jnp.stack([d_busy, p_busy])
+    else:
+        # FIFO: single queue in arrival order (prefetches delay demands)
+        arr_k = jnp.concatenate([d_arr, p_arr])
+        srv_k = jnp.concatenate([d_service, p_service])
+        val_k = jnp.concatenate([d_valid, p_valid])
+        order = jnp.argsort(jnp.where(val_k, arr_k, jnp.inf), stable=True)
+        finish_o, busy = service_chain(arr_k[order], srv_k[order],
+                                       val_k[order], busy0[0])
+        finish_k = jnp.zeros((ND + NP,), jnp.float32).at[order].set(finish_o)
+        d_fin, p_fin = finish_k[:ND], finish_k[ND:]
+        new_busy = jnp.stack([busy, busy])
+
+    lat_fixed = cfg.fam_mem_latency + cfg.cxl_min_latency_cycles
+    d_fin = jnp.where(d_valid, d_fin + lat_fixed, 0.0)
+    p_fin = jnp.where(p_valid, p_fin + lat_fixed, 0.0)
+    return FamTimings(d_fin, p_fin, new_busy)

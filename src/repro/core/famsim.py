@@ -1,0 +1,367 @@
+"""Multi-node FAM memory-system simulator (paper §V methodology, in JAX).
+
+Vectorized discrete-event model: one LLC-miss event per node per scan step.
+Each step:
+  A. (per node, vmapped) advance clock, retire completed prefetches into the
+     DRAM cache, probe cache/prefetch-queue for the demand, train SPP and
+     generate DRAM-cache prefetch candidates, run the core (stride)
+     prefetcher, apply BW-adaptation tokens;
+  B. (global) the FAM controller orders the step's demand+prefetch arrivals
+     (FIFO or DWRR/WFQ) and times them through the DDR service chain;
+  C. (per node) demand stall accounting (IPC model), prefetch-queue fills,
+     throttle observation, metric accumulation.
+
+Figures of merit follow the paper's §V-A definitions: IPC gain, relative
+FAM latency, relative DRAM prefetches issued, demand / core-prefetch hit
+fractions. The core model is analytic: cycles = sum(gap) + sum(stall/MLP).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FamConfig
+from repro.core import dram_cache as dc
+from repro.core import prefetch_queue as pq
+from repro.core import spp as spp_lib
+from repro.core.addresses import PAGE_BITS, block_bits
+from repro.core.fam_controller import arbitrate
+from repro.core.throttle import (ThrottleState, init_throttle, maybe_adapt,
+                                 observe, take_tokens)
+
+CORE_PF_DEGREE = 2
+COMPLETIONS_PER_STEP = 8
+CORE_FILL_ENTRIES = 64   # LLC fill-buffer model for core prefetches
+
+
+@dataclass(frozen=True)
+class SimFlags:
+    core_prefetch: bool = True
+    dram_prefetch: bool = True
+    bw_adapt: bool = False
+    wfq: bool = False
+    wfq_weight: int = 2
+    all_local: bool = False
+
+
+class NodeState(NamedTuple):
+    clock: jax.Array
+    spp: spp_lib.SppState
+    cache: dc.CacheState
+    queue: pq.PrefetchQueue
+    throttle: ThrottleState
+    core_last: jax.Array       # last demand line addr (for stride detect)
+    core_stride: jax.Array
+    core_buf_line: jax.Array   # (CORE_FILL_ENTRIES,) line addr +1; 0 empty
+    core_buf_fin: jax.Array    # fill completion times
+    core_buf_ptr: jax.Array
+    # accumulators
+    instr: jax.Array
+    cycles: jax.Array
+    fam_lat_sum: jax.Array
+    fam_cnt: jax.Array
+    demand_fam: jax.Array      # demands to FAM-resident data
+    demand_hit: jax.Array      # ... that hit the DRAM cache
+    corepf_fam: jax.Array
+    corepf_hit: jax.Array
+    pf_issued: jax.Array       # DRAM-cache prefetches issued to FAM
+
+
+def _init_node(cfg: FamConfig) -> NodeState:
+    f0 = jnp.float32(0.0)
+    return NodeState(
+        clock=f0, spp=spp_lib.init_spp(cfg),
+        cache=dc.init_cache(cfg.num_sets, cfg.cache_ways),
+        queue=pq.init_queue(cfg.prefetch_queue),
+        throttle=init_throttle(cfg),
+        core_last=jnp.int32(-1), core_stride=jnp.int32(0),
+        core_buf_line=jnp.zeros((CORE_FILL_ENTRIES,), jnp.int32),
+        core_buf_fin=jnp.zeros((CORE_FILL_ENTRIES,), jnp.float32),
+        core_buf_ptr=jnp.int32(0),
+        instr=f0, cycles=f0, fam_lat_sum=f0, fam_cnt=f0,
+        demand_fam=f0, demand_hit=f0, corepf_fam=f0, corepf_hit=f0,
+        pf_issued=f0)
+
+
+def _is_fam_page(cfg: FamConfig, page):
+    """allocation ratio X => X/(X+1) of pages live in FAM (paper §V-A.4)."""
+    h = (page.astype(jnp.uint32) * jnp.uint32(0x61C88647)) >> 16
+    return (h % jnp.uint32(cfg.allocation_ratio + 1)) != 0
+
+
+def _phase_a(cfg: FamConfig, flags: SimFlags, ns: NodeState, addr, gap,
+             warm):
+    """Per-node pre-arbitration work. Returns (ns, req) where req carries
+    this node's demand + prefetch candidates."""
+    bb = block_bits(cfg.block_bytes)
+    clock = ns.clock + gap
+
+    # retire completed prefetches into the cache (bounded per step)
+    done = (ns.queue.block > 0) & (ns.queue.finish <= clock)
+    score = jnp.where(done, -ns.queue.finish, -jnp.inf)
+    _, idxs = jax.lax.top_k(score, COMPLETIONS_PER_STEP)
+    cache = ns.cache
+    queue_block = ns.queue.block
+
+    def fill(i, carry):
+        cache, queue_block = carry
+        slot = idxs[i]
+        ok = done[slot] & (queue_block[slot] > 0)
+        blk = queue_block[slot] - 1
+        cache, _, _ = dc.insert(cache, blk, enable=ok)
+        queue_block = queue_block.at[slot].set(
+            jnp.where(ok, 0, queue_block[slot]))
+        return cache, queue_block
+
+    cache, queue_block = jax.lax.fori_loop(0, COMPLETIONS_PER_STEP, fill,
+                                           (cache, queue_block))
+    queue = ns.queue._replace(block=queue_block)
+
+    page = (addr >> PAGE_BITS).astype(jnp.int32)
+    block_in_page = ((addr >> bb) & ((1 << (PAGE_BITS - bb)) - 1)).astype(jnp.int32)
+    gblock = (addr >> bb).astype(jnp.int32)
+    is_fam = _is_fam_page(cfg, page) & (not flags.all_local)
+
+    # core-prefetch fill buffer (LLC side): a demand whose line was core-
+    # prefetched is served on-chip once the fill lands
+    line0 = (addr >> 6).astype(jnp.int32)
+    cb_match = ns.core_buf_line == (line0 + 1)
+    cpb_hit = jnp.any(cb_match) & flags.core_prefetch
+    cpb_fin = jnp.max(jnp.where(cb_match, ns.core_buf_fin, 0.0))
+
+    # demand probe
+    if flags.dram_prefetch:
+        hit, si, way = dc.lookup(cache, gblock)
+        hit = hit & is_fam
+        cache = dc.touch(cache, si, way, enable=hit)
+        inflight, inflight_fin = pq.contains(queue, gblock)
+        inflight = inflight & is_fam & ~hit
+    else:
+        hit = jnp.bool_(False)
+        inflight = jnp.bool_(False)
+        inflight_fin = jnp.float32(0.0)
+    hit = hit & ~cpb_hit
+    inflight = inflight & ~cpb_hit
+    demand_to_fam = is_fam & ~hit & ~inflight & ~cpb_hit
+
+    # SPP train + predict (FAM-bound LLC misses only, incl. core prefetch
+    # misses per paper §III; here the demand stream trains)
+    pf_blocks = jnp.zeros((cfg.prefetch_degree,), jnp.int32)
+    pf_valid = jnp.zeros((cfg.prefetch_degree,), jnp.bool_)
+    spp = ns.spp
+    if flags.dram_prefetch:
+        spp, sig = spp_lib.update(cfg, ns.spp, page, block_in_page,
+                                  enable=is_fam)
+        bpp = 1 << (PAGE_BITS - bb)
+        cand_gblock, cand_valid = spp_lib.predict(
+            cfg, spp, page, block_in_page, sig, cfg.prefetch_degree, bpp=bpp)
+
+        def not_redundant(b):
+            h, _, _ = dc.lookup(cache, b)
+            infl, _ = pq.contains(queue, b)
+            return ~h & ~infl
+
+        fresh = jax.vmap(not_redundant)(cand_gblock)
+        pf_valid = cand_valid & fresh & is_fam
+        pf_blocks = cand_gblock
+        # throttle: grant tokens for the surviving candidates
+        want = jnp.sum(pf_valid.astype(jnp.int32))
+        thr, grant = take_tokens(ns.throttle, want, flags.bw_adapt)
+        rank = jnp.cumsum(pf_valid.astype(jnp.int32))
+        pf_valid = pf_valid & (rank <= grant)
+        # queue-space gate (§III-A2: drop when the queue is full/threshold)
+        free = jnp.sum((queue.block == 0).astype(jnp.int32))
+        pf_valid = pf_valid & (jnp.cumsum(pf_valid.astype(jnp.int32)) <= free)
+    else:
+        thr = ns.throttle
+
+    # core (stride) prefetcher — 64B lines into LLC; may hit the DRAM cache
+    line = (addr >> 6).astype(jnp.int32)
+    stride = line - ns.core_last
+    stride_ok = (stride == ns.core_stride) & (stride != 0) & \
+        (jnp.abs(stride) < 32)
+    cpf_lines = line + stride * (1 + jnp.arange(CORE_PF_DEGREE, dtype=jnp.int32))
+    cpf_pages = (cpf_lines >> (PAGE_BITS - 6)).astype(jnp.int32)
+    cpf_fam = jax.vmap(lambda p: _is_fam_page(cfg, p))(cpf_pages) & \
+        (not flags.all_local)
+    cpf_valid = stride_ok & cpf_fam & flags.core_prefetch
+    cpf_gblock = (cpf_lines >> (bb - 6)).astype(jnp.int32)
+    if flags.dram_prefetch:
+        cpf_hits = jax.vmap(lambda b: dc.lookup(cache, b)[0])(cpf_gblock)
+    else:
+        cpf_hits = jnp.zeros((CORE_PF_DEGREE,), jnp.bool_)
+    cpf_to_fam = cpf_valid & ~cpf_hits
+
+    ns = ns._replace(clock=clock, spp=spp, cache=cache, queue=queue,
+                     throttle=thr, core_last=line,
+                     core_stride=jnp.where(stride != 0, stride,
+                                           ns.core_stride))
+    req = dict(gblock=gblock, is_fam=is_fam, hit=hit, inflight=inflight,
+               inflight_fin=inflight_fin, demand_to_fam=demand_to_fam,
+               cpb_hit=cpb_hit, cpb_fin=cpb_fin,
+               pf_blocks=pf_blocks, pf_valid=pf_valid,
+               cpf_valid=cpf_valid, cpf_hits=cpf_hits & cpf_valid,
+               cpf_to_fam=cpf_to_fam, gap=gap, warm=warm)
+    return ns, req
+
+
+def _phase_c(cfg: FamConfig, flags: SimFlags, ns: NodeState, req,
+             d_fin, pf_fin, cpf_fin):
+    """Per-node post-arbitration accounting + queue fills."""
+    clock = ns.clock
+    warm = req["warm"]
+    local_lat = jnp.float32(cfg.local_mem_latency)
+
+    fam_demand_lat = jnp.maximum(d_fin - clock, 1.0)
+    llc_lat = jnp.float32(cfg.llc_latency)
+    lat = jnp.where(req["cpb_hit"],
+                    jnp.maximum(req["cpb_fin"] - clock, llc_lat),
+                    jnp.where(~req["is_fam"], local_lat,
+                              jnp.where(req["hit"], local_lat,
+                                        jnp.where(req["inflight"],
+                                                  jnp.maximum(req["inflight_fin"] - clock,
+                                                              local_lat),
+                                                  fam_demand_lat))))
+
+    # fill the prefetch queue with issued prefetches
+    queue = ns.queue
+
+    def ins(i, q):
+        q2, _ = pq.try_insert(q, req["pf_blocks"][i], pf_fin[i], 0.95,
+                              enable=req["pf_valid"][i])
+        return q2
+
+    queue = jax.lax.fori_loop(0, cfg.prefetch_degree, ins, queue)
+
+    fam_miss = req["is_fam"] & ~req["hit"] & ~req["inflight"]
+    # record core-prefetch fills (round-robin fill buffer)
+    line0 = ns.core_last   # line of the current access (set in phase A)
+    stride = ns.core_stride
+    cpf_lines = line0 + stride * (1 + jnp.arange(CORE_PF_DEGREE, dtype=jnp.int32))
+    cpf_cached_fin = clock + local_lat
+    fin = jnp.where(req["cpf_hits"], cpf_cached_fin, cpf_fin)
+    buf_line, buf_fin, ptr = ns.core_buf_line, ns.core_buf_fin, ns.core_buf_ptr
+
+    def put(i, carry):
+        bl, bf, p = carry
+        ok = req["cpf_valid"][i]
+        bl = bl.at[p].set(jnp.where(ok, cpf_lines[i] + 1, bl[p]))
+        bf = bf.at[p].set(jnp.where(ok, fin[i], bf[p]))
+        return bl, bf, (p + ok.astype(jnp.int32)) % CORE_FILL_ENTRIES
+
+    buf_line, buf_fin, ptr = jax.lax.fori_loop(
+        0, CORE_PF_DEGREE, put, (buf_line, buf_fin, ptr))
+
+    thr = observe(ns.throttle, lat, fam_miss, req["hit"],
+                  jnp.sum(req["pf_valid"].astype(jnp.int32)))
+    thr = maybe_adapt(cfg, thr) if flags.bw_adapt else thr
+
+    # node-level accounting: the trace event stream aggregates the node's
+    # cores, so per-event compute gaps shrink by 1/cores (higher FAM arrival
+    # rate — the paper's congestion regime) while one event's stall only
+    # blocks one core: stall_node = lat / (mlp * cores).
+    stall = lat / (cfg.mlp * cfg.cores_per_node)
+    w = warm.astype(jnp.float32)
+    npf = jnp.sum(req["pf_valid"].astype(jnp.int32)).astype(jnp.float32)
+    ns = ns._replace(
+        clock=clock + stall, queue=queue, throttle=thr,
+        core_buf_line=buf_line, core_buf_fin=buf_fin, core_buf_ptr=ptr,
+        instr=ns.instr + w * req["gap"] * cfg.base_ipc,
+        cycles=ns.cycles + w * (req["gap"] + stall),
+        fam_lat_sum=ns.fam_lat_sum + w * jnp.where(req["is_fam"], lat, 0.0),
+        fam_cnt=ns.fam_cnt + w * req["is_fam"].astype(jnp.float32),
+        demand_fam=ns.demand_fam + w * req["is_fam"].astype(jnp.float32),
+        demand_hit=ns.demand_hit + w * (req["hit"]).astype(jnp.float32),
+        corepf_fam=ns.corepf_fam + w * jnp.sum(
+            req["cpf_valid"].astype(jnp.float32)),
+        corepf_hit=ns.corepf_hit + w * jnp.sum(
+            req["cpf_hits"].astype(jnp.float32)),
+        pf_issued=ns.pf_issued + w * npf)
+    return ns
+
+
+def build_sim(cfg: FamConfig, flags: SimFlags, num_nodes: int):
+    """Returns jitted run(addrs (N,T), gaps (N,T)) -> metrics dict."""
+    D = cfg.prefetch_degree
+
+    def step(carry, inputs):
+        nodes, fam_busy = carry
+        addr, gap, warm = inputs     # addr/gap: (N,)
+        nodes, req = jax.vmap(
+            lambda ns, a, g: _phase_a(cfg, flags, ns, a, g, warm))(
+                nodes, addr, gap)
+
+        # ---- global arbitration
+        if flags.wfq:
+            # finite prefetch input queue at the FAM controller: when the
+            # prefetch-class backlog exceeds the cap, CXL backpressure stops
+            # prefetch issue at the nodes (this is what makes WFQ reduce
+            # prefetches-issued in the paper's Fig. 12C)
+            backlog_ok = (fam_busy[1] - nodes.clock) < cfg.wfq_backlog_cap
+            req["pf_valid"] = req["pf_valid"] & backlog_ok[:, None]
+            req["cpf_to_fam"] = req["cpf_to_fam"] & backlog_ok[:, None]
+        d_arr = nodes.clock
+        d_valid = req["demand_to_fam"]
+        d_bytes = jnp.full((num_nodes,), float(cfg.demand_bytes))
+        p_arr = jnp.concatenate([
+            jnp.repeat(nodes.clock, D), jnp.repeat(nodes.clock, CORE_PF_DEGREE)])
+        p_valid = jnp.concatenate([req["pf_valid"].reshape(-1),
+                                   req["cpf_to_fam"].reshape(-1)])
+        p_bytes = jnp.concatenate([
+            jnp.full((num_nodes * D,), float(cfg.block_bytes)),
+            jnp.full((num_nodes * CORE_PF_DEGREE,), float(cfg.demand_bytes))])
+        t = arbitrate(cfg, fam_busy, d_arr, d_valid, d_bytes,
+                      p_arr, p_valid, p_bytes,
+                      use_wfq=flags.wfq, weight=flags.wfq_weight)
+        pf_fin = t.prefetch_finish[: num_nodes * D].reshape(num_nodes, D)
+        cpf_fin = t.prefetch_finish[num_nodes * D:].reshape(
+            num_nodes, CORE_PF_DEGREE)
+
+        nodes = jax.vmap(
+            lambda ns, r, df, pf, cf: _phase_c(cfg, flags, ns, r, df, pf, cf)
+        )(nodes, req, t.demand_finish, pf_fin, cpf_fin)
+        return (nodes, t.new_busy), None
+
+    def run(addrs, gaps, warmup_frac: float = 0.2):
+        N, T = addrs.shape
+        assert N == num_nodes
+        gaps = gaps / cfg.cores_per_node   # aggregate multi-core node stream
+        one = _init_node(cfg)
+        nodes = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (N,) + x.shape).copy(), one)
+        warm = jnp.arange(T) >= int(T * warmup_frac)
+        (nodes, _), _ = jax.lax.scan(
+            step, (nodes, jnp.zeros((2,), jnp.float32)),
+            (addrs.T.astype(jnp.int32), gaps.T.astype(jnp.float32), warm))
+        ipc = nodes.instr / jnp.maximum(nodes.cycles, 1.0)
+        return {
+            "ipc": ipc,
+            "fam_latency": nodes.fam_lat_sum / jnp.maximum(nodes.fam_cnt, 1.0),
+            "demand_hit_fraction": nodes.demand_hit /
+                jnp.maximum(nodes.demand_fam, 1.0),
+            "corepf_hit_fraction": nodes.corepf_hit /
+                jnp.maximum(nodes.corepf_fam, 1.0),
+            "prefetches_issued": nodes.pf_issued,
+            "issue_rate": nodes.throttle.issue_rate,
+            "cache_occupancy": jax.vmap(dc.occupancy)(nodes.cache),
+        }
+
+    return jax.jit(run, static_argnames=("warmup_frac",))
+
+
+def simulate(cfg: FamConfig, flags: SimFlags, workload_names, T: int = 60_000,
+             seed: int = 0) -> Dict[str, np.ndarray]:
+    """Convenience wrapper: generate traces for the node list and run."""
+    from repro.core.traces import generate
+    N = len(workload_names)
+    addrs = np.stack([generate(w, T, seed + i)[0]
+                      for i, w in enumerate(workload_names)])
+    gaps = np.stack([generate(w, T, seed + i)[1]
+                     for i, w in enumerate(workload_names)])
+    run = build_sim(cfg, flags, N)
+    out = run(jnp.asarray(addrs), jnp.asarray(gaps))
+    return {k: np.asarray(v) for k, v in out.items()}

@@ -1,0 +1,101 @@
+"""Prefetch bandwidth adaptation at the compute node — paper §IV-B.
+
+Sampling-based MIMD congestion control on the prefetch issue rate:
+
+* event counters (Table I) keep an instantaneous value, reset each sampling
+  cycle, plus an exponential moving average;
+* minimum achievable demand latency is approximated by the lowest average
+  demand latency seen in recent history;
+* if observed demand latency > 125% of that minimum (noise threshold), the
+  issue rate is multiplicatively DECREASED — the factor grows linearly with
+  the latency excess (RED-at-the-source) and shrinks with prefetch accuracy
+  (accurate prefetchers are throttled more gently);
+* otherwise the rate is multiplicatively increased by 1.125.
+
+Issue-rate enforcement uses a deterministic token bucket (tokens += rate per
+demand event; a prefetch issues while tokens >= 1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FamConfig
+
+
+class ThrottleState(NamedTuple):
+    issue_rate: jax.Array        # () float32 in [min_rate, 1]
+    tokens: jax.Array            # () float32 token bucket
+    min_latency: jax.Array       # () float32 min avg demand latency seen
+    lat_sum: jax.Array           # () float32 demand latency accumulator
+    lat_cnt: jax.Array           # () float32
+    lat_ema: jax.Array           # () float32 EMA of avg demand latency
+    pf_issued: jax.Array         # () float32 prefetches issued (window)
+    pf_useful: jax.Array         # () float32 prefetch hits (window)
+    acc_ema: jax.Array           # () float32 accuracy EMA
+    events: jax.Array            # () int32 events since last sample
+
+
+def init_throttle(cfg: FamConfig) -> ThrottleState:
+    f = lambda v: jnp.asarray(v, jnp.float32)
+    # minimum achievable demand latency: seeded with the unloaded fabric +
+    # DDR latency (the node knows its fabric floor; the EMA-min refines it)
+    unloaded = (cfg.fam_mem_latency + cfg.cxl_min_latency_cycles
+                + cfg.fam_service_cycles(cfg.demand_bytes))
+    return ThrottleState(
+        issue_rate=f(1.0), tokens=f(0.0), min_latency=f(unloaded),
+        lat_sum=f(0.0), lat_cnt=f(0.0), lat_ema=f(0.0),
+        pf_issued=f(0.0), pf_useful=f(0.0), acc_ema=f(0.5),
+        events=jnp.zeros((), jnp.int32))
+
+
+def observe(s: ThrottleState, demand_latency, is_fam_demand, was_pf_hit,
+            pf_issued_now) -> ThrottleState:
+    """Record one event: FAM demand latency (masked) + issue counts."""
+    m = is_fam_demand.astype(jnp.float32)
+    return s._replace(
+        lat_sum=s.lat_sum + demand_latency * m,
+        lat_cnt=s.lat_cnt + m,
+        pf_useful=s.pf_useful + was_pf_hit.astype(jnp.float32),
+        pf_issued=s.pf_issued + pf_issued_now.astype(jnp.float32),
+        events=s.events + 1)
+
+
+def maybe_adapt(cfg: FamConfig, s: ThrottleState) -> ThrottleState:
+    """Run the Fig. 9 adaptation once per sampling cycle."""
+    due = s.events >= cfg.sample_interval
+    avg_lat = s.lat_sum / jnp.maximum(s.lat_cnt, 1.0)
+    lat_ema = jnp.where(s.lat_ema == 0.0, avg_lat,
+                        (1 - cfg.ema_alpha) * s.lat_ema + cfg.ema_alpha * avg_lat)
+    min_lat = jnp.minimum(s.min_latency, lat_ema)
+    acc = s.pf_useful / jnp.maximum(s.pf_issued, 1.0)
+    acc_ema = (1 - cfg.ema_alpha) * s.acc_ema + cfg.ema_alpha * acc
+
+    thresh = cfg.latency_noise_threshold * min_lat
+    congested = lat_ema > thresh
+    # RED-like: decrease factor linear in latency excess, softened by accuracy
+    excess = jnp.clip((lat_ema - thresh) / jnp.maximum(thresh, 1.0), 0.0, 1.0)
+    dec = 1.0 - (0.5 * excess) * (1.0 - 0.5 * acc_ema)
+    inc = cfg.mimd_increase
+    new_rate = jnp.clip(jnp.where(congested, s.issue_rate * dec,
+                                  s.issue_rate * inc),
+                        cfg.min_issue_rate, 1.0)
+
+    adapted = ThrottleState(
+        issue_rate=new_rate, tokens=s.tokens, min_latency=min_lat,
+        lat_sum=jnp.float32(0.0), lat_cnt=jnp.float32(0.0), lat_ema=lat_ema,
+        pf_issued=jnp.float32(0.0), pf_useful=jnp.float32(0.0),
+        acc_ema=acc_ema, events=jnp.zeros((), jnp.int32))
+    return jax.tree.map(lambda a, b: jnp.where(due, a, b), adapted, s)
+
+
+def take_tokens(s: ThrottleState, want: jax.Array, enabled: bool
+                ) -> Tuple[ThrottleState, jax.Array]:
+    """Token bucket: grant min(want, floor(tokens + rate)) prefetch issues."""
+    if not enabled:
+        return s, want.astype(jnp.int32)
+    tokens = jnp.minimum(s.tokens + s.issue_rate * jnp.maximum(want, 1), 8.0)
+    grant = jnp.minimum(want.astype(jnp.int32), jnp.floor(tokens).astype(jnp.int32))
+    return s._replace(tokens=tokens - grant), grant

@@ -1,0 +1,101 @@
+"""Weighted Fair Queueing at the FAM controller — paper §IV-A, Algorithm 1.
+
+Work-conserving Deficit Weighted Round-Robin (DWRR) over two input queues
+(demand, prefetch). Weight W => demands:prefetches served W:1 under
+saturation; the prefetch deficit must reach r = prefetch_block/demand_block
+before a (larger) prefetch may issue, charging block-size-proportional cost.
+
+The pseudo-code below follows the paper's Algorithm 1 line-by-line (the
+round counter advances through a W+1 window; exactly one round of the
+window prefers prefetches; the scheduler is work-conserving: if the
+preferred queue is empty or out of deficit, the other class issues).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class WfqState(NamedTuple):
+    current_round: jax.Array      # () int32 in [0, W]
+    demand_deficit: jax.Array     # () int32
+    prefetch_deficit: jax.Array   # () int32
+
+
+def init_wfq() -> WfqState:
+    z = jnp.zeros((), jnp.int32)
+    return WfqState(z, z, z)
+
+
+# issue decision codes
+IDLE, DEMAND, PREFETCH = 0, 1, 2
+
+
+def issue(state: WfqState, demand_ready, prefetch_ready, *, weight: int,
+          quantum: int = 1, max_deficit: int = 8, r: int = 4
+          ) -> Tuple[WfqState, jax.Array]:
+    """One IssueRequests() cycle of Algorithm 1.
+
+    demand_ready / prefetch_ready: queue non-empty flags.
+    Returns (state, choice) with choice in {IDLE, DEMAND, PREFETCH}.
+    """
+    W = weight
+    current_round = (state.current_round + 1) % (W + 1)
+    dd, pd = state.demand_deficit, state.prefetch_deficit
+    demand_turn = current_round != 0
+
+    # demand-preferred rounds -------------------------------------------------
+    dd_d = jnp.minimum(dd + quantum, max_deficit)           # replenish
+    d_can = demand_ready & (dd_d > 0)
+    p_can_wc = prefetch_ready & (pd > r)                    # work-conserving alt
+    choice_d = jnp.where(d_can, DEMAND, jnp.where(p_can_wc, PREFETCH, IDLE))
+    dd_after_d = jnp.where(choice_d == DEMAND, dd_d - 1, dd_d)
+    pd_after_d = jnp.where(choice_d == PREFETCH, pd - r, pd)
+
+    # prefetch-preferred round ------------------------------------------------
+    pd_p = jnp.minimum(pd + quantum * r, max_deficit * r)   # replenish
+    p_can = prefetch_ready & (pd_p > r)
+    d_can_wc = demand_ready & (dd > 0)
+    choice_p = jnp.where(p_can, PREFETCH, jnp.where(d_can_wc, DEMAND, IDLE))
+    pd_after_p = jnp.where(choice_p == PREFETCH, pd_p - r, pd_p)
+    dd_after_p = jnp.where(choice_p == DEMAND, dd - 1, dd)
+
+    choice = jnp.where(demand_turn, choice_d, choice_p)
+    # work-conserving floor: never idle while a queue is non-empty (the
+    # deficits shape ORDER under contention, not admission)
+    fallback = jnp.where(demand_ready, DEMAND,
+                         jnp.where(prefetch_ready, PREFETCH, IDLE))
+    floored = (choice == IDLE) & (fallback != IDLE)
+    choice = jnp.where(choice == IDLE, fallback, choice)
+    dd_new = jnp.where(demand_turn, dd_after_d, dd_after_p)
+    pd_new = jnp.where(demand_turn, pd_after_d, pd_after_p)
+    dd_new = jnp.where(floored & (choice == DEMAND), dd_new - 1, dd_new)
+    pd_new = jnp.where(floored & (choice == PREFETCH), pd_new - r, pd_new)
+    new = WfqState(current_round=current_round, demand_deficit=dd_new,
+                   prefetch_deficit=pd_new)
+    return new, choice
+
+
+def schedule_batch(state: WfqState, n_demand, n_prefetch, *, weight: int,
+                   quantum: int = 1, max_deficit: int = 8, r: int = 4,
+                   max_issues: int = 64):
+    """Drain up to max_issues requests from the two queues via DWRR.
+
+    Returns (state, order) where order is an int32 (max_issues,) array of
+    choices (IDLE/DEMAND/PREFETCH), consuming the given backlogs. Used by
+    the FAM controller model to sequence a step's arrivals.
+    """
+    def body(carry, _):
+        st, nd, npf = carry
+        st, choice = issue(st, nd > 0, npf > 0, weight=weight,
+                           quantum=quantum, max_deficit=max_deficit, r=r)
+        nd = nd - (choice == DEMAND)
+        npf = npf - (choice == PREFETCH)
+        return (st, nd, npf), choice
+
+    (state, _, _), order = jax.lax.scan(
+        body, (state, n_demand.astype(jnp.int32), n_prefetch.astype(jnp.int32)),
+        None, length=max_issues)
+    return state, order

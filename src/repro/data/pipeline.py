@@ -1,0 +1,78 @@
+"""Deterministic synthetic LM data pipeline.
+
+Design goals (matching the fault-tolerance story):
+* batches are a pure function of (seed, step) -> restart-exact after
+  checkpoint restore, no data-state checkpointing needed;
+* shard-aware: every data-parallel rank derives its slice from the global
+  batch index, so elastic re-scaling keeps the global stream identical;
+* a small host-side prefetch thread hides generation latency (the host-side
+  analogue of the paper's prefetch-ahead).
+
+The token stream is a mixture of Zipf-distributed unigrams with Markov
+bigram structure so the loss actually decreases during the e2e example.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.3
+    bigram_jump: int = 7     # deterministic bigram successor offset
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def _batch_np(self, step: int) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        rng = np.random.default_rng((c.seed, step))
+        B, S, V = c.global_batch, c.seq_len, c.vocab_size
+        # zipf unigram draws, folded into vocab
+        base = rng.zipf(c.zipf_a, size=(B, S)) % V
+        # half the positions follow a deterministic bigram rule -> learnable
+        follow = rng.random((B, S)) < 0.5
+        shifted = (np.roll(base, 1, axis=1) * c.bigram_jump + 1) % V
+        tokens = np.where(follow, shifted, base).astype(np.int32)
+        labels = np.roll(tokens, -1, axis=1)
+        labels[:, -1] = 0
+        return {"tokens": tokens, "labels": labels}
+
+    def batch(self, step: int) -> Dict[str, jnp.ndarray]:
+        return {k: jnp.asarray(v) for k, v in self._batch_np(step).items()}
+
+    def iterator(self, start_step: int = 0, prefetch: int = 2
+                 ) -> Iterator[Dict[str, jnp.ndarray]]:
+        """Host prefetch thread: generation overlaps device compute."""
+        q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        stop = threading.Event()
+
+        def worker():
+            step = start_step
+            while not stop.is_set():
+                try:
+                    q.put(self._batch_np(step), timeout=0.5)
+                    step += 1
+                except queue.Full:
+                    continue
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield {k: jnp.asarray(v) for k, v in q.get().items()}
+        finally:
+            stop.set()

@@ -1,0 +1,39 @@
+"""Pallas TPU kernel: gather sub-page blocks from a block pool.
+
+This is the DRAM-cache *data path* engine (paper §III-C): demand/prefetch
+fills copy whole blocks between the FAM pool and the HBM cache region, and
+tier reads gather resident blocks by slot. The block index arrives via
+scalar prefetch so the BlockSpec index_map can stream exactly one pool block
+per grid cell HBM->VMEM — no full-pool materialization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, pool_blk, out_blk):
+    out_blk[...] = pool_blk[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_gather(pool: jax.Array, idx: jax.Array, *,
+                 interpret: bool = False) -> jax.Array:
+    """pool: (num_blocks, E); idx: (K,) int32 -> (K, E)."""
+    K = idx.shape[0]
+    E = pool.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K,),
+        in_specs=[pl.BlockSpec((1, E), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, E), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, E), pool.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), pool)

@@ -1,0 +1,18 @@
+"""Jit'd wrapper: TPU kernel on TPU, interpret-mode (validated) elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.block_gather.kernel import block_gather
+from repro.kernels.block_gather.ref import block_gather_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gather_blocks(pool: jax.Array, idx: jax.Array) -> jax.Array:
+    return block_gather(pool, idx, interpret=not _on_tpu())
+
+
+__all__ = ["gather_blocks", "block_gather", "block_gather_ref"]

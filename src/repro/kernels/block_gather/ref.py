@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for block_gather."""
+import jax.numpy as jnp
+
+
+def block_gather_ref(pool: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """pool: (num_blocks, block_elems); idx: (K,) int32 -> (K, block_elems)."""
+    return pool[idx]

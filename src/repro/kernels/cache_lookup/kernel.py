@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: batched set-associative tag-compare (metadata path).
+
+One grid cell per query: the BlockSpec index_map hashes the (scalar-
+prefetched) query to its SET, so only that set's (1, ways) tag row is staged
+into VMEM; the kernel body does the tag compare and emits (hit, way, slot).
+This mirrors the paper's Fig. 6 metadata retrieval: hash -> slot row -> tag
+compare, O(ways) work per probe regardless of cache size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.cache_lookup.ref import HASH_MULT
+
+
+def _set_index(q, num_sets):
+    h = (q.astype(jnp.uint32) * jnp.uint32(HASH_MULT)) >> jnp.uint32(7)
+    return (h % jnp.uint32(num_sets)).astype(jnp.int32)
+
+
+def _kernel(q_ref, row_ref, hit_ref, way_ref, slot_ref, *, ways, num_sets):
+    i = pl.program_id(0)
+    q = q_ref[i]
+    row = row_ref[0, :]                       # (ways,)
+    match = row == (q + 1)
+    hit = jnp.any(match)
+    way = jnp.argmax(match).astype(jnp.int32)
+    si = _set_index(q, num_sets)
+    hit_ref[0] = hit
+    way_ref[0] = way
+    slot_ref[0] = jnp.where(hit, si * ways + way, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cache_lookup(tags: jax.Array, queries: jax.Array, *,
+                 interpret: bool = False):
+    """tags: (sets, ways) int32; queries: (K,) int32.
+
+    Returns (hit (K,) bool, way (K,) int32, slot (K,) int32).
+    """
+    sets, ways = tags.shape
+    K = queries.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K,),
+        in_specs=[pl.BlockSpec(
+            (1, ways), lambda i, q_ref: (_set_index(q_ref[i], sets), 0))],
+        out_specs=[pl.BlockSpec((1,), lambda i, q_ref: (i,)),
+                   pl.BlockSpec((1,), lambda i, q_ref: (i,)),
+                   pl.BlockSpec((1,), lambda i, q_ref: (i,))],
+    )
+    kern = functools.partial(_kernel, ways=ways, num_sets=sets)
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((K,), jnp.bool_),
+                   jax.ShapeDtypeStruct((K,), jnp.int32),
+                   jax.ShapeDtypeStruct((K,), jnp.int32)],
+        interpret=interpret,
+    )(queries.astype(jnp.int32), tags)

@@ -1,0 +1,14 @@
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.cache_lookup.kernel import cache_lookup
+from repro.kernels.cache_lookup.ref import cache_lookup_ref
+
+
+def lookup(tags: jax.Array, queries: jax.Array):
+    return cache_lookup(tags, queries,
+                        interpret=jax.default_backend() != "tpu")
+
+
+__all__ = ["lookup", "cache_lookup", "cache_lookup_ref"]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the set-associative cache lookup."""
+import jax.numpy as jnp
+
+HASH_MULT = 0x9E3779B1
+
+
+def set_index_ref(block_addr, num_sets: int):
+    h = (block_addr.astype(jnp.uint32) * jnp.uint32(HASH_MULT)) >> 7
+    return (h % jnp.uint32(num_sets)).astype(jnp.int32)
+
+
+def cache_lookup_ref(tags, queries):
+    """tags: (sets, ways) int32 (+1 encoded; 0 invalid); queries: (K,).
+
+    Returns (hit (K,), way (K,), slot (K,)) with slot = set*ways + way.
+    """
+    sets, ways = tags.shape
+    si = set_index_ref(queries, sets)
+    rows = tags[si]                                   # (K, ways)
+    match = rows == (queries.astype(jnp.int32) + 1)[:, None]
+    hit = jnp.any(match, axis=1)
+    way = jnp.argmax(match, axis=1).astype(jnp.int32)
+    slot = si * ways + way
+    return hit, way, jnp.where(hit, slot, -1)

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: tiled causal attention (training/prefill hot spot).
+
+Classic flash layout adapted to the MXU: grid (B*Hkv, nQ, nK) with the K
+axis iterating sequentially; per-(b,h,i) running (max, sum, acc) live in
+VMEM scratch. Block shapes default to (128, 128) tiles so the q@k^T and
+p@v contractions land on MXU-aligned shapes; causal skipping is done with
+``pl.when`` on whole tiles above the diagonal (no wasted MXU issue — this
+is the kernel counterpart of collapsing the jnp path's 2x rectangle waste,
+see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq, bk, n_k, causal, scale):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (not causal) or (j * bk <= i * bq + bq - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, G*D fused) ->
+        k = k_ref[0].astype(jnp.float32)                 # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos > qpos, NEG_INF, s)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D) -> (B, Sq, Hq, D).
+
+    GQA is handled by flattening each kv-head's query group into the q-tile
+    rows (rows = bq queries of one (b, q-head)); grid is (B*Hq, nQ, nK) and
+    K/V tiles are indexed by the owning kv head.
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    nq, nk = Sq // bq, Sk // bk
+
+    # layout: (B*Hq, Sq, D) for q/out; (B*Hkv, Sk, D) for k/v
+    qr = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+
+    grid = (B * Hq, nq, nk)
+    kern = functools.partial(_kernel, bq=bq, bk=bk, n_k=nk, causal=causal,
+                             scale=1.0 / np.sqrt(D))
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, i, j: (bh // G, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, i, j: (bh // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, i, j: (bh, i, 0)),
+        scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq,), jnp.float32),
+                        pltpu.VMEM((bq, D), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,14 @@
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def attention(q, k, v, *, causal: bool = True, bq: int = 128, bk: int = 128):
+    return flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                           interpret=jax.default_backend() != "tpu")
+
+
+__all__ = ["attention", "flash_attention", "flash_attention_ref"]

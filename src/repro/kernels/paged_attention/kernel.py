@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: decode attention over a block-pooled (paged) KV cache.
+
+This is the *cache read path* of the tiered KV design (DESIGN.md §2c): KV
+lives in fixed-size blocks inside the HBM fast-tier pool managed by
+``TieredBlockPool``; the block table maps each sequence's logical blocks to
+pool slots. The kernel walks a sequence's blocks with online softmax:
+
+    grid = (B, Hkv, num_blocks)  — the last axis iterates sequentially, so
+    running (max, sum, acc) live in VMEM scratch across block steps.
+
+The block table and per-sequence lengths arrive via scalar prefetch so each
+grid cell stages exactly one (block_size, D) K/V tile HBM->VMEM, indexed
+through the table — the TPU analogue of the paper's sub-page block reads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, block_size, num_blocks):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (G, D) this kv head's qs
+    k = k_ref[0, :, 0, :].astype(jnp.float32)       # (T, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)       # (T, D)
+    G, D = q.shape
+    T = k.shape[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s / np.sqrt(D)                              # (G, T)
+    pos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, (1, T), 1)
+    valid = pos < len_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                             # (G,)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid, p, 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == num_blocks - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-20)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_table: jax.Array, lengths: jax.Array, *,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, D); k/v_pool: (P, T, Hkv, D); block_table: (B, NB);
+    lengths: (B,) -> (B, Hq, D)."""
+    B, Hq, D = q.shape
+    P, T, Hkv, _ = k_pool.shape
+    NB = block_table.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, NB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, j, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, T, 1, D),
+                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, T, 1, D),
+                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G,), jnp.float32),
+                        pltpu.VMEM((G,), jnp.float32),
+                        pltpu.VMEM((G, D), jnp.float32)],
+    )
+    kern = functools.partial(_kernel, block_size=T, num_blocks=NB)
+    out = pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32), qg,
+      k_pool, v_pool)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,14 @@
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def decode_attention(q, k_pool, v_pool, block_table, lengths):
+    return paged_attention(q, k_pool, v_pool, block_table, lengths,
+                           interpret=jax.default_backend() != "tpu")
+
+
+__all__ = ["decode_attention", "paged_attention", "paged_attention_ref"]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for paged decode attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, lengths):
+    """Decode attention over block-pooled KV.
+
+    q:           (B, Hq, D)          one query token per sequence
+    k/v_pool:    (P, T, Hkv, D)      P pool blocks of T tokens
+    block_table: (B, NB) int32       logical block -> pool slot
+    lengths:     (B,) int32          valid tokens per sequence
+    -> (B, Hq, D)
+    """
+    B, Hq, D = q.shape
+    P, T, Hkv, _ = k_pool.shape
+    NB = block_table.shape[1]
+    G = Hq // Hkv
+    k = k_pool[block_table]          # (B, NB, T, Hkv, D)
+    v = v_pool[block_table]
+    k = k.reshape(B, NB * T, Hkv, D)
+    v = v.reshape(B, NB * T, Hkv, D)
+    qg = q.reshape(B, Hkv, G, D)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(D)
+    pos = jnp.arange(NB * T)
+    mask = pos[None, :] < lengths[:, None]           # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,35 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Beyond-assignment extension cells.
+
+The assignment skips long_500k for pure-full-attention archs (prefill/train
+are quadratic), but *decode* against a 500k-token KV cache is linear per
+token — with the seq-sharded cache it compiles and sizes fine. This script
+lowers yi-9b long_500k decode as an extension cell (recorded under
+results/dryrun/extensions/, NOT in the assigned grid).
+"""
+import dataclasses
+import json
+from pathlib import Path
+
+
+def main():
+    from repro.launch import dryrun as DR
+
+    old = DR.get_config
+
+    def patched(arch):
+        cfg = old(arch)
+        if arch == "yi-9b":
+            cfg = dataclasses.replace(cfg, run_long_context=True)
+        return cfg
+
+    DR.get_config = patched
+    out = Path(DR.RESULTS_DIR).parent / "dryrun" / "extensions"
+    info = DR.run_cell("yi-9b", "long_500k", False, out)
+    return info
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not module state) so importing this
+module never touches jax device state. Single pod = 256 chips (16x16,
+data x model); multi-pod = 2 pods x 256 chips with a leading "pod" axis
+(data-parallel by default; pipeline-over-pod is available via
+``repro.parallel.pipeline``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)}. "
+            "The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count"
+            "=512 before importing jax (see launch/dryrun.py).")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes),
+                         devices=devices[:need])
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """A small mesh on whatever devices exist (tests/examples)."""
+    need = data * model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2,
+                         devices=jax.devices()[:need])

@@ -1,0 +1,61 @@
+"""Serving launcher: ``--arch <id>`` -> batched generation with the Engine.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b-smoke \
+        --batch 4 --prompt-len 16 --max-new 24 --temperature 0.8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_config
+    from repro.models import build_model
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = get_config(args.arch)
+    model = build_model(cfg, None)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    engine = Engine(model, params,
+                    ServeConfig(max_new_tokens=args.max_new,
+                                temperature=args.temperature,
+                                seed=args.seed))
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(args.seed + 1),
+        (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.position == "mrope":
+        import jax.numpy as jnp
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(args.prompt_len, dtype=jnp.int32),
+            (3, args.batch, args.prompt_len))
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(args.seed + 2),
+            (args.batch, cfg.encoder_seq, cfg.d_model))
+
+    t0 = time.perf_counter()
+    gen, stats = engine.generate(batch)
+    dt = time.perf_counter() - t0
+    tps = args.batch * args.max_new / dt
+    print(f"arch={cfg.name} generated {gen.shape[0]}x{gen.shape[1]} tokens "
+          f"in {dt:.2f}s ({tps:.1f} tok/s on this backend)")
+    for row in gen[: min(3, len(gen))]:
+        print("  ", row.tolist())
+
+
+if __name__ == "__main__":
+    main()

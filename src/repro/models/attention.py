@@ -1,0 +1,291 @@
+"""Attention: GQA/MQA/MHA with chunked (memory-efficient) training/prefill
+attention, contiguous-KV decode, sliding windows, and cross-attention.
+
+Layouts
+-------
+activations     x : (B, S, d_model)
+q after proj      : (B, S, Hq, D)
+k/v after proj    : (B, S, Hkv, D)
+KV cache (layer)  : k,v : (B, S_max, Hkv, D), plus scalar write index.
+
+The jnp implementations here are the *reference/dry-run* path; the Pallas
+kernels in ``repro.kernels.flash_attention`` / ``paged_attention`` are the TPU
+production path and are validated against these functions.
+
+Note: the chunked path computes full-rectangle scores per query chunk (the
+causal mask discards the upper triangle), i.e. ~2x the minimal causal FLOPs.
+This is deliberate as the *baseline* — collapsing it to triangular block
+enumeration is one of the §Perf hillclimb levers (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, apply_rope, dense_init
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def init_attention(key, cfg: ModelConfig, kv_input_dim: Optional[int] = None) -> Params:
+    pdt = jnp.dtype(cfg.param_dtype)
+    kv_in = kv_input_dim or cfg.d_model
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, cfg.d_model, cfg.q_dim, pdt),
+        "wk": dense_init(kk, kv_in, cfg.kv_dim, pdt),
+        "wv": dense_init(kv, kv_in, cfg.kv_dim, pdt),
+        "wo": dense_init(ko, cfg.q_dim, cfg.d_model, pdt,
+                         scale=1.0 / np.sqrt(cfg.q_dim * 2 * cfg.num_layers)),
+    }
+
+
+def qkv_proj(cfg: ModelConfig, p: Params, x: jax.Array,
+             kv_x: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    dt = x.dtype
+    kv_x = x if kv_x is None else kv_x
+    B, S = x.shape[:2]
+    Skv = kv_x.shape[1]
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = (kv_x @ p["wk"].astype(dt)).reshape(B, Skv, cfg.num_kv_heads, cfg.head_dim)
+    v = (kv_x @ p["wv"].astype(dt)).reshape(B, Skv, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def out_proj(cfg: ModelConfig, p: Params, attn_out: jax.Array) -> jax.Array:
+    B, S = attn_out.shape[:2]
+    return attn_out.reshape(B, S, cfg.q_dim) @ p["wo"].astype(attn_out.dtype)
+
+
+def _group_q(cfg: ModelConfig, q: jax.Array) -> jax.Array:
+    """(B,S,Hq,D) -> (B,S,Hkv,G,D) grouping query heads onto kv heads."""
+    B, S, Hq, D = q.shape
+    G = Hq // cfg.num_kv_heads
+    return q.reshape(B, S, cfg.num_kv_heads, G, D)
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+               window: int, k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """(…,Sq,Sk) additive fp32 bias from positions."""
+    m = jnp.zeros(q_pos.shape[-1:] + k_pos.shape[-1:], jnp.float32)
+    if causal:
+        m = jnp.where(k_pos[None, :] > q_pos[:, None], NEG_INF, m)
+    if window > 0:
+        m = jnp.where(k_pos[None, :] <= q_pos[:, None] - window, NEG_INF, m)
+    if k_valid is not None:
+        m = jnp.where(k_valid[None, :], m, NEG_INF)
+    return m
+
+
+def _sdpa(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
+          bias: jax.Array) -> jax.Array:
+    """Grouped attention. q:(B,Sq,Hkv,G,D) k/v:(B,Sk,Hkv,D) bias:(Sq,Sk)."""
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = scores + bias
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out
+
+
+def attend_full(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array, *,
+                causal: bool, window: int = 0,
+                q_offset: int | jax.Array = 0) -> jax.Array:
+    """Direct attention for short sequences. Returns (B,S,Hq,D)."""
+    B, Sq, Hq, D = q.shape
+    Sk = k.shape[1]
+    qg = _group_q(cfg, q)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    bias = _mask_bias(q_pos, k_pos, causal, window)
+    out = _sdpa(cfg, qg, k, v, bias)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def attend_chunked(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool, window: int = 0, chunk: int = 512,
+                   q_offset: int = 0) -> jax.Array:
+    """Memory-efficient attention: scan over query chunks; full-KV einsum per
+    chunk with fp32 softmax. Peak memory O(B*H*chunk*Sk)."""
+    B, Sq, Hq, D = q.shape
+    if Sq <= chunk:
+        return attend_full(cfg, q, k, v, causal=causal, window=window,
+                           q_offset=q_offset)
+    if Sq % chunk:  # pad queries to a chunk multiple (rows are independent)
+        pad = chunk - Sq % chunk
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = attend_chunked(cfg, qp, k, v, causal=causal, window=window,
+                             chunk=chunk, q_offset=q_offset)
+        return out[:, :Sq]
+    n = Sq // chunk
+    qg = _group_q(cfg, q).reshape(B, n, chunk, cfg.num_kv_heads, Hq // cfg.num_kv_heads, D)
+    qg = jnp.moveaxis(qg, 1, 0)                    # (n, B, chunk, Hkv, G, D)
+    k_pos = jnp.arange(k.shape[1])
+
+    def body(_, qi_i):
+        qi, i = qi_i
+        q_pos = q_offset + i * chunk + jnp.arange(chunk)
+        bias = _mask_bias(q_pos, k_pos, causal, window)
+        return None, _sdpa(cfg, qi, k, v, bias)
+
+    _, out = jax.lax.scan(body, None, (qg, jnp.arange(n)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, Hq, D)
+    return out
+
+
+def attend_grouped(cfg: ModelConfig, q, k, v, *, window: int = 0,
+                   chunk: int = 512, groups: int = 8) -> jax.Array:
+    """§Perf: triangular group schedule for causal attention.
+
+    The rect/chunked path computes full-rectangle scores per query chunk
+    (~2x the causal minimum). Splitting the sequence into G groups where
+    group g's queries only see kv[: end_g] (static slice per group) cuts
+    the factor to (G+1)/2G — 0.56x at G=8 — while keeping everything
+    static-shaped for SPMD. Exactness vs the rect path is tested.
+    """
+    B, Sq, Hq, D = q.shape
+    if Sq % (groups * chunk):
+        return attend_chunked(cfg, q, k, v, causal=True, window=window,
+                              chunk=chunk)
+    gsize = Sq // groups
+    outs = []
+    for g in range(groups):
+        q_g = jax.lax.slice_in_dim(q, g * gsize, (g + 1) * gsize, axis=1)
+        kv_end = (g + 1) * gsize
+        outs.append(attend_chunked(
+            cfg, q_g, jax.lax.slice_in_dim(k, 0, kv_end, axis=1),
+            jax.lax.slice_in_dim(v, 0, kv_end, axis=1),
+            causal=True, window=window, chunk=chunk, q_offset=g * gsize))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attend(cfg: ModelConfig, q, k, v, *, causal=True, window: int = 0,
+           chunk: int = 512, schedule: str = "rect",
+           groups: int = 8) -> jax.Array:
+    if causal and schedule == "grouped" and q.shape[1] > chunk:
+        return attend_grouped(cfg, q, k, v, window=window, chunk=chunk,
+                              groups=groups)
+    if q.shape[1] > chunk:
+        return attend_chunked(cfg, q, k, v, causal=causal, window=window, chunk=chunk)
+    return attend_full(cfg, q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# Decode with a contiguous KV cache
+# ---------------------------------------------------------------------------
+
+def decode_attend(cfg: ModelConfig, q: jax.Array, k_cache: jax.Array,
+                  v_cache: jax.Array, index: jax.Array, *,
+                  window: int = 0) -> jax.Array:
+    """One-token attention against the cache.
+
+    q: (B, 1, Hq, D); k/v_cache: (B, S_max, Hkv, D); index: () int32 — number
+    of valid cache entries *including* the current token (already written).
+    """
+    B, _, Hq, D = q.shape
+    S = k_cache.shape[1]
+    qg = _group_q(cfg, q)
+    k_pos = jnp.arange(S)
+    k_valid = k_pos < index
+    q_pos = jnp.asarray(index - 1)[None]
+    bias = _mask_bias(q_pos, k_pos, True, window, k_valid)
+    out = _sdpa(cfg, qg, k_cache, v_cache, bias)
+    return out.reshape(B, 1, Hq, D)
+
+
+def cache_update(k_cache: jax.Array, v_cache: jax.Array, k_new: jax.Array,
+                 v_new: jax.Array, index: jax.Array):
+    """Write (B, S_new, Hkv, D) at position ``index`` of the cache."""
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new.astype(k_cache.dtype), (0, index, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new.astype(v_cache.dtype), (0, index, 0, 0))
+    return k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (pre-norm residual), shared by dense archs
+# ---------------------------------------------------------------------------
+
+def self_attention(cfg: ModelConfig, p: Params, x: jax.Array,
+                   positions: jax.Array, *, causal: bool = True,
+                   window: int = 0, chunk: int = 512,
+                   schedule: str = "rect") -> jax.Array:
+    q, k, v = qkv_proj(cfg, p, x)
+    if cfg.position in ("rope", "mrope"):
+        q = apply_rope(cfg, q, positions)
+        k = apply_rope(cfg, k, positions)
+    out = attend(cfg, q, k, v, causal=causal, window=window, chunk=chunk,
+                 schedule=schedule)
+    return out_proj(cfg, p, out)
+
+
+def cross_attention(cfg: ModelConfig, p: Params, x: jax.Array,
+                    enc_kv: Tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    dt = x.dtype
+    B, S = x.shape[:2]
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k, v = enc_kv
+    out = attend_full(cfg, q, k, v, causal=False)
+    return out_proj(cfg, p, out)
+
+
+# ---------------------------------------------------------------------------
+# Two-source decode attention (read-only cache + recent-token write buffer)
+#
+# §Perf (EXPERIMENTS.md, qwen2 decode cell): writing each new token into the
+# kv_seq-sharded cache lowers (under SPMD) to whole-shard select machinery.
+# The buffered variant keeps the big cache READ-ONLY during decode, writes
+# the token into a small (B, W, Hkv, D) buffer, and merges the two partial
+# softmaxes; a separate flush step folds the buffer into the cache every W
+# tokens, amortizing the expensive sharded write by 1/W.
+# ---------------------------------------------------------------------------
+
+def _partial_sdpa(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array,
+                  bias: jax.Array):
+    """Online-softmax partial: returns (m, l, acc) over this KV source.
+
+    q: (B,1,Hkv,G,D) grouped; k/v: (B,S,Hkv,D); bias: (1,S) fp32.
+    """
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = s.astype(jnp.float32) + bias
+    m = jnp.max(s, axis=-1)                                   # (B,H,G,1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q.dtype), v)
+    return m, l, acc.astype(jnp.float32)
+
+
+def merge_partials(parts):
+    """Merge [(m,l,acc), ...] online-softmax partials."""
+    m = parts[0][0]
+    for p in parts[1:]:
+        m = jnp.maximum(m, p[0])
+    l = sum(p[1] * jnp.exp(p[0] - m) for p in parts)
+    acc = sum(p[2] * jnp.exp(p[0] - m)[..., None] for p in parts)
+    return acc / jnp.maximum(l, 1e-20)[..., None]
+
+
+def decode_attend_buffered(cfg: ModelConfig, q: jax.Array,
+                           k_cache: jax.Array, v_cache: jax.Array,
+                           k_buf: jax.Array, v_buf: jax.Array,
+                           base_len: jax.Array, buf_len: jax.Array):
+    """q: (B,1,Hq,D); cache: (B,S,Hkv,D) read-only, valid < base_len;
+    buffer: (B,W,Hkv,D), valid < buf_len. Returns (B,1,Hq,D)."""
+    B, _, Hq, D = q.shape
+    qg = _group_q(cfg, q)
+    S, W = k_cache.shape[1], k_buf.shape[1]
+    bias_c = jnp.where(jnp.arange(S)[None, :] < base_len, 0.0, NEG_INF)
+    bias_b = jnp.where(jnp.arange(W)[None, :] < buf_len, 0.0, NEG_INF)
+    part_c = _partial_sdpa(cfg, qg, k_cache, v_cache, bias_c)
+    part_b = _partial_sdpa(cfg, qg, k_buf, v_buf, bias_b)
+    out = merge_partials([part_c, part_b])                    # (B,H,G,1,D)
+    return jnp.moveaxis(out, 3, 1).reshape(B, 1, Hq, D).astype(q.dtype)

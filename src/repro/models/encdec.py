@@ -1,0 +1,166 @@
+"""whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings ``frames: (B, encoder_seq, d_model)`` supplied
+by ``input_specs()``. Encoder = bidirectional self-attention stack; decoder =
+causal self-attention + cross-attention to the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.parallel.sharding import ParallelContext
+
+Params = Dict[str, Any]
+
+
+def init_encdec(key, cfg: ModelConfig) -> Params:
+    k_emb, k_enc, k_dec, k_pe = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.num_layers)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"norm1": L.init_norm(cfg), "attn": attn_lib.init_attention(k1, cfg),
+                "norm2": L.init_norm(cfg), "mlp": L.init_mlp(k2, cfg)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"norm1": L.init_norm(cfg), "attn": attn_lib.init_attention(k1, cfg),
+                "norm_x": L.init_norm(cfg), "xattn": attn_lib.init_attention(k2, cfg),
+                "norm2": L.init_norm(cfg), "mlp": L.init_mlp(k3, cfg)}
+
+    return {
+        "embed": L.init_embedding(k_emb, cfg),
+        "enc_pos": (0.02 * jax.random.normal(
+            k_pe, (cfg.encoder_seq, cfg.d_model))).astype(jnp.dtype(cfg.param_dtype)),
+        "encoder": jax.vmap(enc_layer)(enc_keys),
+        "enc_norm": L.init_norm(cfg),
+        "decoder": jax.vmap(dec_layer)(dec_keys),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def encode(cfg: ModelConfig, ctx: Optional[ParallelContext], params: Params,
+           frames: jax.Array) -> jax.Array:
+    """frames: (B, encoder_seq, d_model) precomputed embeddings (stub)."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"].astype(
+        jnp.dtype(cfg.dtype))
+    if ctx:
+        x = ctx.constrain(x, ("batch", "seq", "embed"))
+
+    def body(x, lp):
+        h = L.apply_norm(cfg, lp["norm1"], x)
+        q, k, v = attn_lib.qkv_proj(cfg, lp["attn"], h)
+        o = attn_lib.attend(cfg, q, k, v, causal=False)
+        x = x + attn_lib.out_proj(cfg, lp["attn"], o)
+        h = L.apply_norm(cfg, lp["norm2"], x)
+        x = x + L.apply_mlp(cfg, lp["mlp"], h)
+        return x, None
+
+    if ctx is None or ctx.remat == "layer":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def _dec_layer(cfg, ctx, lp, x, enc_out, positions, chunk):
+    h = L.apply_norm(cfg, lp["norm1"], x)
+    h = attn_lib.self_attention(cfg, lp["attn"], h, positions, chunk=chunk,
+                                schedule=ctx.attn_schedule if ctx else "rect")
+    x = x + h
+    h = L.apply_norm(cfg, lp["norm_x"], x)
+    _, ek, ev = attn_lib.qkv_proj(cfg, lp["xattn"], h, kv_x=enc_out)
+    h = attn_lib.cross_attention(cfg, lp["xattn"], h, (ek, ev))
+    x = x + h
+    h = L.apply_norm(cfg, lp["norm2"], x)
+    x = x + L.apply_mlp(cfg, lp["mlp"], h)
+    if ctx:
+        x = ctx.constrain(x, ("batch", "seq", "embed"))
+    return x
+
+
+def forward(cfg: ModelConfig, ctx: Optional[ParallelContext], params: Params,
+            tokens: jax.Array, frames: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced decoder forward -> (logits, aux=0)."""
+    B, S = tokens.shape
+    enc_out = encode(cfg, ctx, params, frames)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = L.embed_tokens(cfg, params["embed"], tokens, positions)
+    chunk = ctx.attn_chunk if ctx else 512
+
+    def body(x, lp):
+        return _dec_layer(cfg, ctx, lp, x, enc_out, positions, chunk), None
+
+    if ctx is None or ctx.remat == "layer":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def prefill(cfg: ModelConfig, ctx, params: Params, tokens: jax.Array,
+            frames: jax.Array):
+    """Returns (last logits (B,V), cache with self-KV and cross-KV)."""
+    B, S = tokens.shape
+    enc_out = encode(cfg, ctx, params, frames)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = L.embed_tokens(cfg, params["embed"], tokens, positions)
+    chunk = ctx.attn_chunk if ctx else 512
+    dt = jnp.dtype(cfg.dtype)
+
+    def body(x, lp):
+        h = L.apply_norm(cfg, lp["norm1"], x)
+        q, k, v = attn_lib.qkv_proj(cfg, lp["attn"], h)
+        o = attn_lib.attend(cfg, q, k, v, causal=True, chunk=chunk,
+                            schedule=ctx.attn_schedule if ctx else "rect")
+        x = x + attn_lib.out_proj(cfg, lp["attn"], o)
+        h = L.apply_norm(cfg, lp["norm_x"], x)
+        _, ek, ev = attn_lib.qkv_proj(cfg, lp["xattn"], h, kv_x=enc_out)
+        h = attn_lib.cross_attention(cfg, lp["xattn"], h, (ek, ev))
+        x = x + h
+        h = L.apply_norm(cfg, lp["norm2"], x)
+        x = x + L.apply_mlp(cfg, lp["mlp"], h)
+        return x, (k.astype(dt), v.astype(dt), ek.astype(dt), ev.astype(dt))
+
+    x, (ks, vs, eks, evs) = jax.lax.scan(body, x, params["decoder"])
+    x = L.apply_norm(cfg, params["final_norm"], x[:, -1:, :])
+    logits = L.unembed(cfg, params["embed"], x)[:, 0, :]
+    return logits, {"k": ks, "v": vs, "xk": eks, "xv": evs}
+
+
+def decode_step(cfg: ModelConfig, ctx, params: Params, cache,
+                tokens: jax.Array, index: jax.Array):
+    """cache: k/v (L,B,Smax,H,D) self; xk/xv (L,B,enc_seq,H,D) cross."""
+    B = tokens.shape[0]
+    positions = jnp.broadcast_to(index.astype(jnp.int32), (B, 1))
+    x = L.embed_tokens(cfg, params["embed"], tokens, positions)
+
+    def body(x, inp):
+        lp, kc, vc, xk, xv = inp
+        h = L.apply_norm(cfg, lp["norm1"], x)
+        q, k, v = attn_lib.qkv_proj(cfg, lp["attn"], h)
+        kc, vc = attn_lib.cache_update(kc, vc, k, v, index)
+        o = attn_lib.decode_attend(cfg, q, kc, vc, index + 1)
+        x = x + attn_lib.out_proj(cfg, lp["attn"], o)
+        h = L.apply_norm(cfg, lp["norm_x"], x)
+        h = attn_lib.cross_attention(cfg, lp["xattn"], h, (xk, xv))
+        x = x + h
+        h = L.apply_norm(cfg, lp["norm2"], x)
+        x = x + L.apply_mlp(cfg, lp["mlp"], h)
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["decoder"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)[:, 0, :]
+    return logits, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}

@@ -1,0 +1,161 @@
+"""Shared layer primitives: norms, embeddings, RoPE / M-RoPE, gated MLPs.
+
+Everything is functional: ``init_*`` builds a param dict, ``apply`` functions
+are pure. Params are stored in ``param_dtype`` (fp32 by default) and cast to
+the compute ``dtype`` (bf16) at use; norm statistics and softmax run in fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Params = dict
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else (1.0 / np.sqrt(in_dim))
+    return truncated_normal(key, (in_dim, out_dim), scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None) -> Params:
+    dim = dim or cfg.d_model
+    p = {"scale": jnp.ones((dim,), jnp.dtype(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((dim,), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mean) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    pdt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 3)
+    p = {"embedding": truncated_normal(keys[0], (cfg.vocab_size, cfg.d_model), 0.02, pdt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = truncated_normal(keys[1], (cfg.d_model, cfg.vocab_size),
+                                        1.0 / np.sqrt(cfg.d_model), pdt)
+    if cfg.position == "learned":
+        # sized for the largest assigned decoder shape (decode_32k)
+        max_pos = max(cfg.encoder_seq, 1 << 16)
+        p["pos_embedding"] = truncated_normal(keys[2], (max_pos, cfg.d_model), 0.02, pdt)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: Params, tokens: jax.Array,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+    dt = jnp.dtype(cfg.dtype)
+    x = p["embedding"].astype(dt)[tokens]
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    if cfg.position == "learned" and positions is not None:
+        x = x + p["pos_embedding"].astype(dt)[positions]
+    return x
+
+
+def unembed(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["embedding"].astype(dt))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["unembed"].astype(dt))
+    if cfg.logit_softcap > 0.0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# RoPE and M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Rotate ``x`` (..., S, H, D) by per-token positions.
+
+    ``positions``: (..., S) for standard RoPE, or (3, ..., S) for M-RoPE
+    where the three planes are (t, h, w) and ``cfg.mrope_sections`` gives the
+    number of frequency pairs taken from each plane (qwen2-vl).
+    """
+    half = cfg.head_dim // 2
+    inv = jnp.asarray(rope_frequencies(cfg.head_dim, cfg.rope_theta), jnp.float32)
+    if cfg.position == "mrope":
+        sec = cfg.mrope_sections
+        assert sum(sec) == half, (sec, half)
+        # select the position plane per frequency index
+        plane = jnp.asarray(
+            np.repeat(np.arange(3), np.asarray(sec)), jnp.int32)          # (half,)
+        pos = positions.astype(jnp.float32)                                # (3, ..., S)
+        # gather the (t|h|w) position plane per frequency index
+        angles = jnp.moveaxis(pos[..., None] * inv, 0, -2)                 # (..., S, 3, half)
+        angles = jnp.take_along_axis(
+            angles, jnp.broadcast_to(plane[..., None, :],
+                                     angles.shape[:-2] + (1, half)), axis=-2
+        )[..., 0, :]                                                       # (..., S, half)
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * inv            # (..., S, half)
+    sin = jnp.sin(angles)[..., None, :]   # (..., S, 1, half)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    pdt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": dense_init(k2, d_ff, cfg.d_model, pdt)}
+    if cfg.activation in ("swiglu", "geglu"):
+        p["gate"] = dense_init(k1, cfg.d_model, d_ff, pdt)
+        p["up"] = dense_init(k3, cfg.d_model, d_ff, pdt)
+    else:
+        p["up"] = dense_init(k1, cfg.d_model, d_ff, pdt)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    if cfg.activation in ("swiglu", "geglu"):
+        g = x @ p["gate"].astype(dt)
+        u = x @ p["up"].astype(dt)
+        act = jax.nn.silu(g) if cfg.activation == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jax.nn.gelu(x @ p["up"].astype(dt))
+    return h @ p["down"].astype(dt)

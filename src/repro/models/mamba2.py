@@ -1,0 +1,213 @@
+"""Mamba2 (SSD) mixer — chunked parallel training form + O(1) decode step.
+
+Implements the state-space duality algorithm of Mamba2: within-chunk
+quadratic attention-like term + cross-chunk linear recurrence, with a causal
+depthwise conv frontend, exactly the structure zamba2's backbone uses.
+
+Shapes (per layer):
+    x_in        : (B, S, d_model)
+    d_inner     : expand * d_model
+    heads H     : d_inner // head_dim(P)
+    B_, C_      : (B, S, G, N)  state projections (G groups, N = d_state)
+    ssm state   : (B, H, P, N)
+    conv state  : (B, d_conv-1, conv_dim)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    H = s.n_heads(cfg.d_model)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, H, conv_dim
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    s, d_in, H, conv_dim = _dims(cfg)
+    pdt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + H
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default)
+    dt = np.exp(np.random.default_rng(0).uniform(np.log(1e-3), np.log(1e-1), H))
+    dt_bias = dt + np.log(-np.expm1(-dt))
+    return {
+        "in_proj": dense_init(k1, cfg.d_model, proj_out, pdt),
+        "conv_w": (jax.random.normal(k2, (s.d_conv, conv_dim)) / np.sqrt(s.d_conv)
+                   ).astype(pdt),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)).astype(pdt),
+        "D": jnp.ones((H,), pdt),
+        "dt_bias": jnp.asarray(dt_bias, pdt),
+        "norm_scale": jnp.ones((d_in,), pdt),
+        "out_proj": dense_init(k4, d_in, cfg.d_model, pdt,
+                               scale=1.0 / np.sqrt(d_in * 2 * cfg.num_layers)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s, d_in, H, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc_dt = jnp.split(zxbcdt, [d_in], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_in + 2 * gn], axis=-1)
+    return z, xbc, dt  # gate, conv-channels, per-head dt
+
+
+def _split_xbc(cfg: ModelConfig, xbc: jax.Array):
+    s, d_in, H, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    x, B_, C_ = jnp.split(xbc, [d_in, d_in + gn], axis=-1)
+    B, S = x.shape[:2]
+    x = x.reshape(B, S, H, s.head_dim)
+    B_ = B_.reshape(B, S, s.n_groups, s.d_state)
+    C_ = C_.reshape(B, S, s.n_groups, s.d_state)
+    return x, B_, C_
+
+
+def _gated_norm(p: Params, y: jax.Array, z: jax.Array, eps=1e-6) -> jax.Array:
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    yf = y.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + eps) * p["norm_scale"].astype(jnp.float32)
+            ).astype(y.dtype)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) log-decays -> (..., Q, Q) lower-triangular cumulative sums."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]          # sum_{j<i<=k} a
+    mask = np.tril(np.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd(cfg: ModelConfig, x, dt, A, B_, C_, init_state=None):
+    """Chunked SSD core. x:(B,S,H,P) fp32-decayed; dt:(B,S,H) fp32 (post
+    softplus); A:(H,) negative; B_/C_:(B,S,G,N). Returns (y, final_state)."""
+    s = cfg.ssm
+    Bb, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Q = min(s.chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    rep = H // G
+
+    dtf = dt.astype(jnp.float32)
+    a = dtf * A                                            # (B,S,H) log decay <= 0
+    xb = (x.astype(jnp.float32) * dtf[..., None])          # dt-weighted input
+
+    def ch(t):  # (B,S,...) -> (B,nc,Q,...)
+        return t.reshape((Bb, nc, Q) + t.shape[2:])
+
+    a_c, xb_c = ch(a), ch(xb)
+    B_c, C_c = ch(B_.astype(jnp.float32)), ch(C_.astype(jnp.float32))
+    Bh = jnp.repeat(B_c, rep, axis=3)                      # (B,nc,Q,H,N)
+    Ch = jnp.repeat(C_c, rep, axis=3)
+
+    a_hc = jnp.moveaxis(a_c, -1, 2)                        # (B,nc,H,Q)
+    L = jnp.exp(_segsum(a_hc))                             # (B,nc,H,Q,Q)
+    L = jnp.where(jnp.isfinite(L), L, 0.0)
+
+    # intra-chunk (quadratic within chunk)
+    y_diag = jnp.einsum("bcqhn,bckhn,bchqk,bckhp->bcqhp", Ch, Bh, L, xb_c)
+
+    # per-chunk final states
+    cum = jnp.cumsum(a_hc, axis=-1)                        # (B,nc,H,Q)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)            # (B,nc,H,Q)
+    S_chunk = jnp.einsum("bckhn,bchk,bckhp->bchpn", Bh, decay_to_end, xb_c)
+
+    # cross-chunk recurrence
+    chunk_decay = jnp.exp(cum[..., -1])                    # (B,nc,H)
+    if init_state is None:
+        init_state = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def scan_body(h, inp):
+        dec, s_c = inp                                     # (B,H), (B,H,P,N)
+        h_prev = h
+        h = dec[..., None, None] * h + s_c
+        return h, h_prev
+
+    (final_state, h_prevs) = jax.lax.scan(
+        scan_body, init_state.astype(jnp.float32),
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_chunk, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # (B,nc,H,P,N)
+
+    # inter-chunk contribution
+    in_decay = jnp.exp(cum)                                # decay from chunk start
+    y_off = jnp.einsum("bcqhn,bchq,bchpn->bcqhp", Ch, in_decay, h_prevs)
+
+    y = (y_diag + y_off).reshape(Bb, S, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def _causal_conv(w: jax.Array, xbc: jax.Array,
+                 conv_state: jax.Array | None = None):
+    """Depthwise causal conv, width K. xbc:(B,S,C), w:(K,C).
+    Returns (out (B,S,C), new_conv_state (B,K-1,C))."""
+    K = w.shape[0]
+    B, S, C = xbc.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, C), xbc.dtype)
+    padded = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    out = sum(padded[:, i:i + S, :] * w[i].astype(xbc.dtype) for i in range(K))
+    new_state = padded[:, -(K - 1):, :]
+    return jax.nn.silu(out), new_state
+
+
+def apply_mamba2(cfg: ModelConfig, p: Params, x_in: jax.Array,
+                 state: dict | None = None, *, single_step: bool = False):
+    """Full mixer. x_in: (B,S,d_model). ``state`` = {"ssm","conv"} for decode.
+
+    Returns (y (B,S,d_model), new_state).
+    """
+    s, d_in, H, conv_dim = _dims(cfg)
+    dt_proj = x_in @ p["in_proj"].astype(x_in.dtype)
+    z, xbc, dt_raw = _split_proj(cfg, dt_proj)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(p["conv_w"], xbc, conv_state)
+    x, B_, C_ = _split_xbc(cfg, xbc)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if single_step:
+        h = state["ssm"].astype(jnp.float32)               # (B,H,P,N)
+        rep = H // s.n_groups
+        Bh = jnp.repeat(B_[:, 0].astype(jnp.float32), rep, axis=1)   # (B,H,N)
+        Ch = jnp.repeat(C_[:, 0].astype(jnp.float32), rep, axis=1)
+        dt0 = dt[:, 0]                                     # (B,H)
+        dec = jnp.exp(dt0 * A)                             # (B,H)
+        xin = x[:, 0].astype(jnp.float32) * dt0[..., None]  # (B,H,P)
+        h = dec[..., None, None] * h + jnp.einsum("bhp,bhn->bhpn", xin, Bh)
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch)
+        y = y + p["D"].astype(jnp.float32)[:, None] * x[:, 0].astype(jnp.float32)
+        y = y[:, None]                                     # (B,1,H,P)
+        new_ssm = h
+    else:
+        init = None if state is None else state["ssm"]
+        y, new_ssm = ssd(cfg, x, dt, A, B_, C_, init)
+        y = y.astype(jnp.float32) + p["D"].astype(jnp.float32)[None, None, :, None] \
+            * x.astype(jnp.float32)
+
+    Bb, S = x_in.shape[:2]
+    y = y.reshape(Bb, S, d_in).astype(x_in.dtype)
+    y = _gated_norm(p, y, z)
+    out = y @ p["out_proj"].astype(x_in.dtype)
+    new_state = {"ssm": new_ssm, "conv": new_conv}
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int):
+    s, d_in, H, conv_dim = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), jnp.dtype(cfg.dtype)),
+    }

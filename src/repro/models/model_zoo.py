@@ -1,0 +1,239 @@
+"""Unified model API: config -> Model with init/loss/prefill/decode and
+ShapeDtypeStruct spec generation for the multi-pod dry-run.
+
+Every assigned architecture is served by one of four assemblies:
+    dense/moe/vlm -> transformer.py      hybrid -> zamba.py
+    ssm (xlstm)   -> xlstm.py            audio  -> encdec.py
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec, transformer, xlstm, zamba
+from repro.parallel.sharding import ParallelContext
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    ctx: Optional[ParallelContext] = None
+
+    # -- construction -------------------------------------------------------
+    def init(self, key) -> Any:
+        c = self.cfg
+        if c.xlstm is not None:
+            return xlstm.init_xlstm_lm(key, c)
+        if c.ssm is not None:
+            return zamba.init_zamba(key, c)
+        if c.is_encoder_decoder:
+            return encdec.init_encdec(key, c)
+        return transformer.init_lm(key, c)
+
+    # -- training -----------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        c = self.cfg
+        if c.xlstm is not None:
+            logits, aux, _ = xlstm.xlstm_forward(c, self.ctx, params,
+                                                 batch["tokens"])
+        elif c.ssm is not None:
+            logits, aux, _ = zamba.zamba_forward(c, self.ctx, params,
+                                                 batch["tokens"])
+        elif c.is_encoder_decoder:
+            logits, aux = encdec.forward(c, self.ctx, params, batch["tokens"],
+                                         batch["frames"])
+        else:
+            return transformer.lm_loss(c, self.ctx, params, batch)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        xent = -jnp.mean(ll)
+        return xent + aux, {"xent": xent, "aux": aux}
+
+    # -- serving ------------------------------------------------------------
+    def prefill(self, params, batch) -> Tuple[jax.Array, Any]:
+        c = self.cfg
+        if c.xlstm is not None:
+            logits, _, state = xlstm.xlstm_forward(c, self.ctx, params,
+                                                   batch["tokens"])
+            return logits[:, -1, :], state
+        if c.ssm is not None:
+            logits, _, cache = zamba.zamba_forward(c, self.ctx, params,
+                                                   batch["tokens"],
+                                                   emit_cache=True)
+            return logits[:, -1, :], cache
+        if c.is_encoder_decoder:
+            return encdec.prefill(c, self.ctx, params, batch["tokens"],
+                                  batch["frames"])
+        return transformer.prefill(c, self.ctx, params, batch["tokens"],
+                                   batch.get("positions"))
+
+    def decode(self, params, cache, batch) -> Tuple[jax.Array, Any]:
+        c = self.cfg
+        tokens, index = batch["tokens"], batch["index"]
+        if c.xlstm is not None:
+            return xlstm.xlstm_decode_step(c, self.ctx, params, cache,
+                                           tokens, index)
+        if c.ssm is not None:
+            return zamba.zamba_decode_step(c, self.ctx, params, cache,
+                                           tokens, index)
+        if c.is_encoder_decoder:
+            return encdec.decode_step(c, self.ctx, params, cache, tokens, index)
+        return transformer.decode_step(c, self.ctx, params, cache, tokens,
+                                       index, batch.get("positions"))
+
+    # -- concrete cache construction (for real serving runs) ----------------
+    def init_cache(self, batch: int, max_len: int) -> Any:
+        c = self.cfg
+        if c.xlstm is not None:
+            return xlstm.init_xlstm_state(c, batch)
+        if c.ssm is not None:
+            return zamba.init_zamba_cache(c, batch, max_len)
+        if c.is_encoder_decoder:
+            cache = transformer.init_kv_cache(c, batch, max_len)
+            dt = jnp.dtype(c.dtype)
+            xshape = (c.num_layers, batch, c.encoder_seq, c.num_kv_heads, c.head_dim)
+            cache["xk"] = jnp.zeros(xshape, dt)
+            cache["xv"] = jnp.zeros(xshape, dt)
+            return cache
+        return transformer.init_kv_cache(c, batch, max_len)
+
+    # -- abstract specs for lower()/compile() -------------------------------
+    def batch_struct(self, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+        c = self.cfg
+        i32, bf16 = jnp.int32, jnp.dtype(c.dtype)
+        B, S = shape.global_batch, shape.seq_len
+        sd = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            out = {"tokens": sd((B, S), i32), "labels": sd((B, S), i32)}
+        elif shape.kind == "prefill":
+            out = {"tokens": sd((B, S), i32)}
+        else:  # decode
+            out = {"tokens": sd((B, 1), i32), "index": sd((), i32)}
+        if c.position == "mrope" and shape.kind != "decode":
+            out["positions"] = sd((3, B, S), i32)
+        if c.is_encoder_decoder and shape.kind != "decode":
+            out["frames"] = sd((B, c.encoder_seq, c.d_model), bf16)
+        return out
+
+    def cache_struct(self, shape: ShapeSpec) -> Any:
+        """Abstract cache for a decode cell (S = shape.seq_len KV entries)."""
+        c = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        sd, bf16 = jax.ShapeDtypeStruct, jnp.dtype(c.dtype)
+        if c.xlstm is not None:
+            P_ = xlstm.n_pairs(c)
+            d_in, H, dk = xlstm._mlstm_dims(c)
+            Hs, dh, _ = xlstm._slstm_dims(c)
+            f32 = jnp.float32
+            return {
+                "mlstm": {"C": sd((P_, B, H, dk, dk), f32),
+                          "n": sd((P_, B, H, dk), f32),
+                          "m": sd((P_, B, H), f32)},
+                "slstm": {"c": sd((P_, B, Hs, dh), f32),
+                          "n": sd((P_, B, Hs, dh), f32),
+                          "h": sd((P_, B, Hs, dh), f32),
+                          "m": sd((P_, B, Hs, dh), f32)},
+            }
+        if c.ssm is not None:
+            s = c.ssm
+            H = s.n_heads(c.d_model)
+            conv_dim = s.d_inner(c.d_model) + 2 * s.n_groups * s.d_state
+            G = zamba.n_groups(c)
+            return {
+                "mamba": {"ssm": sd((c.num_layers, B, H, s.head_dim, s.d_state),
+                                    jnp.float32),
+                          "conv": sd((c.num_layers, B, s.d_conv - 1, conv_dim),
+                                     bf16)},
+                "attn_k": sd((G, B, S, c.num_kv_heads, c.head_dim), bf16),
+                "attn_v": sd((G, B, S, c.num_kv_heads, c.head_dim), bf16),
+            }
+        kv = (c.num_layers, B, S, c.num_kv_heads, c.head_dim)
+        out = {"k": sd(kv, bf16), "v": sd(kv, bf16)}
+        if c.is_encoder_decoder:
+            xkv = (c.num_layers, B, c.encoder_seq, c.num_kv_heads, c.head_dim)
+            out["xk"] = sd(xkv, bf16)
+            out["xv"] = sd(xkv, bf16)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis annotation for batch/cache pytrees (used by launch/dryrun)
+# ---------------------------------------------------------------------------
+
+_BATCH_LOGICAL = {
+    "tokens": ("batch", None), "labels": ("batch", None),
+    "mask": ("batch", None), "frames": ("batch", None, None),
+    "index": (),
+}
+_CACHE_LOGICAL = {
+    "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "xk": ("layers", "batch", None, "kv_heads", None),
+    "xv": ("layers", "batch", None, "kv_heads", None),
+    "attn_k": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "attn_v": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "ssm": ("layers", "batch", "q_heads", None, None),
+    "conv": ("layers", "batch", None, "inner"),
+    "C": ("layers", "batch", None, None, None),
+    "n": ("layers", "batch", None, None),
+    "m": ("layers", "batch", None),
+    "c": ("layers", "batch", None, None),
+    "h": ("layers", "batch", None, None),
+}
+
+
+def _leaf_key(path) -> Optional[str]:
+    for part in reversed(path):
+        key = getattr(part, "key", None)
+        if isinstance(key, str):
+            return key
+    return None
+
+
+def batch_specs(ctx: ParallelContext, struct, is_mrope: bool = False):
+    def f(path, leaf):
+        key = _leaf_key(path)
+        if key == "positions":
+            logical = (None, "batch", None) if leaf.ndim == 3 else ("batch", None)
+        else:
+            logical = _BATCH_LOGICAL.get(key, (None,) * leaf.ndim)
+        if len(logical) != leaf.ndim:
+            logical = (None,) * leaf.ndim
+        return ctx.spec_for(leaf.shape, logical)
+    return jax.tree_util.tree_map_with_path(f, struct)
+
+
+def cache_specs(ctx: ParallelContext, struct):
+    def f(path, leaf):
+        key = _leaf_key(path)
+        logical = _CACHE_LOGICAL.get(key, (None,) * leaf.ndim)
+        # slstm/mlstm "m"/"n" collide across dicts; fix rank mismatches
+        if len(logical) != leaf.ndim:
+            logical = ("layers", "batch") + (None,) * (leaf.ndim - 2)
+        return ctx.spec_for(leaf.shape, logical)
+    return jax.tree_util.tree_map_with_path(f, struct)
+
+
+def build_model(cfg: ModelConfig, ctx: Optional[ParallelContext] = None) -> Model:
+    return Model(cfg=cfg, ctx=ctx)
+
+
+def pad_cache(cache, max_len: int, seq_axis_by_key={"k": 2, "v": 2, "attn_k": 2,
+                                                    "attn_v": 2}):
+    """Grow prefill-emitted KV caches to ``max_len`` along the seq axis so
+    decode can continue appending. Recurrent states pass through unchanged."""
+    def f(path, leaf):
+        key = _leaf_key(path)
+        if key in seq_axis_by_key and key in ("k", "v", "attn_k", "attn_v"):
+            ax = seq_axis_by_key[key]
+            if leaf.shape[ax] < max_len:
+                pad = [(0, 0)] * leaf.ndim
+                pad[ax] = (0, max_len - leaf.shape[ax])
+                return jnp.pad(leaf, pad)
+        return leaf
+    return jax.tree_util.tree_map_with_path(f, cache)

@@ -1,0 +1,290 @@
+"""Decoder-only transformer assembly (dense, MoE, and M-RoPE/VLM variants).
+
+Layers are weight-stacked and iterated with ``lax.scan`` so HLO size is
+independent of depth (80-layer qwen2-vl compiles as fast as 18-layer gemma);
+``jax.checkpoint`` wraps the scan body for layer-granular remat during
+training. MoE layers route through ``repro.models.moe`` (EP shard_map path
+under a ParallelContext).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_apply
+from repro.parallel.sharding import ParallelContext
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# One decoder layer
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "norm1": L.init_norm(cfg),
+        "attn": attn_lib.init_attention(k1, cfg),
+        "norm2": L.init_norm(cfg),
+    }
+    if cfg.moe is not None:
+        p["moe"] = init_moe(k2, cfg)
+        if cfg.moe.dense_residual:
+            p["dense_mlp"] = L.init_mlp(k3, cfg, cfg.moe.dense_d_ff or cfg.d_ff)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg)
+    return p
+
+
+def _ffn(cfg: ModelConfig, ctx: Optional[ParallelContext], p: Params,
+         x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Feed-forward (dense MLP or MoE + optional dense residual)."""
+    if cfg.moe is not None:
+        y, aux = moe_apply(cfg, p["moe"], x, parallel=ctx)
+        if cfg.moe.dense_residual:
+            y = y + L.apply_mlp(cfg, p["dense_mlp"], x)
+        return y, aux
+    return L.apply_mlp(cfg, p["mlp"], x), jnp.zeros((), jnp.float32)
+
+
+def apply_layer(cfg: ModelConfig, ctx: Optional[ParallelContext], p: Params,
+                x: jax.Array, positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    chunk = ctx.attn_chunk if ctx else 512
+    sched = ctx.attn_schedule if ctx else "rect"
+    h = L.apply_norm(cfg, p["norm1"], x)
+    h = attn_lib.self_attention(cfg, p["attn"], h, positions,
+                                window=cfg.sliding_window, chunk=chunk,
+                                schedule=sched)
+    if ctx:
+        h = ctx.constrain(h, ("batch", "seq", "embed"))
+    x = x + h
+    h = L.apply_norm(cfg, p["norm2"], x)
+    h, aux = _ffn(cfg, ctx, p, h)
+    if ctx:
+        h = ctx.constrain(h, ("batch", "seq", "embed"))
+    return x + h, aux
+
+
+def apply_layer_decode(cfg: ModelConfig, ctx: Optional[ParallelContext],
+                       p: Params, x: jax.Array, positions: jax.Array,
+                       k_cache: jax.Array, v_cache: jax.Array,
+                       index: jax.Array):
+    """Single-token decode for one layer; returns (x, (k_cache, v_cache))."""
+    h = L.apply_norm(cfg, p["norm1"], x)
+    q, k, v = attn_lib.qkv_proj(cfg, p["attn"], h)
+    if cfg.position in ("rope", "mrope"):
+        q = L.apply_rope(cfg, q, positions)
+        k = L.apply_rope(cfg, k, positions)
+    k_cache, v_cache = attn_lib.cache_update(k_cache, v_cache, k, v, index)
+    o = attn_lib.decode_attend(cfg, q, k_cache, v_cache, index + 1,
+                               window=cfg.sliding_window)
+    x = x + attn_lib.out_proj(cfg, p["attn"], o)
+    h = L.apply_norm(cfg, p["norm2"], x)
+    h, _ = _ffn(cfg, ctx, p, h)
+    return x + h, (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    k_embed, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": L.init_embedding(k_embed, cfg),
+        "layers": layers,
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def _positions_for(cfg: ModelConfig, tokens: jax.Array,
+                   positions: Optional[jax.Array]) -> jax.Array:
+    if positions is not None:
+        return positions
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.position == "mrope":
+        pos = jnp.broadcast_to(pos, (3, B, S))
+    return pos
+
+
+def forward(cfg: ModelConfig, ctx: Optional[ParallelContext], params: Params,
+            tokens: jax.Array, positions: Optional[jax.Array] = None,
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (logits (B,S,V), aux_loss)."""
+    positions = _positions_for(cfg, tokens, positions)
+    lpos = positions if cfg.position != "mrope" else positions[0]
+    x = L.embed_tokens(cfg, params["embed"], tokens,
+                       lpos if cfg.position == "learned" else None)
+    if ctx:
+        x = ctx.constrain(x, ("batch", "seq", "embed"))
+
+    def body(carry, layer_p):
+        x, aux = carry
+        x, a = apply_layer(cfg, ctx, layer_p, x, positions)
+        return (x, aux + a), None
+
+    if ctx is None or ctx.remat == "layer":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)
+    if ctx:
+        logits = ctx.constrain(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  num_layers: Optional[int] = None, dtype=None):
+    nl = num_layers or cfg.num_layers
+    dt = jnp.dtype(dtype or cfg.dtype)
+    shape = (nl, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def prefill(cfg: ModelConfig, ctx: Optional[ParallelContext], params: Params,
+            tokens: jax.Array, positions: Optional[jax.Array] = None):
+    """Forward + emit KV caches -> (logits_last (B,V), cache)."""
+    positions = _positions_for(cfg, tokens, positions)
+    lpos = positions if cfg.position != "mrope" else positions[0]
+    x = L.embed_tokens(cfg, params["embed"], tokens,
+                       lpos if cfg.position == "learned" else None)
+    if ctx:
+        x = ctx.constrain(x, ("batch", "seq", "embed"))
+    chunk = ctx.attn_chunk if ctx else 512
+
+    def body(x, layer_p):
+        h = L.apply_norm(cfg, layer_p["norm1"], x)
+        q, k, v = attn_lib.qkv_proj(cfg, layer_p["attn"], h)
+        if cfg.position in ("rope", "mrope"):
+            q = L.apply_rope(cfg, q, positions)
+            k = L.apply_rope(cfg, k, positions)
+        o = attn_lib.attend(cfg, q, k, v, causal=True,
+                            window=cfg.sliding_window, chunk=chunk,
+                            schedule=ctx.attn_schedule if ctx else "rect")
+        x = x + attn_lib.out_proj(cfg, layer_p["attn"], o)
+        h = L.apply_norm(cfg, layer_p["norm2"], x)
+        h, _ = _ffn(cfg, ctx, layer_p, h)
+        x = x + h
+        if ctx:
+            x = ctx.constrain(x, ("batch", "seq", "embed"))
+            k = ctx.constrain(k, ("batch", "kv_seq", "kv_heads", "head_dim"))
+            v = ctx.constrain(v, ("batch", "kv_seq", "kv_heads", "head_dim"))
+        return x, (k.astype(jnp.dtype(cfg.dtype)), v.astype(jnp.dtype(cfg.dtype)))
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(cfg, params["final_norm"], x[:, -1:, :])
+    logits = L.unembed(cfg, params["embed"], x)[:, 0, :]
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step(cfg: ModelConfig, ctx: Optional[ParallelContext], params: Params,
+                cache, tokens: jax.Array, index: jax.Array,
+                positions: Optional[jax.Array] = None):
+    """One-token decode. tokens: (B,1); index: () tokens already cached.
+
+    Returns (logits (B,V), new_cache).
+    """
+    B = tokens.shape[0]
+    if positions is None:
+        positions = jnp.broadcast_to(index.astype(jnp.int32), (B, 1))
+        if cfg.position == "mrope":
+            positions = jnp.broadcast_to(positions, (3, B, 1))
+    lpos = positions if cfg.position != "mrope" else positions[0]
+    x = L.embed_tokens(cfg, params["embed"], tokens,
+                       lpos if cfg.position == "learned" else None)
+
+    def body(x, inp):
+        layer_p, kc, vc = inp
+        x, (kc, vc) = apply_layer_decode(cfg, ctx, layer_p, x, positions,
+                                         kc, vc, index)
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)[:, 0, :]
+    return logits, {"k": ks, "v": vs}
+
+
+def lm_loss(cfg: ModelConfig, ctx: Optional[ParallelContext], params: Params,
+            batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(cfg, ctx, params, batch["tokens"],
+                          batch.get("positions"))
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    xent = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = xent + aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Buffered decode (§Perf, qwen2 decode cell): read-only cache + write buffer
+# ---------------------------------------------------------------------------
+
+def init_kv_buffer(cfg: ModelConfig, batch: int, window: int, dtype=None):
+    dt = jnp.dtype(dtype or cfg.dtype)
+    shape = (cfg.num_layers, batch, window, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_step_buffered(cfg: ModelConfig, ctx, params: Params, cache,
+                         buffer, tokens: jax.Array, base_len: jax.Array,
+                         buf_len: jax.Array):
+    """One-token decode against a READ-ONLY cache plus a small write buffer.
+
+    cache k/v: (L,B,S,Hkv,D) holds the first ``base_len`` tokens (not
+    modified); buffer k/v: (L,B,W,Hkv,D) holds ``buf_len`` recent tokens and
+    receives this token's K/V. Position = base_len + buf_len. Flush (merge
+    buffer into cache every W steps) is a separate step — see
+    build_flush_step in train/steps.py.
+    """
+    B = tokens.shape[0]
+    index = base_len + buf_len
+    positions = jnp.broadcast_to(index.astype(jnp.int32), (B, 1))
+    if cfg.position == "mrope":
+        positions = jnp.broadcast_to(positions, (3, B, 1))
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+
+    def body(x, inp):
+        lp, kc, vc, kb, vb = inp
+        h = L.apply_norm(cfg, lp["norm1"], x)
+        q, k, v = attn_lib.qkv_proj(cfg, lp["attn"], h)
+        if cfg.position in ("rope", "mrope"):
+            q = L.apply_rope(cfg, q, positions)
+            k = L.apply_rope(cfg, k, positions)
+        kb, vb = attn_lib.cache_update(kb, vb, k, v, buf_len)
+        o = attn_lib.decode_attend_buffered(cfg, q, kc, vc, kb, vb,
+                                            base_len, buf_len + 1)
+        x = x + attn_lib.out_proj(cfg, lp["attn"], o)
+        h = L.apply_norm(cfg, lp["norm2"], x)
+        h, _ = _ffn(cfg, ctx, lp, h)
+        return x + h, (kb, vb)
+
+    x, (kbs, vbs) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"],
+                  buffer["k"], buffer["v"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)[:, 0, :]
+    return logits, {"k": kbs, "v": vbs}
+
+
+def flush_buffer(cfg: ModelConfig, cache, buffer, base_len: jax.Array):
+    """Fold the write buffer into the cache at ``base_len`` (amortized:
+    runs once every W decode steps)."""
+    def one(c, b):
+        return jax.lax.dynamic_update_slice(
+            c, b.astype(c.dtype), (0, 0, base_len, 0, 0))
+    return {"k": one(cache["k"], buffer["k"]),
+            "v": one(cache["v"], buffer["v"])}

@@ -1,0 +1,337 @@
+"""xLSTM blocks: mLSTM (matrix memory, exponential gating, stabilized) and
+sLSTM (scalar memory with recurrent gating), per arXiv:2405.04517.
+
+Both are implemented as exact sequential recurrences via ``lax.scan`` over
+time (the honest baseline; a chunked-parallel mLSTM is a §Perf lever).
+Decode is the same cell applied for a single step, so train/decode share code
+and the state-passing property tests can assert equivalence.
+
+State per mLSTM block: C (B,H,Dk,Dv), n (B,H,Dk), m (B,H)
+State per sLSTM block: c,n,h (B,H,Dh), m (B,H,Dh)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_in = int(cfg.d_model * cfg.xlstm.proj_factor_mlstm)
+    H = cfg.num_heads
+    dk = d_in // H
+    return d_in, H, dk
+
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    d_in, H, dk = _mlstm_dims(cfg)
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "up": dense_init(ks[0], cfg.d_model, 2 * d_in, pdt),
+        "wq": dense_init(ks[1], d_in, d_in, pdt),
+        "wk": dense_init(ks[2], d_in, d_in, pdt),
+        "wv": dense_init(ks[3], d_in, d_in, pdt),
+        "wif": dense_init(ks[4], d_in, 2 * H, pdt),
+        "down": dense_init(ks[5], d_in, cfg.d_model, pdt,
+                           scale=1.0 / np.sqrt(d_in * 2 * cfg.num_layers)),
+        "skip_scale": jnp.ones((d_in,), pdt),
+    }
+
+
+def mlstm_cell(q, k, v, log_i, log_f, state):
+    """One step. q/k/v: (B,H,Dk|Dv); log_i/log_f: (B,H). state=(C,n,m)."""
+    C, n, m = state
+    m_new = jnp.maximum(log_f + m, log_i)
+    f_ = jnp.exp(log_f + m - m_new)[..., None]
+    i_ = jnp.exp(log_i - m_new)[..., None]
+    C = f_[..., None] * C + i_[..., None] * (k[..., :, None] * v[..., None, :])
+    n = f_ * n + i_ * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)),
+                        jnp.exp(-m_new)) + 1e-6
+    h = jnp.einsum("bhkv,bhk->bhv", C, q) / denom[..., None]
+    return h, (C, n, m_new)
+
+
+def apply_mlstm(cfg: ModelConfig, p: Params, x: jax.Array, state=None):
+    """x: (B,S,d_model) -> (y, new_state). fp32 recurrence."""
+    if cfg.xlstm.parallel_mlstm and x.shape[1] > 1:
+        return apply_mlstm_chunked(cfg, p, x, state)
+    d_in, H, dk = _mlstm_dims(cfg)
+    B, S, _ = x.shape
+    dt = x.dtype
+    up = x @ p["up"].astype(dt)
+    main, z = jnp.split(up, 2, axis=-1)
+    q = (main @ p["wq"].astype(dt)).reshape(B, S, H, dk) / np.sqrt(dk)
+    k = (main @ p["wk"].astype(dt)).reshape(B, S, H, dk) / np.sqrt(dk)
+    v = (main @ p["wv"].astype(dt)).reshape(B, S, H, dk)
+    gif = (main @ p["wif"].astype(dt)).astype(jnp.float32).reshape(B, S, H, 2)
+    log_i = gif[..., 0]
+    log_f = jax.nn.log_sigmoid(gif[..., 1] + 3.0)   # bias toward remembering
+
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+    st = (state["C"], state["n"], state["m"])
+
+    def step(carry, inp):
+        qt, kt, vt, lit, lft = inp
+        h, carry = mlstm_cell(qt, kt, vt, lit, lft, carry)
+        return carry, h
+
+    xs = (jnp.moveaxis(q, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(log_i, 1, 0), jnp.moveaxis(log_f, 1, 0))
+    st, hs = jax.lax.scan(step, st, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d_in).astype(dt)
+    h = h + main * p["skip_scale"].astype(dt)
+    y = (h * jax.nn.silu(z)) @ p["down"].astype(dt)
+    return y, {"C": st[0], "n": st[1], "m": st[2]}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    d_in, H, dk = _mlstm_dims(cfg)
+    z = jnp.zeros
+    return {"C": z((batch, H, dk, dk), jnp.float32),
+            "n": z((batch, H, dk), jnp.float32),
+            "m": jnp.full((batch, H), -1e9, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _slstm_dims(cfg: ModelConfig):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    d_up = int(cfg.d_model * cfg.xlstm.proj_factor_slstm)
+    return H, dh, d_up
+
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    H, dh, d_up = _slstm_dims(cfg)
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wx": dense_init(ks[0], cfg.d_model, 4 * cfg.d_model, pdt),
+        # block-diagonal recurrent weights, one (dh, dh) block per head/gate
+        "r": (jax.random.normal(ks[1], (4, H, dh, dh)) / np.sqrt(dh)).astype(pdt),
+        "up": dense_init(ks[2], cfg.d_model, 2 * d_up, pdt),
+        "down": dense_init(ks[3], d_up, cfg.d_model, pdt,
+                           scale=1.0 / np.sqrt(d_up * 2 * cfg.num_layers)),
+    }
+
+
+def slstm_cell(gx, r, state):
+    """gx: (B,4,H,Dh) pre-activations from input; r: (4,H,Dh,Dh)."""
+    c, n, h, m = state
+    rec = jnp.einsum("bhd,ghde->bghe", h, r)              # (B,4,H,Dh)
+    zi, ii, fi, oi = [gx[:, g] + rec[:, g] for g in range(4)]
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    log_f = jax.nn.log_sigmoid(fi + 3.0)
+    m_new = jnp.maximum(log_f + m, ii)
+    i_ = jnp.exp(ii - m_new)
+    f_ = jnp.exp(log_f + m - m_new)
+    c = f_ * c + i_ * z
+    n = f_ * n + i_
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return h_new, (c, n, h_new, m_new)
+
+
+def apply_slstm(cfg: ModelConfig, p: Params, x: jax.Array, state=None):
+    H, dh, d_up = _slstm_dims(cfg)
+    B, S, d = x.shape
+    dt = x.dtype
+    gx = (x @ p["wx"].astype(dt)).astype(jnp.float32).reshape(B, S, 4, H, dh)
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    st = (state["c"], state["n"], state["h"], state["m"])
+
+    def step(carry, gxt):
+        h, carry = slstm_cell(gxt, p["r"].astype(jnp.float32), carry)
+        return carry, h
+
+    st, hs = jax.lax.scan(step, st, jnp.moveaxis(gx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(dt)
+    up = h @ p["up"].astype(dt)
+    a, b = jnp.split(up, 2, axis=-1)
+    y = (jax.nn.gelu(a) * b) @ p["down"].astype(dt)
+    new_state = {"c": st[0], "n": st[1], "h": st[2], "m": st[3]}
+    return y, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    H, dh, _ = _slstm_dims(cfg)
+    z = jnp.zeros
+    return {"c": z((batch, H, dh), jnp.float32), "n": z((batch, H, dh), jnp.float32),
+            "h": z((batch, H, dh), jnp.float32),
+            "m": jnp.full((batch, H, dh), -1e9, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Full xLSTM LM assembly (pairs of mLSTM + sLSTM blocks, scanned)
+# ---------------------------------------------------------------------------
+
+def n_pairs(cfg: ModelConfig) -> int:
+    assert cfg.num_layers % 2 == 0
+    return cfg.num_layers // 2
+
+
+def init_xlstm_lm(key, cfg: ModelConfig) -> Params:
+    from repro.models import layers as L
+    k_embed, k_blocks = jax.random.split(key)
+    pair_keys = jax.random.split(k_blocks, n_pairs(cfg))
+
+    def init_pair(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm_m": L.init_norm(cfg), "mlstm": init_mlstm(k1, cfg),
+            "norm_s": L.init_norm(cfg), "slstm": init_slstm(k2, cfg),
+        }
+
+    return {
+        "embed": L.init_embedding(k_embed, cfg),
+        "pairs": jax.vmap(init_pair)(pair_keys),
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def init_xlstm_state(cfg: ModelConfig, batch: int):
+    P_ = n_pairs(cfg)
+    m = init_mlstm_state(cfg, batch)
+    s = init_slstm_state(cfg, batch)
+    stack = lambda t: jnp.broadcast_to(t[None], (P_,) + t.shape).copy()
+    return {"mlstm": jax.tree.map(stack, m), "slstm": jax.tree.map(stack, s)}
+
+
+def xlstm_forward(cfg: ModelConfig, ctx, params: Params, tokens: jax.Array,
+                  state=None):
+    """Returns (logits (B,S,V), aux=0, new_state)."""
+    from repro.models import layers as L
+    B, S = tokens.shape
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    if ctx:
+        x = ctx.constrain(x, ("batch", "seq", "embed"))
+    if state is None:
+        state = init_xlstm_state(cfg, B)
+
+    def body(x, inp):
+        lp, ms, ss = inp
+        h = L.apply_norm(cfg, lp["norm_m"], x)
+        h, ms = apply_mlstm(cfg, lp["mlstm"], h, ms)
+        x = x + h
+        h = L.apply_norm(cfg, lp["norm_s"], x)
+        h, ss = apply_slstm(cfg, lp["slstm"], h, ss)
+        x = x + h
+        if ctx:
+            x = ctx.constrain(x, ("batch", "seq", "embed"))
+        return x, (ms, ss)
+
+    body_fn = body
+    if ctx is not None and ctx.remat == "layer":
+        body_fn = jax.checkpoint(body, prevent_cse=False)
+    x, (ms, ss) = jax.lax.scan(body_fn, x,
+                               (params["pairs"], state["mlstm"], state["slstm"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)
+    return logits, jnp.zeros((), jnp.float32), {"mlstm": ms, "slstm": ss}
+
+
+def xlstm_decode_step(cfg: ModelConfig, ctx, params: Params, state,
+                      tokens: jax.Array, index: jax.Array):
+    """One-token decode (index unused: the recurrent state is position-free)."""
+    del index
+    logits, _, new_state = xlstm_forward(cfg, ctx, params, tokens, state)
+    return logits[:, 0, :], new_state
+
+
+# ---------------------------------------------------------------------------
+# Chunked-parallel mLSTM (§Perf, xlstm train cell)
+#
+# The sequential scan rewrites the (Dk x Dk) matrix memory every timestep:
+# state traffic = S * |C| — the dominant roofline term for xlstm training.
+# The chunkwise form updates C once per Q-token chunk (traffic / Q) and
+# computes within-chunk interactions as decay-masked attention (extra
+# O(Q^2 Dk) flops — a good trade on the MXU). Exact, including the
+# exponential-gating stabilizers: equivalence vs the sequential cell is
+# asserted in tests/test_mamba_xlstm.py.
+# ---------------------------------------------------------------------------
+
+def _mlstm_chunk(carry, xs):
+    """One chunk for one (B,H) slice set. Shapes: q/k/v (B,H,Q,D),
+    li/lf (B,H,Q). carry: C (B,H,D,D), n (B,H,D), m (B,H)."""
+    C, n, m0 = carry
+    q, k, v, li, lf = xs
+    B, H, Q, D = q.shape
+    b = jnp.cumsum(lf, axis=-1)                              # (B,H,Q)
+    # pairwise log-weights w[t,s] = b_t - b_s + li_s for s <= t
+    W = b[..., :, None] - b[..., None, :] + li[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    W = jnp.where(mask, W, -jnp.inf)
+    m_intra = jnp.max(W, axis=-1)                            # (B,H,Q)
+    m_t = jnp.maximum(m0[..., None] + b, m_intra)
+    Dmat = jnp.exp(W - m_t[..., None])
+    Dmat = jnp.where(mask, Dmat, 0.0)
+
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * Dmat
+    h_intra = jnp.einsum("bhts,bhsd->bhtd", scores, v)
+    n_intra = jnp.einsum("bhts,bhsd->bhtd", Dmat, k)
+    inter_scale = jnp.exp(m0[..., None] + b - m_t)           # (B,H,Q)
+    h_inter = jnp.einsum("bhtd,bhde->bhte", q, C) * inter_scale[..., None]
+    n_t = n[..., None, :] * inter_scale[..., None] + n_intra
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhtd,bhtd->bht", n_t, q)),
+                        jnp.exp(-m_t)) + 1e-6
+    h = (h_intra + h_inter) / denom[..., None]
+
+    # end-of-chunk state
+    m_new = m_t[..., -1]
+    bQ = b[..., -1]
+    dec = jnp.exp(m0 + bQ - m_new)                           # (B,H)
+    E = jnp.exp(bQ[..., None] - b + li - m_new[..., None])   # (B,H,Q)
+    C_new = dec[..., None, None] * C + jnp.einsum(
+        "bhs,bhsd,bhse->bhde", E, k, v)
+    n_new = dec[..., None] * n + jnp.einsum("bhs,bhsd->bhd", E, k)
+    return (C_new, n_new, m_new), h
+
+
+def apply_mlstm_chunked(cfg: ModelConfig, p: Params, x: jax.Array,
+                        state=None):
+    """Chunked-parallel mLSTM; same interface/semantics as apply_mlstm."""
+    d_in, H, dk = _mlstm_dims(cfg)
+    B, S, _ = x.shape
+    Q = min(cfg.xlstm.chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    dt = x.dtype
+    up = x @ p["up"].astype(dt)
+    main, z = jnp.split(up, 2, axis=-1)
+    q = (main @ p["wq"].astype(dt)).reshape(B, S, H, dk) / np.sqrt(dk)
+    k = (main @ p["wk"].astype(dt)).reshape(B, S, H, dk) / np.sqrt(dk)
+    v = (main @ p["wv"].astype(dt)).reshape(B, S, H, dk)
+    gif = (main @ p["wif"].astype(dt)).astype(jnp.float32).reshape(B, S, H, 2)
+    li = gif[..., 0]
+    lf = jax.nn.log_sigmoid(gif[..., 1] + 3.0)
+
+    def chunked(t, has_head=True):  # (B,S,H,...) -> (nc,B,H,Q,...)
+        t = jnp.moveaxis(t, 2, 1)                  # (B,H,S,...)
+        t = t.reshape((B, H, nc, Q) + t.shape[3:])
+        return jnp.moveaxis(t, 2, 0)               # (nc,B,H,Q,...)
+
+    xs = (chunked(q).astype(jnp.float32), chunked(k).astype(jnp.float32),
+          chunked(v).astype(jnp.float32), chunked(li), chunked(lf))
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+    carry = (state["C"], state["n"], state["m"])
+    carry, hs = jax.lax.scan(_mlstm_chunk, carry, xs)   # hs (nc,B,H,Q,D)
+    h = jnp.moveaxis(hs, 0, 2)                          # (B,H,nc,Q,D)
+    h = h.reshape(B, H, S, dk)
+    h = jnp.moveaxis(h, 1, 2).reshape(B, S, d_in).astype(dt)
+    h = h + main * p["skip_scale"].astype(dt)
+    y = (h * jax.nn.silu(z)) @ p["down"].astype(dt)
+    return y, {"C": carry[0], "n": carry[1], "m": carry[2]}

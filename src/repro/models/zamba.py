@@ -1,0 +1,194 @@
+"""zamba2 hybrid assembly: Mamba2 backbone + ONE shared attention block.
+
+Structure: ``num_layers`` Mamba2 blocks grouped into
+``num_layers // attn_every`` groups; after each group the *shared* attention
+transformer block (single weight set, reused) runs. Sharing makes the group
+loop cheap (the attention weights are loop-invariant) and is what lets
+long_500k decode stay sub-quadratic: only ``n_groups`` KV caches exist.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models.mamba2 import (apply_mamba2, init_mamba2, init_mamba_state)
+from repro.parallel.sharding import ParallelContext
+
+Params = Dict[str, Any]
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    assert cfg.num_layers % cfg.attn_every == 0, (cfg.num_layers, cfg.attn_every)
+    return cfg.num_layers // cfg.attn_every
+
+
+def init_zamba(key, cfg: ModelConfig) -> Params:
+    k_embed, k_layers, k_attn, k_mlp = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    mamba_layers = jax.vmap(lambda k: _init_mamba_layer(k, cfg))(layer_keys)
+    return {
+        "embed": L.init_embedding(k_embed, cfg),
+        "mamba_layers": mamba_layers,
+        "shared_attn": {
+            "norm1": L.init_norm(cfg),
+            "attn": attn_lib.init_attention(k_attn, cfg),
+            "norm2": L.init_norm(cfg),
+            "mlp": L.init_mlp(k_mlp, cfg),
+        },
+        "final_norm": L.init_norm(cfg),
+    }
+
+
+def _init_mamba_layer(key, cfg: ModelConfig) -> Params:
+    return {"norm": L.init_norm(cfg), "mixer": init_mamba2(key, cfg)}
+
+
+def _mamba_group(cfg: ModelConfig, ctx, x, group_params, group_state,
+                 single_step: bool):
+    """Scan over the attn_every mamba layers of one group."""
+
+    def body(x, inp):
+        lp, st = inp
+        h = L.apply_norm(cfg, lp["norm"], x)
+        h, st = apply_mamba2(cfg, lp["mixer"], h, st, single_step=single_step)
+        if ctx:
+            h = ctx.constrain(h, ("batch", "seq", "embed"))
+        return x + h, st
+
+    body_fn = body
+    if ctx is not None and ctx.remat == "layer" and not single_step:
+        body_fn = jax.checkpoint(body, prevent_cse=False)
+    return jax.lax.scan(body_fn, x, (group_params, group_state))
+
+
+def _shared_attn_block(cfg: ModelConfig, ctx, p: Params, x, positions,
+                       chunk: int):
+    h = L.apply_norm(cfg, p["norm1"], x)
+    h = attn_lib.self_attention(cfg, p["attn"], h, positions, chunk=chunk,
+                                schedule=ctx.attn_schedule if ctx else "rect")
+    x = x + h
+    h = L.apply_norm(cfg, p["norm2"], x)
+    return x + L.apply_mlp(cfg, p["mlp"], h)
+
+
+def _group_tree(cfg: ModelConfig, tree):
+    """(L, ...) stacked params/state -> (G, attn_every, ...)."""
+    G = n_groups(cfg)
+    return jax.tree.map(
+        lambda t: t.reshape((G, cfg.attn_every) + t.shape[1:]), tree)
+
+
+def zamba_forward(cfg: ModelConfig, ctx: Optional[ParallelContext],
+                  params: Params, tokens: jax.Array,
+                  state: Optional[dict] = None, *, emit_cache: bool = False):
+    """Full-sequence forward. Returns (logits, aux=0, cache|None)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    if ctx:
+        x = ctx.constrain(x, ("batch", "seq", "embed"))
+    chunk = ctx.attn_chunk if ctx else 512
+    G = n_groups(cfg)
+    gparams = _group_tree(cfg, params["mamba_layers"])
+    gstate = _group_tree(cfg, state["mamba"]) if state else \
+        _group_tree(cfg, init_zamba_state(cfg, B)["mamba"])
+
+    new_states, kcaches, vcaches = [], [], []
+    for g in range(G):
+        gp = jax.tree.map(lambda t: t[g], gparams)
+        gs = jax.tree.map(lambda t: t[g], gstate)
+        x, ns = _mamba_group(cfg, ctx, x, gp, gs, single_step=False)
+        new_states.append(ns)
+        if emit_cache:
+            h = L.apply_norm(cfg, params["shared_attn"]["norm1"], x)
+            q, k, v = attn_lib.qkv_proj(cfg, params["shared_attn"]["attn"], h)
+            q = L.apply_rope(cfg, q, positions)
+            k = L.apply_rope(cfg, k, positions)
+            o = attn_lib.attend(cfg, q, k, v, causal=True, chunk=chunk,
+                                schedule=ctx.attn_schedule if ctx else "rect")
+            x = x + attn_lib.out_proj(cfg, params["shared_attn"]["attn"], o)
+            h = L.apply_norm(cfg, params["shared_attn"]["norm2"], x)
+            x = x + L.apply_mlp(cfg, params["shared_attn"]["mlp"], h)
+            kcaches.append(k.astype(jnp.dtype(cfg.dtype)))
+            vcaches.append(v.astype(jnp.dtype(cfg.dtype)))
+        else:
+            x = _shared_attn_block(cfg, ctx, params["shared_attn"], x,
+                                   positions, chunk)
+        if ctx:
+            x = ctx.constrain(x, ("batch", "seq", "embed"))
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)
+    if ctx:
+        logits = ctx.constrain(logits, ("batch", "seq", "vocab"))
+    cache = None
+    if emit_cache:
+        cache = {"mamba": _stack_groups(cfg, new_states),
+                 "attn_k": jnp.stack(kcaches), "attn_v": jnp.stack(vcaches)}
+    return logits, jnp.zeros((), jnp.float32), cache
+
+
+def _stack_groups(cfg: ModelConfig, group_states):
+    """list of G pytrees with (attn_every, ...) leaves -> (L, ...) leaves."""
+    stacked = jax.tree.map(lambda *ts: jnp.concatenate(ts, axis=0), *group_states)
+    return stacked
+
+
+def zamba_decode_step(cfg: ModelConfig, ctx, params: Params, cache,
+                      tokens: jax.Array, index: jax.Array):
+    """One-token decode. cache = {mamba:(L,...), attn_k/v:(G,B,Smax,H,D)}."""
+    B = tokens.shape[0]
+    positions = jnp.broadcast_to(index.astype(jnp.int32), (B, 1))
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    G = n_groups(cfg)
+    gparams = _group_tree(cfg, params["mamba_layers"])
+    gstate = _group_tree(cfg, cache["mamba"])
+    sa = params["shared_attn"]
+
+    new_states, new_k, new_v = [], [], []
+    for g in range(G):
+        gp = jax.tree.map(lambda t: t[g], gparams)
+        gs = jax.tree.map(lambda t: t[g], gstate)
+        x, ns = _mamba_group(cfg, ctx, x, gp, gs, single_step=True)
+        new_states.append(ns)
+        h = L.apply_norm(cfg, sa["norm1"], x)
+        q, k, v = attn_lib.qkv_proj(cfg, sa["attn"], h)
+        q = L.apply_rope(cfg, q, positions)
+        k = L.apply_rope(cfg, k, positions)
+        kc, vc = attn_lib.cache_update(cache["attn_k"][g], cache["attn_v"][g],
+                                       k, v, index)
+        o = attn_lib.decode_attend(cfg, q, kc, vc, index + 1)
+        x = x + attn_lib.out_proj(cfg, sa["attn"], o)
+        h = L.apply_norm(cfg, sa["norm2"], x)
+        x = x + L.apply_mlp(cfg, sa["mlp"], h)
+        new_k.append(kc)
+        new_v.append(vc)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)[:, 0, :]
+    new_cache = {"mamba": _stack_groups(cfg, new_states),
+                 "attn_k": jnp.stack(new_k), "attn_v": jnp.stack(new_v)}
+    return logits, new_cache
+
+
+def init_zamba_state(cfg: ModelConfig, batch: int):
+    one = init_mamba_state(cfg, batch)
+    mamba = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (cfg.num_layers,) + t.shape).copy(),
+        one)
+    return {"mamba": mamba}
+
+
+def init_zamba_cache(cfg: ModelConfig, batch: int, max_len: int):
+    st = init_zamba_state(cfg, batch)
+    G = n_groups(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    shape = (G, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    st["attn_k"] = jnp.zeros(shape, dt)
+    st["attn_v"] = jnp.zeros(shape, dt)
+    return st

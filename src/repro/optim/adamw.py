@@ -1,0 +1,187 @@
+"""AdamW with global-norm clipping and warmup-cosine schedule.
+
+Functional, pytree-based, no optax dependency. Moments are fp32; the
+*placement* of moments (HBM vs the pooled-memory "FAM" tier) is decided by
+the launcher via shardings/memory kinds, not here — see DESIGN.md §2c and
+``launch/dryrun.py --offload``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return {"mu": zeros(params), "nu": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)) + 1e-20)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, grads, params, opt_state
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, p, mu, nu):
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mhat = mu / bc1
+        vhat = nu / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    out = [upd(g, p, mu, nu) for g, p, mu, nu
+           in zip(flat_g, flat_p, flat_mu, flat_nu)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# 8-bit moment state (Dettmers-style block-quantized Adam)
+#
+# For pool-scale models (arctic-480b: 469 B params) fp32 moments cannot fit
+# HBM even fully sharded over 256 chips (14.7 GB/chip). Two options exist in
+# this framework: (a) FAM/host offload via memory kinds (works on real TPU;
+# the CPU dry-run backend rejects host-placement annotations under SPMD, see
+# DESIGN.md), and (b) int8 block-quantized moments, below, which need no
+# memory kinds at all: mu/nu live as int8 + per-block fp32 scales
+# (469B * 2 / 256 = 3.7 GB/chip) and dequantize inside the update.
+# ---------------------------------------------------------------------------
+
+Q_BLOCK = 128
+
+
+def _q8_encode(x: jax.Array):
+    """x fp32 -> (int8 codes [same shape as x], fp32 per-block scales).
+
+    Codes keep the parameter's shape so they inherit its sharding spec
+    verbatim; scales add a trailing block dim (replicated)."""
+    shape = x.shape
+    pad = (-shape[-1]) % Q_BLOCK
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+    blocks = xp.reshape(xp.shape[:-1] + (xp.shape[-1] // Q_BLOCK, Q_BLOCK))
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0 + 1e-12
+    codes = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    codes = codes.reshape(xp.shape)[..., : shape[-1]]
+    return codes, scale[..., 0].astype(jnp.float32)
+
+
+def _q8_decode(codes: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    pad = (-shape[-1]) % Q_BLOCK
+    cp = (jnp.pad(codes, [(0, 0)] * (codes.ndim - 1) + [(0, pad)])
+          if pad else codes)
+    blocks = cp.reshape(cp.shape[:-1] + (cp.shape[-1] // Q_BLOCK, Q_BLOCK))
+    x = blocks.astype(jnp.float32) * scale[..., None]
+    x = x.reshape(cp.shape)[..., : shape[-1]]
+    return x
+
+
+def init_opt_state_q8(params) -> Dict[str, Any]:
+    def enc_zero(p):
+        c, s = _q8_encode(jnp.zeros(p.shape, jnp.float32))
+        return {"q": c, "s": s}
+    # mu and nu must be distinct buffers (donation forbids aliased inputs)
+    return {"mu": jax.tree.map(enc_zero, params),
+            "nu": jax.tree.map(enc_zero, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update_q8(cfg: AdamWConfig, grads, params, opt_state):
+    """AdamW with int8 moments. Same signature/return as adamw_update."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd_flat(g, p, mu_q, nu_q):
+        mu = _q8_decode(mu_q["q"], mu_q["s"], p.shape)
+        nu = _q8_decode(nu_q["q"], nu_q["s"], p.shape)
+        mu = b1 * mu + (1 - b1) * g.astype(jnp.float32)
+        nu = jnp.maximum(b2 * nu + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), 0.0)
+        delta = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        cq, cs = _q8_encode(mu)
+        vq, vs = _q8_encode(nu)
+        return new_p, {"q": cq, "s": cs}, {"q": vq, "s": vs}
+
+    # stream big stacked (per-layer) leaves through a scan so the transient
+    # fp32 moment decode never materializes the whole slab at once
+    _SCAN_BYTES = 64 << 20
+
+    def upd(g, p, mu_q, nu_q):
+        if p.ndim >= 3 and p.size * 4 > _SCAN_BYTES and p.shape[0] > 1:
+            def body(_, sl):
+                out = upd_flat(*sl)
+                return None, out
+            _, (new_p, new_mu, new_nu) = jax.lax.scan(
+                body, None, ((g, p, mu_q, nu_q)))
+            return new_p, new_mu, new_nu
+        return upd_flat(g, p, mu_q, nu_q)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    is_m = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.flatten(opt_state["mu"], is_leaf=is_m)[0]
+    flat_nu = jax.tree.flatten(opt_state["nu"], is_leaf=is_m)[0]
+    out = [upd(g, p, mu, nu) for g, p, mu, nu
+           in zip(flat_g, flat_p, flat_mu, flat_nu)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,7 @@
+from repro.parallel.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    ParallelContext,
+    param_shardings,
+    param_specs,
+    single_device_context,
+)

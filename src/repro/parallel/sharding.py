@@ -1,0 +1,198 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+MaxText-style: tensors are annotated with *logical* axis names; a rule table
+maps logical names to mesh axes. A mapping that does not divide the concrete
+dimension evenly is dropped (the dim is replicated) instead of erroring —
+this single mechanism lets one rule-set serve all 10 assigned architectures
+(e.g. gemma's 8 query heads on a 16-way ``model`` axis fall back to
+replicated attention while its MLP/vocab stay sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LogicalAxes = Tuple[Optional[str], ...]
+
+# logical axis -> mesh axis (or tuple of mesh axes); None = replicate
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),      # filtered to axes present in the mesh
+    "seq": None,
+    "kv_seq": None,                # long-context lever: set to "data"
+    "embed": None,
+    "param_embed": None,        # FSDP lever: set to "data"
+    "q_heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,            # FSDP lever: set to "data"
+    "inner": "model",              # mamba/xlstm inner projections
+    "layers": None,
+    "fsdp": None,                  # optional param sharding over "data"
+}
+
+
+@dataclass
+class ParallelContext:
+    """Carries the mesh + rules through model code."""
+
+    mesh: Mesh
+    rules: Dict[str, Any] = field(default_factory=lambda: dict(DEFAULT_RULES))
+    dp_axes: Tuple[str, ...] = ("data",)
+    ep_axis: str = "model"
+    use_ep: bool = True
+    capacity_factor: float = 1.25
+    moe_token_chunk: int = 8192
+    remat: str = "layer"           # "none" | "layer"
+    attn_chunk: int = 512
+    attn_schedule: str = "rect"    # "rect" | "grouped" (§Perf triangular)
+
+    def __post_init__(self):
+        present = set(self.mesh.axis_names)
+        self.dp_axes = tuple(a for a in self.dp_axes if a in present)
+        fixed = {}
+        for k, v in self.rules.items():
+            if isinstance(v, tuple):
+                v = tuple(a for a in v if a in present) or None
+                if v is not None and len(v) == 1:
+                    v = v[0]
+            elif v is not None and v not in present:
+                v = None
+            fixed[k] = v
+        self.rules = fixed
+
+    # -- helpers ------------------------------------------------------------
+    def axis_size(self, mesh_axis) -> int:
+        if mesh_axis is None:
+            return 1
+        if isinstance(mesh_axis, tuple):
+            return int(np.prod([self.axis_size(a) for a in mesh_axis]))
+        return self.mesh.shape[mesh_axis]
+
+    def spec_for(self, shape: Sequence[int], logical: LogicalAxes) -> P:
+        """PartitionSpec for a concrete shape, dropping non-dividing rules."""
+        assert len(shape) == len(logical), (shape, logical)
+        entries, used = [], set()
+        for dim, name in zip(shape, logical):
+            mesh_axis = self.rules.get(name) if name else None
+            if mesh_axis is None:
+                entries.append(None)
+                continue
+            axes = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+            axes = tuple(a for a in axes if a not in used)
+            size = int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
+            if not axes or size <= 1 or dim % size != 0:
+                # try a shrinking prefix (e.g. ("pod","data") -> ("pod",))
+                while axes and dim % int(np.prod([self.mesh.shape[a] for a in axes])) != 0:
+                    axes = axes[:-1]
+                if not axes:
+                    entries.append(None)
+                    continue
+            used.update(axes)
+            entries.append(axes if len(axes) > 1 else axes[0])
+        return P(*entries)
+
+    def sharding_for(self, shape: Sequence[int], logical: LogicalAxes,
+                     memory_kind: Optional[str] = None) -> NamedSharding:
+        s = NamedSharding(self.mesh, self.spec_for(shape, logical))
+        if memory_kind:
+            s = s.with_memory_kind(memory_kind)
+        return s
+
+    def constrain(self, x: jax.Array, logical: LogicalAxes) -> jax.Array:
+        """with_sharding_constraint by logical axes (no-op outside jit ok)."""
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding_for(x.shape, logical))
+
+
+def single_device_context(**kw) -> ParallelContext:
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2,
+                         devices=jax.devices()[:1])
+    return ParallelContext(mesh=mesh, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Param logical-axis inference (by leaf name + rank)
+# ---------------------------------------------------------------------------
+
+_LEAF_LOGICAL: Dict[str, LogicalAxes] = {
+    "embedding": ("vocab", "param_embed"),
+    "unembed": ("param_embed", "vocab"),
+    "pos_embedding": (None, "param_embed"),
+    "wq": ("param_embed", "q_heads"),
+    "wk": ("param_embed", "kv_heads"),
+    "wv": ("param_embed", "kv_heads"),
+    "wo": ("q_heads", "param_embed"),
+    "gate": ("param_embed", "mlp"),
+    "up": ("param_embed", "mlp"),
+    "down": ("mlp", "param_embed"),
+    "router": ("param_embed", None),
+    "w_gate": ("experts", "param_embed", "expert_mlp"),
+    "w_up": ("experts", "param_embed", "expert_mlp"),
+    "w_down": ("experts", "expert_mlp", "param_embed"),
+    "in_proj": ("param_embed", "inner"),
+    "conv_w": (None, "inner"),
+    "out_proj": ("inner", "param_embed"),
+    "wif": ("param_embed", None),
+    "wx": ("param_embed", None),
+    "r": (None, None, None, None),
+}
+_REPLICATED = {"scale", "bias", "A_log", "D", "dt_bias", "norm_scale", "skip_scale"}
+
+
+def logical_axes_for_leaf(path: Tuple[Any, ...], leaf: Any) -> LogicalAxes:
+    names = []
+    for part in reversed(path):
+        key = getattr(part, "key", None) or getattr(part, "name", None)
+        if isinstance(key, str):
+            names.append(key)
+    name = names[0] if names else None
+    rank = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    # q8 optimizer moments: codes "q" inherit the parent param's axes; the
+    # per-block scale "s" inherits all but the (blocked) last dim.
+    if name in ("q", "s") and len(names) > 1:
+        parent = names[1]
+        logical = _LEAF_LOGICAL.get(parent)
+        if parent in _REPLICATED or logical is None:
+            return (None,) * rank
+        if name == "q":
+            if rank == len(logical) + 1:
+                return ("layers",) + logical
+            return logical if rank == len(logical) else (None,) * rank
+        base = logical[:-1] + (None,)
+        if rank == len(base) + 1:
+            return ("layers",) + base
+        return base if rank == len(base) else (None,) * rank
+    if name in _REPLICATED or name is None:
+        return (None,) * rank
+    logical = _LEAF_LOGICAL.get(name)
+    if logical is None:
+        return (None,) * rank
+    if rank == len(logical) + 1:       # stacked per-layer params: (L, ...)
+        return ("layers",) + logical
+    if rank != len(logical):
+        return (None,) * rank
+    return logical
+
+
+def param_specs(ctx: ParallelContext, params) -> Any:
+    """Pytree of PartitionSpec matching a (possibly abstract) param pytree."""
+    def leaf_spec(path, leaf):
+        return ctx.spec_for(leaf.shape, logical_axes_for_leaf(path, leaf))
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def param_shardings(ctx: ParallelContext, params, memory_kind=None) -> Any:
+    def leaf_sh(path, leaf):
+        sh = NamedSharding(ctx.mesh,
+                           ctx.spec_for(leaf.shape, logical_axes_for_leaf(path, leaf)))
+        return sh.with_memory_kind(memory_kind) if memory_kind else sh
+    return jax.tree_util.tree_map_with_path(leaf_sh, params)

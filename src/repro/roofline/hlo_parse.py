@@ -1,0 +1,340 @@
+"""Loop-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count — useless for scan-over-layers models (everything here scans). This
+module parses the post-partitioning HLO text, builds per-computation symbol
+tables (operands are printed by name, not shape), extracts
+``known_trip_count`` from while backend configs, and propagates
+flops / bytes / collective-bytes bottom-up with loop multipliers.
+
+Cost model (per top-level op in a computation):
+    dot          flops = 2 * prod(result dims) * prod(lhs contracting dims)
+                 bytes = operands + result
+    fusion       bytes = operands + result (fused body not materialized);
+                 flops of dots *inside* the fused computation still count
+    dynamic-slice   bytes = 2*result + indices (touched, not whole operand)
+    dynamic-update-slice bytes = 2 * update (in-place read+write)
+    gather       bytes = 2*result + indices ; scatter bytes = 2*updates + idx
+    collectives  bytes = operands (also tallied separately per op kind)
+    parameter/constant/tuple/get-tuple-element/bitcast/while/call: 0
+    (while/call/conditional costs come from their child computations)
+
+Validated against cost_analysis() on loop-free modules in
+tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(
+    r"^\s*(ENTRY\s+)?(%[\w.\-]+)\s*(?:\([^;]*?\))?\s*->\s*[^{]+\{\s*$")
+_CALLED_RE = re.compile(
+    r"(?:calls|body|condition|to_apply|branch_computations)="
+    r"\{?(%[\w.\-]+(?:,\s*%[\w.\-]+)*)\}?")
+_TRIP_RE = re.compile(
+    r"known_trip_count\\?\"?:\s*\{\s*\\?\"?n\\?\"?:\s*\\?\"?(\d+)")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _shape_bytes(shapes: List[Tuple[str, str]]) -> int:
+    total = 0
+    for dtype, dims in shapes:
+        nb = _DTYPE_BYTES.get(dtype)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def _shape_elems(shapes: List[Tuple[str, str]]) -> int:
+    total = 0
+    for _, dims in shapes:
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclass
+class OpCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "OpCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] = self.coll_count.get(k, 0) + v * mult
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+@dataclass
+class _Op:
+    name: str
+    opcode: str
+    result_shapes: List[Tuple[str, str]]
+    operands: List[str]           # names; shapes via the computation table
+    called: List[str]
+    trip: Optional[int]
+    raw: str
+    is_root: bool = False
+
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    "copy-start", "copy-done", "add-dependency", "domain",
+    "opt-barrier", "rng-get-and-update-state", "get-dimension-size",
+}
+_CALL_OPS = {"while", "call", "conditional"}
+
+
+def _opcode_of(rhs: str) -> Optional[Tuple[str, int]]:
+    m = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+    if not m:
+        return None
+    return m.group(1), m.start(1)
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+    shapes: Dict[str, List[Tuple[str, str]]] = field(default_factory=dict)
+
+    @property
+    def root(self) -> Optional[_Op]:
+        for op in self.ops:
+            if op.is_root:
+                return op
+        return self.ops[-1] if self.ops else None
+
+
+def parse_module(text: str) -> Tuple[Dict[str, _Computation], Optional[str]]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr:
+            name = hdr.group(2).lstrip("%")
+            cur = _Computation(name)
+            comps[name] = cur
+            if hdr.group(1):
+                entry = name
+            continue
+        if cur is None:
+            continue
+        s = line.strip()
+        if s == "}":
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        is_root = bool(m.group(1))
+        name, rhs = m.group(2).lstrip("%"), m.group(3)
+        oc = _opcode_of(rhs)
+        if oc is None:
+            continue
+        opcode, pos = oc
+        result_shapes = _SHAPE_RE.findall(rhs[:pos])
+        cur.shapes[name] = result_shapes
+        # operand names: inside the first top-level paren group after opcode
+        paren = rhs.find("(", pos)
+        depth, end = 0, len(rhs)
+        for i in range(paren, len(rhs)):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = [o.lstrip("%") for o in
+                    _OPERAND_RE.findall(rhs[paren:end])]
+        called = []
+        for cm in _CALLED_RE.finditer(rhs):
+            for cname in cm.group(1).split(","):
+                called.append(cname.strip().lstrip("%"))
+        operands = [o for o in operands if o not in called]
+        tm = _TRIP_RE.search(rhs)
+        trip = int(tm.group(1)) if tm else None
+        cur.ops.append(_Op(name, opcode, result_shapes, operands, called,
+                           trip, rhs, is_root))
+    return comps, entry
+
+
+def _dot_flops(op: _Op, table) -> float:
+    result_elems = _shape_elems(op.result_shapes)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.raw)
+    lhs_shapes = table.get(op.operands[0], []) if op.operands else []
+    if not m or not lhs_shapes:
+        return 2.0 * result_elems
+    lhs_dims = [int(x) for x in lhs_shapes[0][1].split(",") if x]
+    contract = 1
+    for idx in (int(x) for x in m.group(1).split(",") if x):
+        if idx < len(lhs_dims):
+            contract *= lhs_dims[idx]
+    return 2.0 * result_elems * contract
+
+
+def _op_cost(op: _Op, table: Dict[str, List[Tuple[str, str]]]) -> OpCost:
+    c = OpCost()
+    res_b = _shape_bytes(op.result_shapes)
+    opnd_shapes = [table.get(o, []) for o in op.operands]
+    opnd_b = sum(_shape_bytes(s) for s in opnd_shapes)
+    base = op.opcode.replace("-start", "")
+    if base in COLLECTIVE_OPS:
+        if op.opcode.endswith("-done"):
+            return c
+        c.bytes = res_b + opnd_b
+        c.coll_bytes[base] = float(opnd_b)
+        c.coll_count[base] = 1
+        return c
+    if op.opcode in _SKIP_OPS or op.opcode in _CALL_OPS:
+        return c
+    if op.opcode == "dot":
+        c.flops = _dot_flops(op, table)
+        c.bytes = res_b + opnd_b
+        return c
+    if op.opcode == "broadcast":
+        c.bytes = res_b  # write-only; reads are tiny
+        return c
+    if op.opcode == "dynamic-slice":
+        idx = sum(_shape_bytes(s) for s in opnd_shapes[1:])
+        c.bytes = 2 * res_b + idx
+        return c
+    if op.opcode == "dynamic-update-slice":
+        upd = _shape_bytes(opnd_shapes[1]) if len(opnd_shapes) > 1 else res_b
+        c.bytes = 2 * upd
+        return c
+    if op.opcode == "gather":
+        idx = _shape_bytes(opnd_shapes[1]) if len(opnd_shapes) > 1 else 0
+        c.bytes = 2 * res_b + idx
+        return c
+    if op.opcode == "scatter":
+        upd = _shape_bytes(opnd_shapes[2]) if len(opnd_shapes) > 2 else res_b
+        c.bytes = 2 * upd + res_b
+        return c
+    # fusion, reduce, sort, custom-call, copy, transpose, pad, convolution...
+    c.bytes = res_b + opnd_b
+    if op.opcode == "convolution":
+        c.flops = 2.0 * _shape_elems(op.result_shapes)  # conservative floor
+    return c
+
+
+def _fusion_bytes(op: _Op, comp: _Computation, child: _Computation) -> float:
+    """Touched-byte model for a fusion op.
+
+    * a parameter consumed via in-body ``dynamic-slice`` is charged at the
+      slice size (loop bodies slicing one layer from a stacked buffer);
+    * a root ``dynamic-update-slice`` writes in place: charge 2x update and
+      drop the aliased full-size operand;
+    * everything else: operand + result bytes.
+    """
+    # map parameter index -> charged bytes override
+    slice_charged: Dict[int, float] = {}
+    param_index: Dict[str, int] = {}
+    for cop in child.ops:
+        if cop.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", cop.raw)
+            if m:
+                param_index[cop.name] = int(m.group(1))
+    for cop in child.ops:
+        if cop.opcode == "dynamic-slice" and cop.operands:
+            src = cop.operands[0]
+            if src in param_index:
+                idx = param_index[src]
+                slice_charged[idx] = slice_charged.get(idx, 0.0) + \
+                    _shape_bytes(cop.result_shapes)
+    root = child.root
+    dus_root = root is not None and root.opcode == "dynamic-update-slice"
+    aliased_param = None
+    upd_bytes = 0.0
+    if dus_root and root.operands:
+        if root.operands[0] in param_index:
+            aliased_param = param_index[root.operands[0]]
+        if len(root.operands) > 1:
+            upd_bytes = _shape_bytes(child.shapes.get(root.operands[1], []))
+
+    total = 0.0
+    for i, name in enumerate(op.operands):
+        if dus_root and i == aliased_param:
+            continue
+        if i in slice_charged:
+            total += slice_charged[i]
+        else:
+            total += _shape_bytes(comp.shapes.get(name, []))
+    if dus_root:
+        total += 2 * upd_bytes
+    else:
+        total += _shape_bytes(op.result_shapes)
+    return total
+
+
+def analyze_hlo(text: str) -> OpCost:
+    """Total loop-aware cost of the entry computation."""
+    comps, entry = parse_module(text)
+    memo: Dict[str, OpCost] = {}
+    visiting: set = set()
+
+    def comp_cost(name: str) -> OpCost:
+        if name in memo:
+            return memo[name]
+        if name in visiting or name not in comps:
+            return OpCost()
+        visiting.add(name)
+        comp = comps[name]
+        total = OpCost()
+        for op in comp.ops:
+            cost = _op_cost(op, comp.shapes)
+            if op.opcode == "fusion" and op.called:
+                child = comps.get(op.called[0])
+                if child:
+                    cost.bytes = _fusion_bytes(op, comp, child)
+            total.add(cost)
+            if op.called:
+                mult = float(op.trip) if (op.opcode == "while" and op.trip) \
+                    else 1.0
+                for child in op.called:
+                    if op.opcode == "fusion":
+                        # fused body: only count dot/conv flops, bytes are
+                        # covered by the fusion op's operands/result
+                        total.flops += comp_cost(child).flops * mult
+                    else:
+                        total.add(comp_cost(child), mult)
+        visiting.discard(name)
+        memo[name] = total
+        return total
+
+    if entry is None:
+        return OpCost()
+    return comp_cost(entry)

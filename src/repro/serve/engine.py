@@ -1,0 +1,63 @@
+"""Batched serving engine: prefill + decode loop with greedy/temperature
+sampling over any zoo model, plus the tiered-KV integration
+(``repro.serve.tiered_kv``) that runs the paper's DRAM-cache mechanism on
+the KV block stream.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model_zoo import Model, pad_cache
+
+
+@dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 = greedy
+    seed: int = 0
+
+
+class Engine:
+    """Simple synchronous batch engine (the serving e2e driver)."""
+
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode)
+
+    def generate(self, batch: Dict[str, jax.Array]) -> Tuple[np.ndarray, Dict]:
+        """batch: prefill inputs (tokens (B,S) + modality extras).
+
+        Returns (generated (B, max_new_tokens), stats).
+        """
+        cfg = self.cfg
+        B, S = batch["tokens"].shape
+        logits, cache = self._prefill(self.params, batch)
+        cache = pad_cache(cache, S + cfg.max_new_tokens)
+        key = jax.random.PRNGKey(cfg.seed)
+        outs = []
+        tok = self._sample(logits, key)
+        outs.append(tok)
+        for t in range(1, cfg.max_new_tokens):
+            db = {"tokens": tok[:, None],
+                  "index": jnp.asarray(S + t - 1, jnp.int32)}
+            logits, cache = self._decode(self.params, cache, db)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+            outs.append(tok)
+        gen = np.stack([np.asarray(t) for t in outs], axis=1)
+        return gen, {"prefill_len": S, "new_tokens": cfg.max_new_tokens}
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / self.cfg.temperature, axis=-1
+        ).astype(jnp.int32)

@@ -1,0 +1,51 @@
+"""MoE expert-weight tiering (DESIGN.md §2c, feature 2).
+
+For pool-scale MoE models (arctic-480b: 128 experts x 35 layers, 960 GB in
+bf16) the full expert set lives in the pooled/"FAM" tier; the HBM fast tier
+holds the hot experts. The *access stream* is the router's top-k history —
+per step, the set of (layer, expert) slabs the batch activated. The same
+TieredBlockPool machinery (set-assoc metadata, SPP on slab-id deltas, DWRR
+demand/prefetch arbitration) serves it: block id = layer * E + expert,
+"page" = one layer's expert row so SPP learns intra-layer expert locality
+(routing is strongly auto-correlated across steps for real workloads).
+
+`gather_experts` returns the fast-tier slabs for a step's routed experts;
+correctness (tier reads == pooled weights) is asserted in
+tests/test_expert_tiering.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FamConfig
+from repro.core.tiering import TieredBlockPool, TierState
+
+
+class ExpertTier:
+    def __init__(self, fam_cfg: FamConfig, num_layers: int, num_experts: int,
+                 slab_elems: int, fast_slabs: int, dtype=jnp.bfloat16):
+        self.L, self.E = num_layers, num_experts
+        self.pool = TieredBlockPool(
+            fam_cfg, num_blocks=num_layers * num_experts,
+            fast_blocks=fast_slabs, block_elems=slab_elems,
+            page_span=num_experts, dtype=dtype)
+
+    def slab_ids(self, layer: jax.Array, experts: jax.Array) -> jax.Array:
+        """(layer scalar, experts (k,)) -> flat slab ids."""
+        return (layer * self.E + experts).astype(jnp.int32)
+
+    def init(self, slow_slabs: jax.Array) -> TierState:
+        return self.pool.init(slow_slabs)
+
+    def gather_experts(self, st: TierState, slow: jax.Array,
+                       layer: jax.Array, experts: jax.Array
+                       ) -> Tuple[TierState, jax.Array]:
+        """Ensure the routed experts' slabs are resident; return their
+        fast-tier contents (k, slab_elems). SPP prefetches the slabs the
+        routing history predicts for upcoming layers/steps."""
+        ids = self.slab_ids(layer, experts)
+        st, slots = self.pool.access(st, slow, ids)
+        return st, self.pool.read(st, slots)

@@ -1,0 +1,104 @@
+"""Tiered paged KV cache: the paper's DRAM-cache prefetching applied to
+decode serving (DESIGN.md §2c, feature 1).
+
+KV for a long context lives as fixed-size token-blocks in a two-tier pool:
+the FAM/pooled tier holds all blocks; the HBM fast tier holds a
+cache of hot blocks managed by ``TieredBlockPool`` (set-assoc LRU metadata,
+SPP prefetcher over the block-id stream, DWRR demand/prefetch arbitration).
+Each decode step:
+
+1. the access pattern = the sequence's block list needed by attention
+   (for full attention that is blocks [0..n]; for windowed attention the
+   trailing window — the SPP prefetcher learns either stream);
+2. ``TieredBlockPool.access`` demand-fills misses, prefetches predictions;
+3. attention reads resident blocks from the fast pool via the Pallas
+   ``paged_attention`` kernel (block table = fast slots).
+
+Correctness property (tested): tiered decode == attention over the raw
+contiguous KV, for any window/length.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FamConfig
+from repro.core.tiering import TieredBlockPool, TierState
+from repro.kernels.paged_attention.kernel import paged_attention
+
+
+@dataclass
+class TieredKVConfig:
+    block_tokens: int = 16          # tokens per KV block ("sub-page block")
+    fast_blocks: int = 64           # HBM cache capacity (blocks)
+    window_blocks: int = 0          # 0 = full attention
+
+
+class TieredKV:
+    """Single-layer tiered KV pool (per kv-head-packed layout).
+
+    Pool block element layout: one block holds ``block_tokens`` tokens of
+    K and V for all kv heads: (2, T, Hkv, D) flattened.
+    """
+
+    def __init__(self, fam_cfg: FamConfig, kv_cfg: TieredKVConfig,
+                 max_blocks: int, kv_heads: int, head_dim: int,
+                 dtype=jnp.float32):
+        self.kv_cfg = kv_cfg
+        self.Hkv, self.D = kv_heads, head_dim
+        self.T = kv_cfg.block_tokens
+        self.elems = 2 * self.T * kv_heads * head_dim
+        self.pool = TieredBlockPool(
+            fam_cfg, num_blocks=max_blocks, fast_blocks=kv_cfg.fast_blocks,
+            block_elems=self.elems, page_span=16, dtype=dtype)
+        self.dtype = dtype
+
+    def pack(self, k: jax.Array, v: jax.Array) -> jax.Array:
+        """k/v: (S, Hkv, D) with S = max_blocks*T -> slow region blocks."""
+        S = k.shape[0]
+        nb = S // self.T
+        kv = jnp.stack([k, v], 0)                     # (2, S, Hkv, D)
+        kv = kv.reshape(2, nb, self.T, self.Hkv, self.D).transpose(1, 0, 2, 3, 4)
+        return kv.reshape(nb, self.elems).astype(self.dtype)
+
+    def init(self, slow_blocks: jax.Array) -> TierState:
+        return self.pool.init(slow_blocks)
+
+    def decode_step(self, st: TierState, slow: jax.Array, q: jax.Array,
+                    length: jax.Array, *, interpret: bool = True
+                    ) -> Tuple[TierState, jax.Array]:
+        """q: (Hq, D) one token's queries; length: () valid tokens.
+
+        Returns (state, attn_out (Hq, D)). Touches the blocks the window
+        needs, then runs paged attention over fast-tier slots.
+        """
+        kvc = self.kv_cfg
+        nb_total = slow.shape[0]
+        n_blocks = (length + self.T - 1) // self.T
+        if kvc.window_blocks:
+            first = jnp.maximum(n_blocks - kvc.window_blocks, 0)
+            count = kvc.window_blocks
+        else:
+            first = jnp.zeros((), jnp.int32)
+            count = nb_total
+        ids = jnp.clip(first + jnp.arange(count), 0, nb_total - 1)
+        live = (first + jnp.arange(count)) < n_blocks
+        ids = jnp.where(live, ids, ids[0])
+        st, slots = self.pool.access(st, slow, ids.astype(jnp.int32))
+
+        # fast region reshaped as a paged pool for the kernel
+        fast = st.fast.reshape(-1, 2, self.T, self.Hkv, self.D)
+        k_pool = fast[:, 0]
+        v_pool = fast[:, 1]
+        table = jnp.where(live, slots, 0)[None]       # (1, count)
+        start = first * self.T
+        eff_len = jnp.where(kvc.window_blocks > 0,
+                            length - start, length)
+        out = paged_attention(q[None], k_pool, v_pool, table,
+                              eff_len[None].astype(jnp.int32),
+                              interpret=interpret)
+        return st, out[0]

@@ -1,0 +1,8 @@
+from repro.train.steps import (  # noqa: F401
+    abstract_train_state,
+    build_decode_step,
+    build_prefill_step,
+    build_train_step,
+    init_train_state,
+)
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

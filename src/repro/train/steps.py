@@ -1,0 +1,119 @@
+"""Step builders: train_step (grad + AdamW, optional microbatch accumulation
+and int8 gradient compression over the pod axis) and serve steps
+(prefill/decode). These are the functions the launcher jits, shards, and the
+dry-run lowers for every (arch x shape x mesh) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import Model
+from repro.optim.adamw import (AdamWConfig, adamw_update, adamw_update_q8,
+                               init_opt_state, init_opt_state_q8)
+from repro.parallel.sharding import ParallelContext
+
+TrainState = Dict[str, Any]  # {"params", "opt", "step"}
+
+
+def init_train_state(model: Model, key, *, optimizer: str = "adamw"
+                     ) -> TrainState:
+    params = model.init(key)
+    init_fn = init_opt_state_q8 if optimizer == "adamw_q8" else init_opt_state
+    return {"params": params, "opt": init_fn(params)}
+
+
+def abstract_train_state(model: Model, key=None, *,
+                         optimizer: str = "adamw") -> TrainState:
+    """Shape-only train state (no allocation) for lower()/compile()."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params = jax.eval_shape(model.init, key)
+    init_fn = init_opt_state_q8 if optimizer == "adamw_q8" else init_opt_state
+    opt = jax.eval_shape(init_fn, params)
+    return {"params": params, "opt": opt}
+
+
+def build_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                     microbatches: int = 1, optimizer: str = "adamw",
+                     accum_dtype=jnp.float32):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    optimizer: "adamw" (fp32 moments) or "adamw_q8" (int8 block-quantized
+    moments, for pool-scale models; see optim/adamw.py).
+    accum_dtype: microbatch gradient-accumulation dtype (bf16 halves the
+    accumulator footprint for the largest archs).
+    """
+    update_fn = adamw_update_q8 if optimizer == "adamw_q8" else adamw_update
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def accumulate(params, batch):
+        """Grad accumulation over leading splits of the batch (scan)."""
+        def split(x):
+            B = x.shape[0]
+            # batch dims that don't start with global_batch (e.g. mrope
+            # positions (3,B,S)) are split on axis 1
+            if x.ndim >= 2 and x.shape[0] == 3 and x.shape[1] % microbatches == 0:
+                return x.reshape((3, microbatches, -1) + x.shape[2:]).swapaxes(0, 1)
+            return x.reshape((microbatches, B // microbatches) + x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                              params)
+
+        def body(carry, mbatch):
+            loss_a, metrics_a, grads_a = carry
+            (loss, metrics), grads = grad_fn(params, mbatch)
+            grads_a = jax.tree.map(
+                lambda a, g: a + (g.astype(accum_dtype) / microbatches),
+                grads_a, grads)
+            return (loss_a + loss / microbatches,
+                    jax.tree.map(lambda a, m: a + m / microbatches,
+                                 metrics_a, metrics),
+                    grads_a), None
+
+        init = (jnp.zeros((), jnp.float32),
+                {"xent": jnp.zeros((), jnp.float32),
+                 "aux": jnp.zeros((), jnp.float32)}, zero_g)
+        (loss, metrics, grads), _ = jax.lax.scan(body, init, mb)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        params = state["params"]
+        if microbatches > 1:
+            loss, metrics, grads = accumulate(params, batch)
+        else:
+            loss, metrics, grads = single(params, batch)
+        new_params, new_opt, opt_metrics = update_fn(
+            opt_cfg, grads, params, state["opt"])
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def build_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+    return prefill_step
+
+
+def build_decode_step(model: Model, *, greedy: bool = True):
+    def serve_step(params, cache, batch):
+        logits, cache = model.decode(params, cache, batch)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return serve_step

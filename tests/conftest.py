@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests must see the single real CPU device (the 512-device override is
+# applied ONLY inside launch/dryrun.py, per the multi-pod dry-run contract).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "float32")

@@ -1,0 +1,231 @@
+"""Unit + property tests for the paper's core mechanisms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FamConfig, fam_replace
+from repro.core import dram_cache as dc
+from repro.core import prefetch_queue as pq
+from repro.core import spp as spp_lib
+from repro.core import wfq
+from repro.core.throttle import init_throttle, maybe_adapt, observe
+
+CFG = FamConfig()
+
+
+# ---------------------------------------------------------------------------
+# SPP
+# ---------------------------------------------------------------------------
+
+def _train_seq(cfg, s, page, blocks):
+    sig = jnp.int32(0)
+    for b in blocks:
+        s, sig = spp_lib.update(cfg, s, jnp.int32(page), jnp.int32(b))
+    return s, sig
+
+
+def test_spp_learns_stride():
+    cfg = CFG
+    s = spp_lib.init_spp(cfg)
+    s, sig = _train_seq(cfg, s, 7, [0, 2, 4, 6, 8, 10])
+    blocks, valid = spp_lib.predict(cfg, s, jnp.int32(7), jnp.int32(10), sig,
+                                    4, bpp=64)
+    got = np.asarray(blocks)[np.asarray(valid)]
+    assert len(got) >= 2
+    np.testing.assert_array_equal(got[:2] % 64, [12, 14])
+
+
+def test_spp_signature_formula():
+    """signature = (sig << 4) ^ delta, masked — matches the paper's example
+    structure (delta updates compound)."""
+    cfg = CFG
+    s = spp_lib.init_spp(cfg)
+    s, sig1 = _train_seq(cfg, s, 3, [1])
+    s, sig2 = _train_seq(cfg, s, 3, [3])      # delta 2
+    mask = (1 << cfg.spp_signature_bits) - 1
+    assert int(sig2) == ((int(sig1) << 4) ^ 2) & mask
+
+
+def test_spp_prediction_stays_in_page():
+    cfg = CFG
+    s = spp_lib.init_spp(cfg)
+    s, sig = _train_seq(cfg, s, 1, [56, 58, 60, 62])
+    blocks, valid = spp_lib.predict(cfg, s, jnp.int32(1), jnp.int32(62), sig,
+                                    4, bpp=64)
+    got = np.asarray(blocks)[np.asarray(valid)]
+    assert all(0 <= b % 64 < 64 for b in got)
+    assert all(b // 64 == 1 for b in got)
+
+
+# ---------------------------------------------------------------------------
+# DRAM cache
+# ---------------------------------------------------------------------------
+
+def test_cache_insert_lookup_lru():
+    st = dc.init_cache(4, 2)
+    st, ev, slot = dc.insert(st, jnp.int32(10))
+    assert int(ev) == -1
+    hit, si, way = dc.lookup(st, jnp.int32(10))
+    assert bool(hit)
+    hit2, _, _ = dc.lookup(st, jnp.int32(11))
+    assert not bool(hit2)
+
+
+def test_cache_lru_eviction_order():
+    st = dc.init_cache(1, 2)  # one set, two ways
+    st, _, _ = dc.insert(st, jnp.int32(1))
+    st, _, _ = dc.insert(st, jnp.int32(2))
+    # touch 1 so 2 becomes LRU
+    hit, si, way = dc.lookup(st, jnp.int32(1))
+    st = dc.touch(st, si, way)
+    st, evicted, _ = dc.insert(st, jnp.int32(3))
+    assert int(evicted) == 2
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_cache_never_duplicates(seed):
+    rng = np.random.default_rng(seed)
+    st_ = dc.init_cache(8, 4)
+    for a in rng.integers(0, 100, 60):
+        st_, _, _ = dc.insert(st_, jnp.int32(int(a)))
+        tags = np.asarray(st_.tags).ravel()
+        tags = tags[tags > 0]
+        assert len(set(tags.tolist())) == len(tags)
+
+
+# ---------------------------------------------------------------------------
+# prefetch queue
+# ---------------------------------------------------------------------------
+
+def test_prefetch_queue_roundtrip():
+    q = pq.init_queue(4)
+    q, ok = pq.try_insert(q, jnp.int32(5), jnp.float32(100.0))
+    assert bool(ok)
+    inflight, fin = pq.contains(q, jnp.int32(5))
+    assert bool(inflight) and float(fin) == 100.0
+    q, blocks, done = pq.complete_until(q, jnp.float32(150.0))
+    assert bool(done.any()) and int(pq.occupancy(q)) == 0
+
+
+def test_prefetch_queue_full_rejects():
+    q = pq.init_queue(2)
+    q, ok1 = pq.try_insert(q, jnp.int32(1), jnp.float32(10.0))
+    q, ok2 = pq.try_insert(q, jnp.int32(2), jnp.float32(10.0))
+    q, ok3 = pq.try_insert(q, jnp.int32(3), jnp.float32(10.0))
+    assert bool(ok1) and bool(ok2) and not bool(ok3)
+
+
+# ---------------------------------------------------------------------------
+# WFQ / DWRR (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("W", [1, 2, 3])
+def test_wfq_ratio_under_saturation(W):
+    """Both queues saturated -> demands:prefetches ~ W:1 in byte-cost terms
+    (prefetch deficit is charged r per issue)."""
+    st_ = wfq.init_wfq()
+    r = 4
+    counts = {wfq.DEMAND: 0, wfq.PREFETCH: 0}
+    for _ in range(3000):
+        st_, c = wfq.issue(st_, jnp.bool_(True), jnp.bool_(True),
+                           weight=W, quantum=1, max_deficit=8, r=r)
+        counts[int(c)] = counts.get(int(c), 0) + 1
+    # cost-weighted service ratio: demands get ~W/(W+1) of issue slots;
+    # prefetches are further limited by the r-deficit charge
+    ratio = counts[wfq.DEMAND] / max(counts[wfq.PREFETCH], 1)
+    assert ratio > W, (W, counts)
+
+
+def test_wfq_work_conserving():
+    """Never IDLE when any queue is non-empty."""
+    st_ = wfq.init_wfq()
+    for i in range(50):
+        st_, c = wfq.issue(st_, jnp.bool_(i % 2 == 0), jnp.bool_(i % 2 == 1),
+                           weight=2, r=4)
+        assert int(c) != wfq.IDLE
+
+
+def test_wfq_prefetch_only_progress():
+    st_ = wfq.init_wfq()
+    served = 0
+    for _ in range(100):
+        st_, c = wfq.issue(st_, jnp.bool_(False), jnp.bool_(True),
+                           weight=3, r=4)
+        served += int(c) == wfq.PREFETCH
+    assert served == 100   # work conservation: all slots serve prefetch
+
+
+# ---------------------------------------------------------------------------
+# throttle (MIMD/RED)
+# ---------------------------------------------------------------------------
+
+def test_throttle_decreases_under_congestion_increases_when_clear():
+    cfg = fam_replace(CFG, sample_interval=4)
+    s = init_throttle(cfg)
+    base = float(s.min_latency)
+    # congested: latency 2x the floor
+    for _ in range(8):
+        s = observe(s, jnp.float32(2.0 * base), jnp.bool_(True),
+                    jnp.bool_(False), jnp.int32(1))
+        s = maybe_adapt(cfg, s)
+    assert float(s.issue_rate) < 1.0
+    low = float(s.issue_rate)
+    # clear: latency at the floor
+    for _ in range(40):
+        s = observe(s, jnp.float32(base), jnp.bool_(True), jnp.bool_(False),
+                    jnp.int32(1))
+        s = maybe_adapt(cfg, s)
+    assert float(s.issue_rate) > low
+
+
+def test_throttle_rate_bounds():
+    cfg = fam_replace(CFG, sample_interval=2)
+    s = init_throttle(cfg)
+    for _ in range(100):
+        s = observe(s, jnp.float32(1e6), jnp.bool_(True), jnp.bool_(False),
+                    jnp.int32(1))
+        s = maybe_adapt(cfg, s)
+    assert cfg.min_issue_rate <= float(s.issue_rate) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# System-level invariants (hypothesis over simulator configs)
+# ---------------------------------------------------------------------------
+
+def test_all_local_beats_fam_configs():
+    """Invariant: the all-local configuration upper-bounds every FAM config
+    (local DRAM is strictly faster than the pooled tier)."""
+    from repro.core.famsim import SimFlags, simulate
+    cfg = CFG
+    wl = ["LU", "canneal"]
+    local = simulate(cfg, SimFlags(all_local=True), wl, T=3000)
+    for fl in (SimFlags(), SimFlags(core_prefetch=False, dram_prefetch=False),
+               SimFlags(wfq=True)):
+        out = simulate(cfg, fl, wl, T=3000)
+        assert (out["ipc"] <= local["ipc"] + 1e-3).all(), fl
+
+
+def test_prefetching_never_breaks_correctness_counters():
+    """Counters stay consistent: hits <= FAM demands, prefetch issue counts
+    are non-negative, hit fractions in [0, 1]."""
+    from repro.core.famsim import SimFlags, simulate
+    out = simulate(CFG, SimFlags(bw_adapt=True), ["bfs", "mg"], T=4000)
+    assert (out["demand_hit_fraction"] >= 0).all()
+    assert (out["demand_hit_fraction"] <= 1).all()
+    assert (out["corepf_hit_fraction"] <= 1).all()
+    assert (out["prefetches_issued"] >= 0).all()
+    assert (out["issue_rate"] >= CFG.min_issue_rate - 1e-6).all()
+
+
+def test_single_node_prefetch_gain_positive_on_streams():
+    """On a streaming workload with no contention, DRAM-cache prefetching
+    must help (the paper's 1-node result)."""
+    from repro.core.famsim import SimFlags, simulate
+    base = simulate(CFG, SimFlags(core_prefetch=False, dram_prefetch=False),
+                    ["603.bwaves_s"], T=6000)
+    pf = simulate(CFG, SimFlags(), ["603.bwaves_s"], T=6000)
+    assert pf["ipc"][0] > base["ipc"][0] * 1.1
+    assert pf["fam_latency"][0] < base["fam_latency"][0]

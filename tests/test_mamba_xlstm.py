@@ -1,0 +1,135 @@
+"""Recurrent-core oracles: chunked SSD vs naive sequential recurrence, and
+mLSTM/sLSTM state-passing invariants (split-sequence == full-sequence)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models import mamba2, xlstm
+
+
+def _naive_ssd(x, dt, A, B_, C_):
+    """Step-by-step SSM recurrence oracle (fp64-ish via fp32)."""
+    Bb, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    h = np.zeros((Bb, H, P, N), np.float32)
+    ys = np.zeros((Bb, S, H, P), np.float32)
+    x, dt, B_, C_ = map(lambda t: np.asarray(t, np.float32), (x, dt, B_, C_))
+    A = np.asarray(A, np.float32)
+    for t in range(S):
+        Bh = np.repeat(B_[:, t], rep, axis=1)       # (B,H,N)
+        Ch = np.repeat(C_[:, t], rep, axis=1)
+        dec = np.exp(dt[:, t] * A)                  # (B,H)
+        xin = x[:, t] * dt[:, t][..., None]         # (B,H,P)
+        h = dec[..., None, None] * h + np.einsum("bhp,bhn->bhpn", xin, Bh)
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", h, Ch)
+    return ys, h
+
+
+def test_ssd_chunked_matches_naive():
+    cfg = get_config("zamba2-2.7b-smoke")
+    s = cfg.ssm
+    Bb, S, H, P = 2, 32, s.n_heads(cfg.d_model), s.head_dim
+    G, N = s.n_groups, s.d_state
+    k = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(k[0], (Bb, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(k[1], (Bb, S, H))) * 0.5
+    A = -jnp.exp(jax.random.normal(k[2], (H,)) * 0.3)
+    B_ = jax.random.normal(k[3], (Bb, S, G, N), jnp.float32) * 0.5
+    C_ = jax.random.normal(k[0], (Bb, S, G, N), jnp.float32) * 0.5
+    y, h = mamba2.ssd(cfg, x, dt, A, B_, C_)
+    y_ref, h_ref = _naive_ssd(x, dt, A, B_, C_)
+    np.testing.assert_allclose(np.asarray(y, np.float32), y_ref,
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), h_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_state_passing_split_equals_full():
+    """Running two halves with carried state == one full pass."""
+    cfg = get_config("zamba2-2.7b-smoke")
+    m = mamba2.init_mamba2(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.float32)
+    y_full, st_full = mamba2.apply_mamba2(cfg, m, x)
+    st0 = mamba2.init_mamba_state(cfg, 2)
+    y1, st1 = mamba2.apply_mamba2(cfg, m, x[:, :16], st0)
+    y2, st2 = mamba2.apply_mamba2(cfg, m, x[:, 16:], st1)
+    np.testing.assert_allclose(np.asarray(y_full[:, :16], np.float32),
+                               np.asarray(y1, np.float32), rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(y_full[:, 16:], np.float32),
+                               np.asarray(y2, np.float32), rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(st_full["ssm"]),
+                               np.asarray(st2["ssm"]), rtol=5e-3, atol=5e-3)
+
+
+def test_mlstm_state_passing():
+    cfg = get_config("xlstm-350m-smoke")
+    p = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model),
+                          jnp.float32)
+    y_full, st_f = xlstm.apply_mlstm(cfg, p, x)
+    y1, st1 = xlstm.apply_mlstm(cfg, p, x[:, :12])
+    y2, st2 = xlstm.apply_mlstm(cfg, p, x[:, 12:], st1)
+    np.testing.assert_allclose(np.asarray(y_full[:, 12:], np.float32),
+                               np.asarray(y2, np.float32), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st_f["C"]), np.asarray(st2["C"]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_slstm_state_passing():
+    cfg = get_config("xlstm-350m-smoke")
+    p = xlstm.init_slstm(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model),
+                          jnp.float32)
+    y_full, st_f = xlstm.apply_slstm(cfg, p, x)
+    y1, st1 = xlstm.apply_slstm(cfg, p, x[:, :12])
+    y2, st2 = xlstm.apply_slstm(cfg, p, x[:, 12:], st1)
+    np.testing.assert_allclose(np.asarray(y_full[:, 12:], np.float32),
+                               np.asarray(y2, np.float32), rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_long_sequence_stable():
+    """Exponential gating must not overflow on long sequences."""
+    cfg = get_config("xlstm-350m-smoke")
+    p = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg)
+    x = 5.0 * jax.random.normal(jax.random.PRNGKey(1), (1, 512, cfg.d_model))
+    y, st = xlstm.apply_mlstm(cfg, p, x)
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    assert np.isfinite(np.asarray(st["C"])).all()
+
+
+def test_mlstm_chunked_equals_sequential():
+    """§Perf variant: chunked-parallel mLSTM is exactly the sequential cell."""
+    import dataclasses
+    cfg = get_config("xlstm-350m-smoke")
+    cfgc = dataclasses.replace(
+        cfg, xlstm=dataclasses.replace(cfg.xlstm, chunk=8,
+                                       parallel_mlstm=True))
+    p = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.float32)
+    y_seq, st_seq = xlstm.apply_mlstm(cfg, p, x)
+    y_chk, st_chk = xlstm.apply_mlstm_chunked(cfgc, p, x)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_seq),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_chk["C"]),
+                               np.asarray(st_seq["C"]), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_chk["m"]),
+                               np.asarray(st_seq["m"]), rtol=1e-4, atol=1e-4)
+
+
+def test_mlstm_chunked_state_passing():
+    import dataclasses
+    cfg0 = get_config("xlstm-350m-smoke")
+    cfg = dataclasses.replace(
+        cfg0, xlstm=dataclasses.replace(cfg0.xlstm, chunk=8,
+                                        parallel_mlstm=True))
+    p = xlstm.init_mlstm(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.float32)
+    y_full, st_f = xlstm.apply_mlstm_chunked(cfg, p, x)
+    y1, st1 = xlstm.apply_mlstm_chunked(cfg, p, x[:, :16])
+    y2, st2 = xlstm.apply_mlstm_chunked(cfg, p, x[:, 16:], st1)
+    np.testing.assert_allclose(np.asarray(y_full[:, 16:]), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)

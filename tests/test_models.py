@@ -1,0 +1,187 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + no NaNs; plus the decode==teacher-forcing
+consistency property for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models import build_model
+from repro.models.model_zoo import pad_cache
+from repro.parallel import single_device_context
+
+
+def make_batch(cfg, B, S, key=0):
+    tokens = jax.random.randint(jax.random.PRNGKey(key), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.position == "mrope":
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32), (3, B, S))
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(key + 1),
+            (B, cfg.encoder_seq, cfg.d_model)).astype(jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch + "-smoke")
+    ctx = single_device_context(remat="none")
+    m = build_model(cfg, ctx)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 16)
+
+    def loss_fn(p):
+        loss, metrics = m.loss(p, batch)
+        return loss
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss))
+    # target loss near ln(vocab) at init
+    assert 0.5 * np.log(cfg.vocab_size) < float(loss) < 3.0 * np.log(cfg.vocab_size)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes(arch):
+    cfg = get_config(arch + "-smoke")
+    m = build_model(cfg, None)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+    logits, cache = jax.jit(m.prefill)(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_teacher_forcing(arch):
+    """prefill + step-by-step decode logits == full forward logits."""
+    cfg = get_config(arch + "-smoke")
+    m = build_model(cfg, None)
+    params = m.init(jax.random.PRNGKey(1))
+    B, S, PRE = 2, 12, 6
+    batch = make_batch(cfg, B, S, key=2)
+    tokens = batch["tokens"]
+
+    if cfg.xlstm is not None:
+        from repro.models import xlstm as X
+        full, _, _ = X.xlstm_forward(cfg, None, params, tokens)
+    elif cfg.ssm is not None:
+        from repro.models import zamba as Z
+        full, _, _ = Z.zamba_forward(cfg, None, params, tokens)
+    elif cfg.is_encoder_decoder:
+        from repro.models import encdec as E
+        full, _ = E.forward(cfg, None, params, tokens, batch["frames"])
+    else:
+        from repro.models import transformer as T
+        full, _ = T.forward(cfg, None, params, tokens, batch.get("positions"))
+    full = full.astype(jnp.float32)
+
+    pb = {"tokens": tokens[:, :PRE]}
+    if cfg.position == "mrope":
+        pb["positions"] = batch["positions"][:, :, :PRE]
+    if cfg.is_encoder_decoder:
+        pb["frames"] = batch["frames"]
+    logits, cache = m.prefill(params, pb)
+    cache = pad_cache(cache, S)
+    scale = float(jnp.max(jnp.abs(full))) + 1e-3
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(full[:, PRE - 1], np.float32),
+                               atol=0.05 * scale, rtol=0.05)
+    for t in range(PRE, S):
+        db = {"tokens": tokens[:, t:t + 1], "index": jnp.asarray(t, jnp.int32)}
+        logits, cache = m.decode(params, cache, db)
+        np.testing.assert_allclose(np.asarray(logits, np.float32),
+                                   np.asarray(full[:, t], np.float32),
+                                   atol=0.05 * scale, rtol=0.05)
+
+
+def test_param_counts_match_published():
+    expected = {
+        "yi-9b": 8.8e9, "gemma-2b": 2.5e9, "internlm2-20b": 19.9e9,
+        "granite-3-2b": 2.5e9, "granite-moe-1b-a400m": 1.3e9,
+        "arctic-480b": 477e9, "zamba2-2.7b": 2.4e9, "xlstm-350m": 0.25e9,
+        "qwen2-vl-72b": 72.7e9, "whisper-base": 0.07e9,
+    }
+    for arch, want in expected.items():
+        got = get_config(arch).param_count()
+        assert abs(got - want) / want < 0.15, (arch, got, want)
+
+
+def test_smoke_param_count_matches_init():
+    """Analytic param_count() agrees with actual init sizes (reduced cfgs)."""
+    for arch in ("yi-9b", "granite-moe-1b-a400m", "zamba2-2.7b"):
+        cfg = get_config(arch + "-smoke")
+        m = build_model(cfg, None)
+        params = m.init(jax.random.PRNGKey(0))
+        n = sum(x.size for x in jax.tree.leaves(params))
+        pred = cfg.param_count()
+        assert abs(n - pred) / n < 0.25, (arch, n, pred)
+
+
+def test_buffered_decode_matches_plain():
+    """§Perf variant (qwen2 decode cell): read-only cache + write buffer
+    decode == standard in-place-cache decode."""
+    from repro.models import transformer as T
+
+    cfg = get_config("qwen2-vl-72b-smoke")
+    m = build_model(cfg, None)
+    params = m.init(jax.random.PRNGKey(0))
+    B, PRE, W, STEPS = 2, 8, 4, 4
+    S = PRE + W
+    batch = make_batch(cfg, B, S, key=3)
+    tokens = batch["tokens"]
+
+    # standard path
+    pb = {"tokens": tokens[:, :PRE],
+          "positions": batch["positions"][:, :, :PRE]}
+    logits0, cache = m.prefill(params, pb)
+    from repro.models.model_zoo import pad_cache
+    cache_std = pad_cache(cache, S)
+    outs_std = []
+    for t in range(PRE, PRE + STEPS):
+        db = {"tokens": tokens[:, t:t + 1], "index": jnp.asarray(t, jnp.int32)}
+        lg, cache_std = m.decode(params, cache_std, db)
+        outs_std.append(np.asarray(lg, np.float32))
+
+    # buffered path: cache read-only at PRE tokens + fresh write buffer
+    cache_ro = pad_cache(cache, S)
+    buffer = T.init_kv_buffer(cfg, B, W)
+    outs_buf = []
+    for i, t in enumerate(range(PRE, PRE + STEPS)):
+        lg, buffer = T.decode_step_buffered(
+            cfg, None, params, cache_ro, buffer, tokens[:, t:t + 1],
+            jnp.asarray(PRE, jnp.int32), jnp.asarray(i, jnp.int32))
+        outs_buf.append(np.asarray(lg, np.float32))
+
+    for a, b in zip(outs_std, outs_buf):
+        np.testing.assert_allclose(b, a, rtol=0.05,
+                                   atol=0.05 * np.abs(a).max())
+
+    # flush then verify the merged cache equals the standard cache contents
+    merged = T.flush_buffer(cfg, {"k": cache_ro["k"], "v": cache_ro["v"]},
+                            buffer, jnp.asarray(PRE, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(merged["k"][:, :, :PRE + STEPS], np.float32),
+        np.asarray(cache_std["k"][:, :, :PRE + STEPS], np.float32),
+        rtol=0.05, atol=0.05)
+
+
+def test_grouped_attention_schedule_exact():
+    """§Perf: triangular group schedule == rectangular chunked attention."""
+    from repro.models import attention as A
+    cfg = get_config("yi-9b-smoke")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, D = 2, 64, cfg.head_dim
+    q = jax.random.normal(ks[0], (B, S, cfg.num_heads, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, cfg.num_kv_heads, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, cfg.num_kv_heads, D), jnp.float32)
+    ref = A.attend_chunked(cfg, q, k, v, causal=True, chunk=8)
+    got = A.attend_grouped(cfg, q, k, v, chunk=8, groups=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
