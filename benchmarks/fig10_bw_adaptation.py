@@ -4,22 +4,31 @@ prefetch bandwidth adaptation, on 1/2/4-node systems (same-app copies).
 Paper claims (geomeans): core-pf IPC gain 1.20/1.18/1.10 for 1/2/4 nodes;
 +DRAM prefetch -> 1.26/1.24/1.11; BW adaptation adds +4%/+8% at 2/4 nodes;
 FAM latency -29%/-34% (1/2 nodes); prefetches issued -18%/-21% (2/4 nodes).
+
+All four prefetch configs are dynamic flags, so the sweep engine runs ONE
+compile per node count (the node count sets the vmapped system width).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import (ADAPT, BASELINE, CORE, DRAM, FamConfig,
-                               copies, geomean, run_sim, save_rows,
-                               workloads)
+                               Point, copies, geomean, run_points,
+                               save_rows, workloads)
 
 T = 10_000
 NODE_COUNTS = (1, 2, 4)
+VARIANTS = {"base": BASELINE, "core": CORE, "dram": DRAM, "adapt": ADAPT}
 
 
 def run(quick: bool = True):
     wls = workloads(quick)
     cfg = FamConfig()
+    points = [Point(cfg, fl, tuple(copies(w, n)))
+              for n in NODE_COUNTS for w in wls for fl in VARIANTS.values()]
+    results, info = run_points(points, T)
+    res = dict(zip(points, results))
+
     rows = []
     per_wl_4node = {}
     for n in NODE_COUNTS:
@@ -27,36 +36,28 @@ def run(quick: bool = True):
         rel_lat = {k: [] for k in ("core", "dram", "adapt")}
         rel_pf = []
         hits = {"demand": [], "corepf": [], "demand_ad": [], "corepf_ad": []}
-        wall = 0.0
         for w in wls:
-            nodes = copies(w, n)
-            base, d0 = run_sim(cfg, BASELINE, nodes, T)
-            core, d1 = run_sim(cfg, CORE, nodes, T)
-            dram, d2 = run_sim(cfg, DRAM, nodes, T)
-            adpt, d3 = run_sim(cfg, ADAPT, nodes, T)
-            wall += d0 + d1 + d2 + d3
-            b_ipc = np.maximum(base["ipc"].mean(), 1e-9)
-            b_lat = np.maximum(base["fam_latency"].mean(), 1e-9)
-            agg["core"].append(core["ipc"].mean() / b_ipc)
-            agg["dram"].append(dram["ipc"].mean() / b_ipc)
-            agg["adapt"].append(adpt["ipc"].mean() / b_ipc)
-            rel_lat["core"].append(core["fam_latency"].mean() / b_lat)
-            rel_lat["dram"].append(dram["fam_latency"].mean() / b_lat)
-            rel_lat["adapt"].append(adpt["fam_latency"].mean() / b_lat)
-            rel_pf.append(adpt["prefetches_issued"].sum() /
-                          max(dram["prefetches_issued"].sum(), 1.0))
-            hits["demand"].append(dram["demand_hit_fraction"].mean())
-            hits["corepf"].append(dram["corepf_hit_fraction"].mean())
-            hits["demand_ad"].append(adpt["demand_hit_fraction"].mean())
-            hits["corepf_ad"].append(adpt["corepf_hit_fraction"].mean())
+            nodes = tuple(copies(w, n))
+            out = {k: res[Point(cfg, fl, nodes)]
+                   for k, fl in VARIANTS.items()}
+            b_ipc = np.maximum(out["base"]["ipc"].mean(), 1e-9)
+            b_lat = np.maximum(out["base"]["fam_latency"].mean(), 1e-9)
+            for k in ("core", "dram", "adapt"):
+                agg[k].append(out[k]["ipc"].mean() / b_ipc)
+                rel_lat[k].append(out[k]["fam_latency"].mean() / b_lat)
+            rel_pf.append(out["adapt"]["prefetches_issued"].sum() /
+                          max(out["dram"]["prefetches_issued"].sum(), 1.0))
+            hits["demand"].append(out["dram"]["demand_hit_fraction"].mean())
+            hits["corepf"].append(out["dram"]["corepf_hit_fraction"].mean())
+            hits["demand_ad"].append(out["adapt"]["demand_hit_fraction"].mean())
+            hits["corepf_ad"].append(out["adapt"]["corepf_hit_fraction"].mean())
             if n == 4:
                 per_wl_4node[w] = {
-                    "core": float(core["ipc"].mean() / b_ipc),
-                    "dram": float(dram["ipc"].mean() / b_ipc),
-                    "adapt": float(adpt["ipc"].mean() / b_ipc)}
+                    k: float(out[k]["ipc"].mean() / b_ipc)
+                    for k in ("core", "dram", "adapt")}
         rows.append({
             "name": f"fig10_nodes{n}",
-            "us_per_call": wall / (4 * len(wls) * T * n) * 1e6,
+            "us_per_call": info.us_per_call(),
             "derived": (f"core={geomean(agg['core']):.3f};"
                         f"dram={geomean(agg['dram']):.3f};"
                         f"adapt={geomean(agg['adapt']):.3f};"
@@ -70,5 +71,8 @@ def run(quick: bool = True):
     rows.append({"name": "fig11_per_workload_4node", "us_per_call": 0.0,
                  "derived": "see per_workload field",
                  "per_workload": per_wl_4node})
+    rows.append({"name": "fig10_engine", "us_per_call": info.us_per_call(),
+                 "derived": f"groups={info.planned_groups}",
+                 "engine": info.as_dict()})
     save_rows("fig10_bw_adaptation", rows)
     return rows

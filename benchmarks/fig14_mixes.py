@@ -3,13 +3,16 @@
 Paper claims: across 7 mixes, BW adaptation and WFQ give ~+10% and ~+9%
 IPC over the non-adaptive (FIFO) prefetcher on average; the winner
 depends on the co-running mix.
+
+All six configs (baseline + 5 prefetch variants) are dynamic flags, so the
+whole figure runs in ONE compile (mixes x configs vmapped together).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import (ADAPT, BASELINE, CORE, DRAM, WFQ, FamConfig,
-                               geomean, run_sim, save_rows)
+                               Point, geomean, run_points, save_rows)
 
 T = 10_000
 
@@ -30,28 +33,34 @@ CONFIGS = {"core": CORE, "fifo": DRAM, "adapt": ADAPT,
 def run(quick: bool = True):
     cfg = FamConfig()
     mixes = dict(list(MIXES.items())[:4]) if quick else MIXES
+    points = [Point(cfg, fl, tuple(wls))
+              for wls in mixes.values()
+              for fl in (BASELINE, *CONFIGS.values())]
+    results, info = run_points(points, T)
+    res = dict(zip(points, results))
+
     rows = []
     adapt_over_fifo, wfq_over_fifo = [], []
     for mix, wls in mixes.items():
-        base, d0 = run_sim(cfg, BASELINE, wls, T)
-        b_ipc = np.maximum(base["ipc"], 1e-9)
-        res, wall = {}, d0
-        for cname, fl in CONFIGS.items():
-            out, dt = run_sim(cfg, fl, wls, T)
-            wall += dt
-            res[cname] = geomean(out["ipc"] / b_ipc)
-        adapt_over_fifo.append(res["adapt"] / res["fifo"])
-        wfq_over_fifo.append(res["wfq2"] / res["fifo"])
+        nodes = tuple(wls)
+        b_ipc = np.maximum(res[Point(cfg, BASELINE, nodes)]["ipc"], 1e-9)
+        r = {cname: geomean(res[Point(cfg, fl, nodes)]["ipc"] / b_ipc)
+             for cname, fl in CONFIGS.items()}
+        adapt_over_fifo.append(r["adapt"] / r["fifo"])
+        wfq_over_fifo.append(r["wfq2"] / r["fifo"])
         rows.append({
             "name": f"fig14_{mix}",
-            "us_per_call": wall / (6 * len(wls) * T) * 1e6,
-            "derived": ";".join(f"{k}={v:.3f}" for k, v in res.items()),
-            "mix": wls, **{f"ipc_gain_{k}": v for k, v in res.items()},
+            "us_per_call": info.us_per_call(),
+            "derived": ";".join(f"{k}={v:.3f}" for k, v in r.items()),
+            "mix": wls, **{f"ipc_gain_{k}": v for k, v in r.items()},
         })
     rows.append({
         "name": "fig14_summary", "us_per_call": 0.0,
         "derived": (f"adapt_vs_fifo={np.mean(adapt_over_fifo):.3f};"
                     f"wfq2_vs_fifo={np.mean(wfq_over_fifo):.3f}"),
     })
+    rows.append({"name": "fig14_engine", "us_per_call": info.us_per_call(),
+                 "derived": f"groups={info.planned_groups}",
+                 "engine": info.as_dict()})
     save_rows("fig14_mixes", rows)
     return rows

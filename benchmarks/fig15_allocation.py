@@ -4,43 +4,59 @@
 Paper claims: with core-pf only, IPC decrement grows from ~10% (ratio 1) to
 ~28% (ratio 8); DRAM prefetch recovers ~5-6% across ratios; the adaptive
 variants matter most at high ratios.
+
+The allocation ratio is a dynamic parameter, so the ENTIRE figure — every
+ratio x config x workload — runs under a single compile.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (ADAPT, CORE, DRAM, WFQ, FamConfig, copies,
-                               fam_replace, geomean, run_sim, save_rows,
-                               workloads)
+from benchmarks.common import (ADAPT, CORE, DRAM, WFQ, FamConfig, Point,
+                               copies, fam_replace, geomean, run_points,
+                               save_rows, workloads)
 from repro.core.famsim import SimFlags
 
 T = 10_000
 RATIOS = (1, 2, 4, 8)
+LOCAL = SimFlags(all_local=True)
+VARIANTS = (("core", CORE), ("dram", DRAM), ("adapt", ADAPT),
+            ("wfq2", WFQ(2)))
 
 
 def run(quick: bool = True):
     wls = workloads(quick)[:4] if quick else workloads(False)
+    points = []
+    for ratio in RATIOS:
+        cfg = fam_replace(FamConfig(), allocation_ratio=ratio)
+        for w in wls:
+            nodes = tuple(copies(w, 4))
+            points.append(Point(cfg, LOCAL, nodes))
+            points.extend(Point(cfg, fl, nodes) for _, fl in VARIANTS)
+    results, info = run_points(points, T)
+    res = dict(zip(points, results))
+
     rows = []
     for ratio in RATIOS:
         cfg = fam_replace(FamConfig(), allocation_ratio=ratio)
-        res = {k: [] for k in ("core", "dram", "adapt", "wfq2")}
-        wall = 0.0
+        agg = {k: [] for k, _ in VARIANTS}
         for w in wls:
-            nodes = copies(w, 4)
-            local, d0 = run_sim(cfg, SimFlags(all_local=True), nodes, T)
-            l_ipc = np.maximum(local["ipc"].mean(), 1e-9)
-            for key, fl in (("core", CORE), ("dram", DRAM),
-                            ("adapt", ADAPT), ("wfq2", WFQ(2))):
-                out, dt = run_sim(cfg, fl, nodes, T)
-                wall += dt
-                res[key].append(out["ipc"].mean() / l_ipc)
+            nodes = tuple(copies(w, 4))
+            l_ipc = np.maximum(res[Point(cfg, LOCAL, nodes)]["ipc"].mean(),
+                               1e-9)
+            for key, fl in VARIANTS:
+                agg[key].append(res[Point(cfg, fl, nodes)]["ipc"].mean() /
+                                l_ipc)
         rows.append({
             "name": f"fig15_ratio{ratio}",
-            "us_per_call": wall / (4 * len(wls) * T * 4) * 1e6,
+            "us_per_call": info.us_per_call(),
             "derived": ";".join(f"{k}={geomean(v):.3f}"
-                                for k, v in res.items()),
+                                for k, v in agg.items()),
             "ratio": ratio,
-            **{f"ipc_vs_all_local_{k}": geomean(v) for k, v in res.items()},
+            **{f"ipc_vs_all_local_{k}": geomean(v) for k, v in agg.items()},
         })
+    rows.append({"name": "fig15_engine", "us_per_call": info.us_per_call(),
+                 "derived": f"groups={info.planned_groups}",
+                 "engine": info.as_dict()})
     save_rows("fig15_allocation", rows)
     return rows

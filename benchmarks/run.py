@@ -7,8 +7,12 @@ per figure (slow); default is the quick representative subset.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
+
+# allow `python benchmarks/run.py` (script path on sys.path, repo root not)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:

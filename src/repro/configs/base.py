@@ -346,6 +346,19 @@ class FamConfig:
         """Cycles of FAM DDR occupancy to move `nbytes`."""
         return nbytes / (self.fam_bw_gbps / self.clock_ghz)  # bytes / (B/cycle)
 
+    def static_shape(self) -> Tuple:
+        """The compile-relevant (shape-deciding) subset of this config.
+
+        Two configs with equal ``static_shape()`` can share one compiled
+        simulator: everything else is carried as a traced ``FamParams``
+        scalar (see ``repro.core.fam_params``). ``block_bytes`` is static
+        because it sets the cache geometry and the page/block bit split.
+        """
+        return (self.num_sets, self.cache_ways, self.prefetch_queue,
+                self.prefetch_degree, self.block_bytes,
+                self.spp_signature_bits, self.spp_pattern_entries,
+                self.spp_signature_entries, self.spp_max_lookahead)
+
     def cxl_transfer_cycles(self, nbytes: int) -> float:
         flits = -(-max(nbytes, 28) // self.cxl_flit_bytes)
         return flits * self.cxl_flit_bytes / (self.cxl_bw_gbps / self.clock_ghz)

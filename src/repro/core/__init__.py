@@ -1,2 +1,4 @@
-from repro.core.famsim import SimFlags, build_sim, simulate  # noqa: F401
+from repro.core.fam_params import FamParams, stack_params  # noqa: F401
+from repro.core.famsim import (SimFlags, build_sim, build_sweep,  # noqa: F401
+                               simulate, sweep)
 from repro.core.tiering import TieredBlockPool, TierState  # noqa: F401

@@ -39,7 +39,7 @@ def service_chain(arrivals: jax.Array, service: jax.Array, valid: jax.Array,
     service = jnp.where(valid, service, 0.0)
     arr = jnp.where(valid, arrivals, -jnp.inf)
     cs = jnp.cumsum(service)
-    base = jnp.maximum(jnp.maximum.accumulate(arr - (cs - service)), busy0)
+    base = jnp.maximum(jax.lax.cummax(arr - (cs - service)), busy0)
     finish = cs + base
     new_busy = jnp.max(jnp.where(valid, finish, busy0))
     return finish, jnp.maximum(new_busy, busy0)
@@ -51,41 +51,50 @@ class FamTimings(NamedTuple):
     new_busy: jax.Array          # (2,) [demand_chain, prefetch_chain]
 
 
-def arbitrate(cfg: FamConfig, busy0: jax.Array,
+def arbitrate(cfg, busy0: jax.Array,
               d_arr, d_valid, d_bytes, p_arr, p_valid, p_bytes, *,
-              use_wfq: bool, weight: int) -> FamTimings:
+              use_wfq, weight) -> FamTimings:
     """Time one step's arrivals through the DDR service model.
 
     busy0: (2,) chain state [demand, prefetch] (equal in FIFO mode).
     Within a class, requests are served in arrival (FIFO) order.
+
+    ``cfg`` may be a static :class:`FamConfig` or a traced ``FamParams``;
+    ``use_wfq``/``weight`` may be traced scalars, in which case both
+    disciplines are evaluated and selected per element (this is what lets
+    FIFO and WFQ sweep points share one compiled simulator — with a
+    concrete python bool the dead branch constant-folds away in XLA).
     """
     ND, NP = d_arr.shape[0], p_arr.shape[0]
     d_service = cfg.fam_service_cycles(1) * d_bytes
     p_service = cfg.fam_service_cycles(1) * p_bytes
+    use_wfq = jnp.asarray(use_wfq)
 
-    if use_wfq:
-        W = float(weight)
-        d_busy0, p_busy0 = busy0[0], busy0[1]
-        # demand chain: slowed to its W/(W+1) share while prefetch backlogged
-        f_d = jnp.where(p_busy0 > d_arr, (W + 1.0) / W, 1.0)
-        d_fin, d_busy = service_chain(d_arr, d_service * f_d, d_valid,
+    # --- WFQ: fluid two-class DWRR, one service chain per class
+    W = jnp.asarray(weight, jnp.float32)
+    d_busy0, p_busy0 = busy0[0], busy0[1]
+    # demand chain: slowed to its W/(W+1) share while prefetch backlogged
+    f_d = jnp.where(p_busy0 > d_arr, (W + 1.0) / W, 1.0)
+    w_d_fin, w_d_busy = service_chain(d_arr, d_service * f_d, d_valid,
                                       d_busy0)
-        # prefetch chain: gets the 1/(W+1) share while demands backlogged
-        f_p = jnp.where(d_busy0 > p_arr, W + 1.0, 1.0)
-        p_fin, p_busy = service_chain(p_arr, p_service * f_p, p_valid,
+    # prefetch chain: gets the 1/(W+1) share while demands backlogged
+    f_p = jnp.where(d_busy0 > p_arr, W + 1.0, 1.0)
+    w_p_fin, w_p_busy = service_chain(p_arr, p_service * f_p, p_valid,
                                       p_busy0)
-        new_busy = jnp.stack([d_busy, p_busy])
-    else:
-        # FIFO: single queue in arrival order (prefetches delay demands)
-        arr_k = jnp.concatenate([d_arr, p_arr])
-        srv_k = jnp.concatenate([d_service, p_service])
-        val_k = jnp.concatenate([d_valid, p_valid])
-        order = jnp.argsort(jnp.where(val_k, arr_k, jnp.inf), stable=True)
-        finish_o, busy = service_chain(arr_k[order], srv_k[order],
-                                       val_k[order], busy0[0])
-        finish_k = jnp.zeros((ND + NP,), jnp.float32).at[order].set(finish_o)
-        d_fin, p_fin = finish_k[:ND], finish_k[ND:]
-        new_busy = jnp.stack([busy, busy])
+
+    # --- FIFO: single queue in arrival order (prefetches delay demands)
+    arr_k = jnp.concatenate([d_arr, p_arr])
+    srv_k = jnp.concatenate([d_service, p_service])
+    val_k = jnp.concatenate([d_valid, p_valid])
+    order = jnp.argsort(jnp.where(val_k, arr_k, jnp.inf), stable=True)
+    finish_o, busy = service_chain(arr_k[order], srv_k[order],
+                                   val_k[order], busy0[0])
+    finish_k = jnp.zeros((ND + NP,), jnp.float32).at[order].set(finish_o)
+
+    d_fin = jnp.where(use_wfq, w_d_fin, finish_k[:ND])
+    p_fin = jnp.where(use_wfq, w_p_fin, finish_k[ND:])
+    new_busy = jnp.where(use_wfq, jnp.stack([w_d_busy, w_p_busy]),
+                         jnp.stack([busy, busy]))
 
     lat_fixed = cfg.fam_mem_latency + cfg.cxl_min_latency_cycles
     d_fin = jnp.where(d_valid, d_fin + lat_fixed, 0.0)

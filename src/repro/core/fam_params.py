@@ -1,0 +1,117 @@
+"""Dynamic simulator parameters — the traced half of :class:`FamConfig`.
+
+The simulator's configuration splits into two kinds of parameter:
+
+* **static shape parameters** (stay on ``FamConfig``): set counts, table
+  entries, queue sizes, prefetch degrees, block size — anything that decides
+  an array shape or a bit-width. Changing one forces a recompile.
+* **dynamic parameters** (:class:`FamParams`): latencies, bandwidths,
+  thresholds, weights, the allocation ratio, and the feature flags. These
+  are plain scalars threaded through the simulator as traced values, so a
+  whole sweep over them (plus its baseline!) runs under ONE jit compile,
+  and ``jax.vmap`` batches independent simulated systems.
+
+``FamParams`` deliberately mirrors the ``FamConfig`` attribute names it
+replaces (``fam_mem_latency``, ``cxl_min_latency_cycles``,
+``fam_service_cycles(nbytes)``, ...) so downstream modules (throttle,
+fam_controller) accept either object unchanged.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FamConfig
+
+
+class FamParams(NamedTuple):
+    """Per-system dynamic scalars. Leaves are jnp scalars — or, after
+    :func:`stack_params`, arrays with a leading sweep axis for ``vmap``."""
+
+    # core / memory timing
+    base_ipc: jax.Array
+    mlp: jax.Array
+    cores_per_node: jax.Array
+    llc_latency: jax.Array
+    local_mem_latency: jax.Array
+    fam_mem_latency: jax.Array
+    cxl_min_latency_cycles: jax.Array
+    fam_cycles_per_byte: jax.Array     # DDR occupancy per byte moved
+    demand_bytes: jax.Array
+    block_bytes: jax.Array             # service-size copy; shapes use the
+                                       # static FamConfig.block_bytes
+    # prefetcher / throttle
+    spp_confidence_threshold: jax.Array
+    sample_interval: jax.Array
+    latency_noise_threshold: jax.Array
+    mimd_increase: jax.Array
+    ema_alpha: jax.Array
+    min_issue_rate: jax.Array
+    # WFQ
+    wfq_backlog_cap: jax.Array
+    wfq_weight: jax.Array
+    # placement
+    allocation_ratio: jax.Array
+    # feature flags (dynamic: baseline + variants share one compile)
+    core_prefetch: jax.Array
+    dram_prefetch: jax.Array
+    bw_adapt: jax.Array
+    wfq: jax.Array
+    all_local: jax.Array
+
+    @classmethod
+    def of(cls, cfg: FamConfig, flags=None) -> "FamParams":
+        """Build concrete params from a config (+ optional SimFlags)."""
+        f32 = lambda v: jnp.float32(v)
+        i32 = lambda v: jnp.int32(v)
+        b = lambda v: jnp.bool_(v)
+        if flags is None:
+            from repro.core.famsim import SimFlags
+            flags = SimFlags()
+        return cls(
+            base_ipc=f32(cfg.base_ipc), mlp=f32(cfg.mlp),
+            cores_per_node=f32(cfg.cores_per_node),
+            llc_latency=f32(cfg.llc_latency),
+            local_mem_latency=f32(cfg.local_mem_latency),
+            fam_mem_latency=f32(cfg.fam_mem_latency),
+            cxl_min_latency_cycles=f32(cfg.cxl_min_latency_cycles),
+            fam_cycles_per_byte=f32(cfg.fam_service_cycles(1)),
+            demand_bytes=f32(cfg.demand_bytes),
+            block_bytes=f32(cfg.block_bytes),
+            spp_confidence_threshold=f32(cfg.spp_confidence_threshold),
+            sample_interval=i32(cfg.sample_interval),
+            latency_noise_threshold=f32(cfg.latency_noise_threshold),
+            mimd_increase=f32(cfg.mimd_increase),
+            ema_alpha=f32(cfg.ema_alpha),
+            min_issue_rate=f32(cfg.min_issue_rate),
+            wfq_backlog_cap=f32(cfg.wfq_backlog_cap),
+            wfq_weight=f32(flags.wfq_weight),
+            allocation_ratio=i32(cfg.allocation_ratio),
+            core_prefetch=b(flags.core_prefetch),
+            dram_prefetch=b(flags.dram_prefetch),
+            bw_adapt=b(flags.bw_adapt),
+            wfq=b(flags.wfq),
+            all_local=b(flags.all_local))
+
+    # -- FamConfig-compatible helpers (duck-typed by throttle/controller) --
+    def fam_service_cycles(self, nbytes) -> jax.Array:
+        return self.fam_cycles_per_byte * nbytes
+
+    def with_flags(self, flags) -> "FamParams":
+        """Replace the flag fields (broadcast over any sweep axis)."""
+        shape = jnp.shape(self.base_ipc)
+        full = lambda v, dt: jnp.full(shape, v, dt)
+        return self._replace(
+            core_prefetch=full(flags.core_prefetch, jnp.bool_),
+            dram_prefetch=full(flags.dram_prefetch, jnp.bool_),
+            bw_adapt=full(flags.bw_adapt, jnp.bool_),
+            wfq=full(flags.wfq, jnp.bool_),
+            all_local=full(flags.all_local, jnp.bool_),
+            wfq_weight=full(flags.wfq_weight, jnp.float32))
+
+
+def stack_params(params: Sequence[FamParams]) -> FamParams:
+    """Stack S per-system FamParams into one batch with leading axis S."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params)

@@ -14,11 +14,25 @@ Each step:
 Figures of merit follow the paper's §V-A definitions: IPC gain, relative
 FAM latency, relative DRAM prefetches issued, demand / core-prefetch hit
 fractions. The core model is analytic: cycles = sum(gap) + sum(stall/MLP).
+
+Configuration is split two ways (see ``repro.core.fam_params``):
+
+* ``FamConfig`` supplies the **static shape parameters** (cache geometry,
+  table sizes, degrees) that are baked into the compiled program;
+* ``FamParams`` carries every **dynamic scalar** (latencies, bandwidths,
+  thresholds, the allocation ratio, and the feature flags) as traced
+  values.
+
+``build_sim`` keeps the classic one-system API (params become XLA
+constants).  ``sweep``/``build_sweep`` vmap the same step function over a
+batch of independent simulated systems — sweep points x workloads — so a
+whole paper figure costs ONE jit compile per static cache shape instead of
+one per sweep point.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +44,7 @@ from repro.core import prefetch_queue as pq
 from repro.core import spp as spp_lib
 from repro.core.addresses import PAGE_BITS, block_bits
 from repro.core.fam_controller import arbitrate
+from repro.core.fam_params import FamParams, stack_params
 from repro.core.throttle import (ThrottleState, init_throttle, maybe_adapt,
                                  observe, take_tokens)
 
@@ -71,13 +86,13 @@ class NodeState(NamedTuple):
     pf_issued: jax.Array       # DRAM-cache prefetches issued to FAM
 
 
-def _init_node(cfg: FamConfig) -> NodeState:
+def _init_node(cfg: FamConfig, p: FamParams) -> NodeState:
     f0 = jnp.float32(0.0)
     return NodeState(
         clock=f0, spp=spp_lib.init_spp(cfg),
         cache=dc.init_cache(cfg.num_sets, cfg.cache_ways),
         queue=pq.init_queue(cfg.prefetch_queue),
-        throttle=init_throttle(cfg),
+        throttle=init_throttle(p),
         core_last=jnp.int32(-1), core_stride=jnp.int32(0),
         core_buf_line=jnp.zeros((CORE_FILL_ENTRIES,), jnp.int32),
         core_buf_fin=jnp.zeros((CORE_FILL_ENTRIES,), jnp.float32),
@@ -87,14 +102,14 @@ def _init_node(cfg: FamConfig) -> NodeState:
         pf_issued=f0)
 
 
-def _is_fam_page(cfg: FamConfig, page):
+def _is_fam_page(allocation_ratio, page):
     """allocation ratio X => X/(X+1) of pages live in FAM (paper §V-A.4)."""
     h = (page.astype(jnp.uint32) * jnp.uint32(0x61C88647)) >> 16
-    return (h % jnp.uint32(cfg.allocation_ratio + 1)) != 0
+    mod = jnp.asarray(allocation_ratio + 1, jnp.uint32)
+    return (h % mod) != 0
 
 
-def _phase_a(cfg: FamConfig, flags: SimFlags, ns: NodeState, addr, gap,
-             warm):
+def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm):
     """Per-node pre-arbitration work. Returns (ns, req) where req carries
     this node's demand + prefetch candidates."""
     bb = block_bits(cfg.block_bytes)
@@ -124,60 +139,50 @@ def _phase_a(cfg: FamConfig, flags: SimFlags, ns: NodeState, addr, gap,
     page = (addr >> PAGE_BITS).astype(jnp.int32)
     block_in_page = ((addr >> bb) & ((1 << (PAGE_BITS - bb)) - 1)).astype(jnp.int32)
     gblock = (addr >> bb).astype(jnp.int32)
-    is_fam = _is_fam_page(cfg, page) & (not flags.all_local)
+    is_fam = _is_fam_page(p.allocation_ratio, page) & ~p.all_local
 
     # core-prefetch fill buffer (LLC side): a demand whose line was core-
     # prefetched is served on-chip once the fill lands
     line0 = (addr >> 6).astype(jnp.int32)
     cb_match = ns.core_buf_line == (line0 + 1)
-    cpb_hit = jnp.any(cb_match) & flags.core_prefetch
+    cpb_hit = jnp.any(cb_match) & p.core_prefetch
     cpb_fin = jnp.max(jnp.where(cb_match, ns.core_buf_fin, 0.0))
 
-    # demand probe
-    if flags.dram_prefetch:
-        hit, si, way = dc.lookup(cache, gblock)
-        hit = hit & is_fam
-        cache = dc.touch(cache, si, way, enable=hit)
-        inflight, inflight_fin = pq.contains(queue, gblock)
-        inflight = inflight & is_fam & ~hit
-    else:
-        hit = jnp.bool_(False)
-        inflight = jnp.bool_(False)
-        inflight_fin = jnp.float32(0.0)
+    # demand probe (masked out entirely when DRAM-cache prefetch is off)
+    hit, si, way = dc.lookup(cache, gblock)
+    hit = hit & is_fam & p.dram_prefetch
+    cache = dc.touch(cache, si, way, enable=hit)
+    inflight, inflight_fin = pq.contains(queue, gblock)
+    inflight = inflight & is_fam & ~hit & p.dram_prefetch
     hit = hit & ~cpb_hit
     inflight = inflight & ~cpb_hit
     demand_to_fam = is_fam & ~hit & ~inflight & ~cpb_hit
 
     # SPP train + predict (FAM-bound LLC misses only, incl. core prefetch
     # misses per paper §III; here the demand stream trains)
-    pf_blocks = jnp.zeros((cfg.prefetch_degree,), jnp.int32)
-    pf_valid = jnp.zeros((cfg.prefetch_degree,), jnp.bool_)
-    spp = ns.spp
-    if flags.dram_prefetch:
-        spp, sig = spp_lib.update(cfg, ns.spp, page, block_in_page,
-                                  enable=is_fam)
-        bpp = 1 << (PAGE_BITS - bb)
-        cand_gblock, cand_valid = spp_lib.predict(
-            cfg, spp, page, block_in_page, sig, cfg.prefetch_degree, bpp=bpp)
+    spp, sig = spp_lib.update(cfg, ns.spp, page, block_in_page,
+                              enable=is_fam & p.dram_prefetch)
+    bpp = 1 << (PAGE_BITS - bb)
+    cand_gblock, cand_valid = spp_lib.predict(
+        cfg, spp, page, block_in_page, sig, cfg.prefetch_degree, bpp=bpp,
+        threshold=p.spp_confidence_threshold)
 
-        def not_redundant(b):
-            h, _, _ = dc.lookup(cache, b)
-            infl, _ = pq.contains(queue, b)
-            return ~h & ~infl
+    def not_redundant(b):
+        h, _, _ = dc.lookup(cache, b)
+        infl, _ = pq.contains(queue, b)
+        return ~h & ~infl
 
-        fresh = jax.vmap(not_redundant)(cand_gblock)
-        pf_valid = cand_valid & fresh & is_fam
-        pf_blocks = cand_gblock
-        # throttle: grant tokens for the surviving candidates
-        want = jnp.sum(pf_valid.astype(jnp.int32))
-        thr, grant = take_tokens(ns.throttle, want, flags.bw_adapt)
-        rank = jnp.cumsum(pf_valid.astype(jnp.int32))
-        pf_valid = pf_valid & (rank <= grant)
-        # queue-space gate (§III-A2: drop when the queue is full/threshold)
-        free = jnp.sum((queue.block == 0).astype(jnp.int32))
-        pf_valid = pf_valid & (jnp.cumsum(pf_valid.astype(jnp.int32)) <= free)
-    else:
-        thr = ns.throttle
+    fresh = jax.vmap(not_redundant)(cand_gblock)
+    pf_valid = cand_valid & fresh & is_fam & p.dram_prefetch
+    pf_blocks = cand_gblock
+    # throttle: grant tokens for the surviving candidates
+    want = jnp.sum(pf_valid.astype(jnp.int32))
+    thr, grant = take_tokens(ns.throttle, want, p.bw_adapt)
+    rank = jnp.cumsum(pf_valid.astype(jnp.int32))
+    pf_valid = pf_valid & (rank <= grant)
+    # queue-space gate (§III-A2: drop when the queue is full/threshold)
+    free = jnp.sum((queue.block == 0).astype(jnp.int32))
+    pf_valid = pf_valid & (jnp.cumsum(pf_valid.astype(jnp.int32)) <= free)
 
     # core (stride) prefetcher — 64B lines into LLC; may hit the DRAM cache
     line = (addr >> 6).astype(jnp.int32)
@@ -186,38 +191,40 @@ def _phase_a(cfg: FamConfig, flags: SimFlags, ns: NodeState, addr, gap,
         (jnp.abs(stride) < 32)
     cpf_lines = line + stride * (1 + jnp.arange(CORE_PF_DEGREE, dtype=jnp.int32))
     cpf_pages = (cpf_lines >> (PAGE_BITS - 6)).astype(jnp.int32)
-    cpf_fam = jax.vmap(lambda p: _is_fam_page(cfg, p))(cpf_pages) & \
-        (not flags.all_local)
-    cpf_valid = stride_ok & cpf_fam & flags.core_prefetch
+    cpf_fam = jax.vmap(lambda pg: _is_fam_page(p.allocation_ratio, pg))(
+        cpf_pages) & ~p.all_local
+    cpf_valid = stride_ok & cpf_fam & p.core_prefetch
     cpf_gblock = (cpf_lines >> (bb - 6)).astype(jnp.int32)
-    if flags.dram_prefetch:
-        cpf_hits = jax.vmap(lambda b: dc.lookup(cache, b)[0])(cpf_gblock)
-    else:
-        cpf_hits = jnp.zeros((CORE_PF_DEGREE,), jnp.bool_)
+    cpf_hits = jax.vmap(lambda b: dc.lookup(cache, b)[0])(cpf_gblock) & \
+        p.dram_prefetch
     cpf_to_fam = cpf_valid & ~cpf_hits
 
     ns = ns._replace(clock=clock, spp=spp, cache=cache, queue=queue,
                      throttle=thr, core_last=line,
                      core_stride=jnp.where(stride != 0, stride,
                                            ns.core_stride))
+    # NOTE: cpf_lines rides along in req so phase C fills the buffer with
+    # exactly the lines validated here — recomputing them after the
+    # core_last/core_stride update is what phase C must NOT do.
     req = dict(gblock=gblock, is_fam=is_fam, hit=hit, inflight=inflight,
                inflight_fin=inflight_fin, demand_to_fam=demand_to_fam,
                cpb_hit=cpb_hit, cpb_fin=cpb_fin,
                pf_blocks=pf_blocks, pf_valid=pf_valid,
+               cpf_lines=cpf_lines,
                cpf_valid=cpf_valid, cpf_hits=cpf_hits & cpf_valid,
                cpf_to_fam=cpf_to_fam, gap=gap, warm=warm)
     return ns, req
 
 
-def _phase_c(cfg: FamConfig, flags: SimFlags, ns: NodeState, req,
+def _phase_c(cfg: FamConfig, p: FamParams, ns: NodeState, req,
              d_fin, pf_fin, cpf_fin):
     """Per-node post-arbitration accounting + queue fills."""
     clock = ns.clock
     warm = req["warm"]
-    local_lat = jnp.float32(cfg.local_mem_latency)
+    local_lat = jnp.asarray(p.local_mem_latency, jnp.float32)
 
     fam_demand_lat = jnp.maximum(d_fin - clock, 1.0)
-    llc_lat = jnp.float32(cfg.llc_latency)
+    llc_lat = jnp.asarray(p.llc_latency, jnp.float32)
     lat = jnp.where(req["cpb_hit"],
                     jnp.maximum(req["cpb_fin"] - clock, llc_lat),
                     jnp.where(~req["is_fam"], local_lat,
@@ -238,39 +245,38 @@ def _phase_c(cfg: FamConfig, flags: SimFlags, ns: NodeState, req,
     queue = jax.lax.fori_loop(0, cfg.prefetch_degree, ins, queue)
 
     fam_miss = req["is_fam"] & ~req["hit"] & ~req["inflight"]
-    # record core-prefetch fills (round-robin fill buffer)
-    line0 = ns.core_last   # line of the current access (set in phase A)
-    stride = ns.core_stride
-    cpf_lines = line0 + stride * (1 + jnp.arange(CORE_PF_DEGREE, dtype=jnp.int32))
+    # record core-prefetch fills (round-robin fill buffer) for the lines
+    # phase A actually validated (carried in req — see _phase_a)
+    cpf_lines = req["cpf_lines"]
     cpf_cached_fin = clock + local_lat
     fin = jnp.where(req["cpf_hits"], cpf_cached_fin, cpf_fin)
     buf_line, buf_fin, ptr = ns.core_buf_line, ns.core_buf_fin, ns.core_buf_ptr
 
     def put(i, carry):
-        bl, bf, p = carry
+        bl, bf, ptr_ = carry
         ok = req["cpf_valid"][i]
-        bl = bl.at[p].set(jnp.where(ok, cpf_lines[i] + 1, bl[p]))
-        bf = bf.at[p].set(jnp.where(ok, fin[i], bf[p]))
-        return bl, bf, (p + ok.astype(jnp.int32)) % CORE_FILL_ENTRIES
+        bl = bl.at[ptr_].set(jnp.where(ok, cpf_lines[i] + 1, bl[ptr_]))
+        bf = bf.at[ptr_].set(jnp.where(ok, fin[i], bf[ptr_]))
+        return bl, bf, (ptr_ + ok.astype(jnp.int32)) % CORE_FILL_ENTRIES
 
     buf_line, buf_fin, ptr = jax.lax.fori_loop(
         0, CORE_PF_DEGREE, put, (buf_line, buf_fin, ptr))
 
     thr = observe(ns.throttle, lat, fam_miss, req["hit"],
                   jnp.sum(req["pf_valid"].astype(jnp.int32)))
-    thr = maybe_adapt(cfg, thr) if flags.bw_adapt else thr
+    thr = maybe_adapt(p, thr, enabled=p.bw_adapt)
 
     # node-level accounting: the trace event stream aggregates the node's
     # cores, so per-event compute gaps shrink by 1/cores (higher FAM arrival
     # rate — the paper's congestion regime) while one event's stall only
     # blocks one core: stall_node = lat / (mlp * cores).
-    stall = lat / (cfg.mlp * cfg.cores_per_node)
+    stall = lat / (p.mlp * p.cores_per_node)
     w = warm.astype(jnp.float32)
     npf = jnp.sum(req["pf_valid"].astype(jnp.int32)).astype(jnp.float32)
     ns = ns._replace(
         clock=clock + stall, queue=queue, throttle=thr,
         core_buf_line=buf_line, core_buf_fin=buf_fin, core_buf_ptr=ptr,
-        instr=ns.instr + w * req["gap"] * cfg.base_ipc,
+        instr=ns.instr + w * req["gap"] * p.base_ipc,
         cycles=ns.cycles + w * (req["gap"] + stall),
         fam_lat_sum=ns.fam_lat_sum + w * jnp.where(req["is_fam"], lat, 0.0),
         fam_cnt=ns.fam_cnt + w * req["is_fam"].astype(jnp.float32),
@@ -284,59 +290,65 @@ def _phase_c(cfg: FamConfig, flags: SimFlags, ns: NodeState, req,
     return ns
 
 
-def build_sim(cfg: FamConfig, flags: SimFlags, num_nodes: int):
-    """Returns jitted run(addrs (N,T), gaps (N,T)) -> metrics dict."""
+def _make_run(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2):
+    """One-system step loop: run(params, addrs (N,T), gaps (N,T)) -> metrics.
+
+    Only the static shape parameters of ``cfg`` are read here; every
+    dynamic value comes from the traced ``FamParams``.
+    """
     D = cfg.prefetch_degree
 
-    def step(carry, inputs):
+    def step(p, carry, inputs):
         nodes, fam_busy = carry
         addr, gap, warm = inputs     # addr/gap: (N,)
         nodes, req = jax.vmap(
-            lambda ns, a, g: _phase_a(cfg, flags, ns, a, g, warm))(
+            lambda ns, a, g: _phase_a(cfg, p, ns, a, g, warm))(
                 nodes, addr, gap)
 
-        # ---- global arbitration
-        if flags.wfq:
-            # finite prefetch input queue at the FAM controller: when the
-            # prefetch-class backlog exceeds the cap, CXL backpressure stops
-            # prefetch issue at the nodes (this is what makes WFQ reduce
-            # prefetches-issued in the paper's Fig. 12C)
-            backlog_ok = (fam_busy[1] - nodes.clock) < cfg.wfq_backlog_cap
-            req["pf_valid"] = req["pf_valid"] & backlog_ok[:, None]
-            req["cpf_to_fam"] = req["cpf_to_fam"] & backlog_ok[:, None]
+        # finite prefetch input queue at the FAM controller: when the
+        # prefetch-class backlog exceeds the cap, CXL backpressure stops
+        # prefetch issue at the nodes (this is what makes WFQ reduce
+        # prefetches-issued in the paper's Fig. 12C). FIFO mode: no gate.
+        backlog_ok = ((fam_busy[1] - nodes.clock) < p.wfq_backlog_cap) | \
+            ~p.wfq
+        req["pf_valid"] = req["pf_valid"] & backlog_ok[:, None]
+        req["cpf_to_fam"] = req["cpf_to_fam"] & backlog_ok[:, None]
+
         d_arr = nodes.clock
         d_valid = req["demand_to_fam"]
-        d_bytes = jnp.full((num_nodes,), float(cfg.demand_bytes))
+        d_bytes = jnp.full((num_nodes,), p.demand_bytes, jnp.float32)
         p_arr = jnp.concatenate([
             jnp.repeat(nodes.clock, D), jnp.repeat(nodes.clock, CORE_PF_DEGREE)])
         p_valid = jnp.concatenate([req["pf_valid"].reshape(-1),
                                    req["cpf_to_fam"].reshape(-1)])
         p_bytes = jnp.concatenate([
-            jnp.full((num_nodes * D,), float(cfg.block_bytes)),
-            jnp.full((num_nodes * CORE_PF_DEGREE,), float(cfg.demand_bytes))])
-        t = arbitrate(cfg, fam_busy, d_arr, d_valid, d_bytes,
+            jnp.full((num_nodes * D,), p.block_bytes, jnp.float32),
+            jnp.full((num_nodes * CORE_PF_DEGREE,), p.demand_bytes,
+                     jnp.float32)])
+        t = arbitrate(p, fam_busy, d_arr, d_valid, d_bytes,
                       p_arr, p_valid, p_bytes,
-                      use_wfq=flags.wfq, weight=flags.wfq_weight)
+                      use_wfq=p.wfq, weight=p.wfq_weight)
         pf_fin = t.prefetch_finish[: num_nodes * D].reshape(num_nodes, D)
         cpf_fin = t.prefetch_finish[num_nodes * D:].reshape(
             num_nodes, CORE_PF_DEGREE)
 
         nodes = jax.vmap(
-            lambda ns, r, df, pf, cf: _phase_c(cfg, flags, ns, r, df, pf, cf)
+            lambda ns, r, df, pf, cf: _phase_c(cfg, p, ns, r, df, pf, cf)
         )(nodes, req, t.demand_finish, pf_fin, cpf_fin)
         return (nodes, t.new_busy), None
 
-    def run(addrs, gaps, warmup_frac: float = 0.2):
+    def run(p: FamParams, addrs, gaps):
         N, T = addrs.shape
         assert N == num_nodes
-        gaps = gaps / cfg.cores_per_node   # aggregate multi-core node stream
-        one = _init_node(cfg)
+        gaps = gaps.astype(jnp.float32) / p.cores_per_node  # aggregate stream
+        one = _init_node(cfg, p)
         nodes = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (N,) + x.shape).copy(), one)
         warm = jnp.arange(T) >= int(T * warmup_frac)
         (nodes, _), _ = jax.lax.scan(
-            step, (nodes, jnp.zeros((2,), jnp.float32)),
-            (addrs.T.astype(jnp.int32), gaps.T.astype(jnp.float32), warm))
+            lambda c, i: step(p, c, i),
+            (nodes, jnp.zeros((2,), jnp.float32)),
+            (addrs.T.astype(jnp.int32), gaps.T, warm))
         ipc = nodes.instr / jnp.maximum(nodes.cycles, 1.0)
         return {
             "ipc": ipc,
@@ -350,18 +362,87 @@ def build_sim(cfg: FamConfig, flags: SimFlags, num_nodes: int):
             "cache_occupancy": jax.vmap(dc.occupancy)(nodes.cache),
         }
 
-    return jax.jit(run, static_argnames=("warmup_frac",))
+    return run
+
+
+def build_sim(cfg: FamConfig, flags: SimFlags, num_nodes: int):
+    """Returns jitted run(addrs (N,T), gaps (N,T)) -> metrics dict.
+
+    Classic one-system entry point. The dynamic params are passed as traced
+    arguments (not closed-over constants) so this path executes the exact
+    same floating-point program as the batched ``sweep`` — constant-folding
+    a latency into the XLA graph would otherwise make long simulations
+    drift measurably from the vmapped run."""
+    p = FamParams.of(cfg, flags)
+    jitted: Dict = {}
+
+    def run(addrs, gaps, warmup_frac: float = 0.2):
+        if warmup_frac not in jitted:
+            jitted[warmup_frac] = jax.jit(
+                _make_run(cfg, num_nodes, warmup_frac))
+        return jitted[warmup_frac](p, addrs, gaps)
+
+    return run
+
+
+# --------------------------------------------------------------------------
+# Batched sweep engine
+# --------------------------------------------------------------------------
+
+_SWEEP_CACHE: Dict = {}
+
+
+def build_sweep(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2):
+    """Jitted batched runner: fn(params_batch, addrs (S,N,T), gaps (S,N,T))
+    -> metrics dict with arrays of shape (S, N).
+
+    One entry per ``cfg.static_shape()`` — every sweep point that only
+    varies dynamic parameters (including the feature flags) reuses the same
+    compiled program; jit re-traces only when (S, N, T) change shape.
+    """
+    key = (cfg.static_shape(), num_nodes, warmup_frac)
+    if key not in _SWEEP_CACHE:
+        run = _make_run(cfg, num_nodes, warmup_frac)
+        _SWEEP_CACHE[key] = jax.jit(jax.vmap(run))
+    return _SWEEP_CACHE[key]
+
+
+def sweep(cfg: FamConfig, params_batch: FamParams, flags: Optional[SimFlags],
+          addrs, gaps, warmup_frac: float = 0.2) -> Dict[str, jax.Array]:
+    """Run S independent simulated systems in one (cached) compile.
+
+    cfg: static shape donor — every system must share ``cfg.static_shape()``.
+    params_batch: ``FamParams`` with leading axis S (see ``stack_params``).
+    flags: optional ``SimFlags`` applied uniformly to all S systems;
+        ``None`` keeps the flags already embedded in ``params_batch``.
+    addrs/gaps: (S, N, T) per-system node traces.
+
+    Returns the ``build_sim`` metrics dict with a leading sweep axis (S, N).
+    """
+    if flags is not None:
+        params_batch = params_batch.with_flags(flags)
+    bb = params_batch.block_bytes
+    if not isinstance(bb, jax.core.Tracer) and \
+            not bool(jnp.all(bb == cfg.block_bytes)):
+        raise ValueError(
+            "params_batch contains block_bytes != the static donor's "
+            f"({cfg.block_bytes}); block size is a static shape parameter — "
+            "group sweep points by cfg.static_shape() instead of batching "
+            "them together")
+    S, N, T = addrs.shape
+    fn = build_sweep(cfg, N, warmup_frac)
+    return fn(params_batch, jnp.asarray(addrs), jnp.asarray(gaps))
 
 
 def simulate(cfg: FamConfig, flags: SimFlags, workload_names, T: int = 60_000,
              seed: int = 0) -> Dict[str, np.ndarray]:
     """Convenience wrapper: generate traces for the node list and run."""
-    from repro.core.traces import generate
+    from repro.core.traces import generate, node_seed
     N = len(workload_names)
-    addrs = np.stack([generate(w, T, seed + i)[0]
-                      for i, w in enumerate(workload_names)])
-    gaps = np.stack([generate(w, T, seed + i)[1]
-                     for i, w in enumerate(workload_names)])
+    traces = [generate(w, T, node_seed(seed, i))
+              for i, w in enumerate(workload_names)]
+    addrs = np.stack([a for a, _ in traces])
+    gaps = np.stack([g for _, g in traces])
     run = build_sim(cfg, flags, N)
     out = run(jnp.asarray(addrs), jnp.asarray(gaps))
     return {k: np.asarray(v) for k, v in out.items()}

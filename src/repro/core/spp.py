@@ -109,14 +109,17 @@ def update(cfg: FamConfig, s: SppState, page, block, enable=True
 
 
 def predict(cfg: FamConfig, s: SppState, page, block, sig, degree: int,
-            bpp: int = 64) -> Tuple[jax.Array, jax.Array]:
+            bpp: int = 64, threshold=None) -> Tuple[jax.Array, jax.Array]:
     """Recursive path-confidence lookahead from (page, block, sig).
 
     Returns (block_addrs (degree,), valid (degree,)) — global block addrs;
     predictions stay within the page (``bpp`` blocks per page), as SPP
-    prefetches within the spatial region.
+    prefetches within the spatial region. ``threshold`` may be a traced
+    scalar (sweepable); defaults to ``cfg.spp_confidence_threshold``.
     """
     mask = _sig_mask(cfg)
+    if threshold is None:
+        threshold = cfg.spp_confidence_threshold
 
     def body(carry, _):
         cur_sig, cur_block, conf, alive = carry
@@ -130,7 +133,7 @@ def predict(cfg: FamConfig, s: SppState, page, block, sig, degree: int,
         new_conf = conf * jnp.minimum(step_conf * 4.0, 1.0)
         delta = row_d[way]
         nb = cur_block + delta
-        ok = alive & (w > 0) & (new_conf >= cfg.spp_confidence_threshold) & \
+        ok = alive & (w > 0) & (new_conf >= threshold) & \
             (nb >= 0) & (nb < bpp) & (delta != 0)
         nsig = ((cur_sig << SIG_SHIFT) ^ (delta & mask)) & mask
         out_block = jnp.where(ok, nb, -1)

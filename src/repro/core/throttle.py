@@ -22,8 +22,6 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import FamConfig
-
 
 class ThrottleState(NamedTuple):
     issue_rate: jax.Array        # () float32 in [min_rate, 1]
@@ -38,7 +36,8 @@ class ThrottleState(NamedTuple):
     events: jax.Array            # () int32 events since last sample
 
 
-def init_throttle(cfg: FamConfig) -> ThrottleState:
+def init_throttle(cfg) -> ThrottleState:
+    """``cfg``: a static FamConfig or traced FamParams (same attributes)."""
     f = lambda v: jnp.asarray(v, jnp.float32)
     # minimum achievable demand latency: seeded with the unloaded fabric +
     # DDR latency (the node knows its fabric floor; the EMA-min refines it)
@@ -63,9 +62,14 @@ def observe(s: ThrottleState, demand_latency, is_fam_demand, was_pf_hit,
         events=s.events + 1)
 
 
-def maybe_adapt(cfg: FamConfig, s: ThrottleState) -> ThrottleState:
-    """Run the Fig. 9 adaptation once per sampling cycle."""
-    due = s.events >= cfg.sample_interval
+def maybe_adapt(cfg, s: ThrottleState, enabled=True) -> ThrottleState:
+    """Run the Fig. 9 adaptation once per sampling cycle.
+
+    ``cfg`` may be a static :class:`FamConfig` or a traced ``FamParams``
+    (same attribute names); ``enabled`` may be a traced boolean so the
+    adaptation can be switched per sweep point under one compile.
+    """
+    due = (s.events >= cfg.sample_interval) & jnp.asarray(enabled)
     avg_lat = s.lat_sum / jnp.maximum(s.lat_cnt, 1.0)
     lat_ema = jnp.where(s.lat_ema == 0.0, avg_lat,
                         (1 - cfg.ema_alpha) * s.lat_ema + cfg.ema_alpha * avg_lat)
@@ -91,11 +95,17 @@ def maybe_adapt(cfg: FamConfig, s: ThrottleState) -> ThrottleState:
     return jax.tree.map(lambda a, b: jnp.where(due, a, b), adapted, s)
 
 
-def take_tokens(s: ThrottleState, want: jax.Array, enabled: bool
+def take_tokens(s: ThrottleState, want: jax.Array, enabled
                 ) -> Tuple[ThrottleState, jax.Array]:
-    """Token bucket: grant min(want, floor(tokens + rate)) prefetch issues."""
-    if not enabled:
-        return s, want.astype(jnp.int32)
+    """Token bucket: grant min(want, floor(tokens + rate)) prefetch issues.
+
+    ``enabled`` may be a traced boolean; disabled nodes grant everything
+    and leave the bucket untouched.
+    """
+    en = jnp.asarray(enabled)
     tokens = jnp.minimum(s.tokens + s.issue_rate * jnp.maximum(want, 1), 8.0)
-    grant = jnp.minimum(want.astype(jnp.int32), jnp.floor(tokens).astype(jnp.int32))
-    return s._replace(tokens=tokens - grant), grant
+    grant = jnp.minimum(want.astype(jnp.int32),
+                        jnp.floor(tokens).astype(jnp.int32))
+    grant = jnp.where(en, grant, want.astype(jnp.int32))
+    tokens = jnp.where(en, tokens - grant, s.tokens)
+    return s._replace(tokens=tokens), grant

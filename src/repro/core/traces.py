@@ -9,6 +9,7 @@ addresses and compute gaps between consecutive misses.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 from typing import Dict, Tuple
 
@@ -66,29 +67,32 @@ def _lines(spec: WorkloadSpec) -> int:
     return max(int(spec.footprint_mb * (1 << 20) // LINE), 1 << 12)
 
 
+def _per_stream_occurrence(pick: np.ndarray, streams: int) -> np.ndarray:
+    """occ[i] = how many earlier events chose the same stream as event i.
+
+    Vectorized replacement for the per-event python loop: each stream's
+    events get 0,1,2,... in order, so position_i = start_i + occ_i * stride."""
+    occ = np.empty(pick.shape[0], np.int64)
+    for s in range(streams):
+        m = pick == s
+        occ[m] = np.arange(int(m.sum()), dtype=np.int64)
+    return occ
+
+
 def _stream(spec, rng, T):
     n = _lines(spec)
-    starts = rng.integers(0, n, spec.streams)
-    pos = starts.copy().astype(np.int64)
+    starts = rng.integers(0, n, spec.streams).astype(np.int64)
     pick = rng.integers(0, spec.streams, T)
-    out = np.empty(T, np.int64)
-    for i in range(T):
-        s = pick[i]
-        out[i] = pos[s] % n
-        pos[s] += 1
-    return out
+    occ = _per_stream_occurrence(pick, spec.streams)
+    return (starts[pick] + occ) % n
 
 
 def _strided(spec, rng, T):
     n = _lines(spec)
-    pos = rng.integers(0, n, spec.streams).astype(np.int64)
+    starts = rng.integers(0, n, spec.streams).astype(np.int64)
     pick = rng.integers(0, spec.streams, T)
-    out = np.empty(T, np.int64)
-    for i in range(T):
-        s = pick[i]
-        out[i] = pos[s] % n
-        pos[s] += spec.stride
-    return out
+    occ = _per_stream_occurrence(pick, spec.streams)
+    return (starts[pick] + occ * spec.stride) % n
 
 
 def _tiled(spec, rng, T):
@@ -139,11 +143,25 @@ _PATTERNS = {"stream": _stream, "strided": _strided, "tiled": _tiled,
              "zipf": _zipf, "graph": _graph, "mixed": _mixed}
 
 
+def trace_seed(name: str, seed: int) -> int:
+    """Stable RNG seed for (workload, seed) — NOT the salted builtin
+    ``hash()``, which changes per process with PYTHONHASHSEED and made no
+    two runs reproduce the same trace."""
+    return zlib.crc32(f"{name}:{seed}".encode())
+
+
+def node_seed(seed: int, node_index: int) -> int:
+    """Per-node trace seed derivation, shared by ``famsim.simulate`` and the
+    benchmark harness so both generate identical node traces. The large odd
+    multiplier decorrelates node streams even for adjacent base seeds."""
+    return seed + 1_000_003 * node_index
+
+
 def generate(name: str, T: int, seed: int = 0, base_ipc: float = 2.0
              ) -> Tuple[np.ndarray, np.ndarray]:
     """-> (addr_bytes (T,) int64, gap_cycles (T,) float32)."""
     spec = WORKLOADS[name]
-    rng = np.random.default_rng(hash((name, seed)) & 0xFFFFFFFF)
+    rng = np.random.default_rng(trace_seed(name, seed))
     lines = _PATTERNS[spec.pattern](spec, rng, T)
     addrs = lines * LINE
     # compute gap between misses: 1000/mpki instructions at base_ipc,

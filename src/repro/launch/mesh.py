@@ -11,7 +11,8 @@ from __future__ import annotations
 import numpy as np
 
 import jax
-from jax.sharding import AxisType
+
+from repro.parallel.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,14 +25,11 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {need} devices, found {len(devices)}. "
             "The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count"
             "=512 before importing jax (see launch/dryrun.py).")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devices[:need])
+    return make_mesh(shape, axes, devices=devices[:need])
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """A small mesh on whatever devices exist (tests/examples)."""
     need = data * model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2,
-                         devices=jax.devices()[:need])
+    return make_mesh((data, model), ("data", "model"),
+                     devices=jax.devices()[:need])

@@ -106,7 +106,8 @@ def _dispatch_compute_local(cfg: ModelConfig, ep_axis: str, capacity: int,
     T, d = x_flat.shape
     k = m.top_k
     E = m.num_experts
-    M = jax.lax.axis_size(ep_axis)
+    from repro.parallel.compat import axis_size
+    M = axis_size(ep_axis)
     E_loc = E // M
     C = capacity
 
@@ -193,13 +194,13 @@ def moe_sharded(cfg: ModelConfig, p: Params, x: jax.Array, *, mesh,
             yf = ys.reshape(Bl * Sl, d)
         return yf.reshape(Bl, Sl, d)
 
-    y = jax.shard_map(
+    from repro.parallel.compat import shard_map
+    y = shard_map(
         local_fn, mesh=mesh,
         in_specs=(spec_x, spec_x, spec_x,
                   P(ep_axis, None, None), P(ep_axis, None, None),
                   P(ep_axis, None, None)),
         out_specs=spec_x,
-        check_vma=False,
     )(x, top_w.astype(dt), top_i, p["w_gate"].astype(dt),
       p["w_up"].astype(dt), p["w_down"].astype(dt))
     return y, aux

@@ -62,6 +62,6 @@ def pipeline_forward(layer_fn: Callable, mesh, axis: str, num_stages: int,
             axis)
         return total
 
-    return jax.shard_map(
-        staged, mesh=mesh,
-        in_specs=(P(axis), P()), out_specs=P(), check_vma=False)
+    from repro.parallel.compat import shard_map
+    return shard_map(staged, mesh=mesh,
+                     in_specs=(P(axis), P()), out_specs=P())

@@ -113,9 +113,8 @@ class ParallelContext:
 
 
 def single_device_context(**kw) -> ParallelContext:
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2,
-                         devices=jax.devices()[:1])
+    from repro.parallel.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
     return ParallelContext(mesh=mesh, **kw)
 
 

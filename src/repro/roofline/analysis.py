@@ -170,7 +170,8 @@ def analyze(compiled, chips: int, model_flops: float) -> RooflineTerms:
         chips=chips, model_flops=model_flops)
     terms.coll_bytes = dict(cost.coll_bytes)
     terms.coll_count = dict(cost.coll_count)
-    ca = compiled.cost_analysis() or {}
+    from repro.parallel.compat import cost_analysis_dict
+    ca = cost_analysis_dict(compiled)
     terms.xla_flops_once = float(ca.get("flops", 0.0))
     terms.xla_bytes_once = float(ca.get("bytes accessed", 0.0))
     return terms

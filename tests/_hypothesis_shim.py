@@ -1,0 +1,83 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+The tier-1 suite must collect and run on a bare interpreter (the seed died
+at collection with ``ModuleNotFoundError: hypothesis``). When the real
+package is available (see requirements-dev.txt) it is used untouched;
+otherwise ``install()`` registers this shim under the ``hypothesis`` /
+``hypothesis.strategies`` module names, providing the tiny subset the tests
+use — ``@given`` with keyword strategies, ``@settings(max_examples=...,
+deadline=...)``, ``st.integers(lo, hi)`` and ``st.sampled_from(seq)`` —
+with deterministic example generation (fixed seeds, no shrinking).
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(0x5EED + 7919 * i)
+                drawn = {name: s.draw(rng) for name, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+        # hide the original signature: pytest must see () and not try to
+        # resolve the strategy parameters as fixtures
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def install() -> None:
+    """Register the shim as ``hypothesis`` + ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "booleans", "floats"):
+        setattr(st_mod, name, globals()[name])
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -4,6 +4,16 @@ import os
 # applied ONLY inside launch/dryrun.py, per the multi-pod dry-run contract).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# The property tests prefer real hypothesis (requirements-dev.txt); on a bare
+# interpreter, fall back to the deterministic shim so the suite still
+# collects and runs instead of dying with ModuleNotFoundError.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from _hypothesis_shim import install
+
+    install()
+
 import jax  # noqa: E402
 
 jax.config.update("jax_default_matmul_precision", "float32")

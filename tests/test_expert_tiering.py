@@ -40,10 +40,9 @@ def test_correlated_routing_hits():
 
 def test_pipeline_forward_single_stage():
     """pipeline_forward with one stage == plain layer application."""
-    from jax.sharding import AxisType
+    from repro.parallel.compat import make_mesh
     from repro.parallel.pipeline import pipeline_forward
-    mesh = jax.make_mesh((1,), ("pod",), axis_types=(AxisType.Auto,),
-                         devices=jax.devices()[:1])
+    mesh = make_mesh((1,), ("pod",), devices=jax.devices()[:1])
 
     def layer_fn(w, x):
         return jnp.tanh(x @ w)

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.parallel.compat import make_mesh, shard_map
 from repro.parallel.compression import (compress_decompress,
                                         ef_compress_allreduce, init_error)
 from repro.parallel.sharding import ParallelContext, single_device_context
@@ -17,8 +18,7 @@ def test_spec_divisibility_fallback():
 
 
 def test_spec_prefers_first_fit():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     ctx = ParallelContext(mesh=mesh)
     # non-divisible dims fall back to replication, never error
     for shape, logical in [((7, 13), ("batch", "mlp")),
@@ -51,8 +51,7 @@ def test_error_feedback_accumulates_small_values():
 
 
 def test_ef_allreduce_single_axis():
-    mesh = jax.make_mesh((1,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("pod",))
     from jax.sharding import PartitionSpec as P
 
     def f(g, e):
@@ -60,9 +59,8 @@ def test_ef_allreduce_single_axis():
 
     g = jax.random.normal(jax.random.PRNGKey(1), (64,))
     e = jnp.zeros((64,))
-    out, err = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P(), P()),
-                                     out_specs=(P(), P()),
-                                     check_vma=False))(g, e)
+    out, err = jax.jit(shard_map(f, mesh=mesh, in_specs=(P(), P()),
+                                 out_specs=(P(), P())))(g, e)
     np.testing.assert_allclose(np.asarray(out + err), np.asarray(g),
                                atol=1e-6)
 

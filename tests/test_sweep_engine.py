@@ -1,0 +1,159 @@
+"""Batched sweep engine: vmapped multi-system runs must reproduce the
+per-point simulator exactly, share compiles across dynamic sweep points,
+and the phase-A/phase-C handoff must carry (not recompute) the core
+prefetch lines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FamConfig, fam_replace
+from repro.core import famsim
+from repro.core.fam_params import FamParams, stack_params
+from repro.core.famsim import SimFlags, build_sim, build_sweep, sweep
+from repro.core.traces import generate, node_seed
+
+CFG = FamConfig()
+T, N = 1200, 2
+WL = ["603.bwaves_s", "bfs"]
+
+
+def _node_traces():
+    tr = [generate(w, T, node_seed(0, i)) for i, w in enumerate(WL)]
+    return (np.stack([a for a, _ in tr]), np.stack([g for _, g in tr]))
+
+
+FLAG_SETS = [
+    SimFlags(core_prefetch=False, dram_prefetch=False),
+    SimFlags(),
+    SimFlags(bw_adapt=True),
+    SimFlags(wfq=True, wfq_weight=3),
+    SimFlags(all_local=True),
+]
+
+
+def test_sweep_matches_per_point_exactly():
+    """One vmapped call over all flag variants == per-point build_sim.
+
+    Bit-exact (tolerance 1e-5 is the acceptance bar; equality is what the
+    shared traced-params program actually delivers)."""
+    addrs, gaps = _node_traces()
+    per_point = []
+    for fl in FLAG_SETS:
+        run = build_sim(CFG, fl, N)
+        out = run(jnp.asarray(addrs), jnp.asarray(gaps))
+        per_point.append({k: np.asarray(v) for k, v in out.items()})
+
+    params = stack_params([FamParams.of(CFG, fl) for fl in FLAG_SETS])
+    S = len(FLAG_SETS)
+    batched = sweep(CFG, params, None,
+                    np.stack([addrs] * S), np.stack([gaps] * S))
+    batched = {k: np.asarray(v) for k, v in batched.items()}
+    for i in range(S):
+        for k, ref in per_point[i].items():
+            rel = np.max(np.abs(ref - batched[k][i]) /
+                         np.maximum(np.abs(ref), 1e-9))
+            assert rel < 1e-5, (FLAG_SETS[i], k, rel)
+
+
+def test_dynamic_params_share_one_compiled_program():
+    """Sweeping allocation_ratio (and any other dynamic scalar) must reuse
+    the same jitted callable — only static shape changes may recompile."""
+    fn1 = build_sweep(CFG, N)
+    fn2 = build_sweep(fam_replace(CFG, allocation_ratio=2,
+                                  fam_mem_latency=200), N)
+    assert fn1 is fn2
+    fn3 = build_sweep(fam_replace(CFG, block_bytes=64), N)
+    assert fn3 is not fn1
+
+
+def test_static_shape_keys():
+    assert CFG.static_shape() == fam_replace(
+        CFG, allocation_ratio=1, mlp=2.0, fam_bw_gbps=99.0).static_shape()
+    assert CFG.static_shape() != fam_replace(
+        CFG, dram_cache_bytes=4 << 20).static_shape()
+
+
+def test_sweep_ratio_monotonic():
+    """More FAM-resident pages (higher allocation ratio) => lower IPC, under
+    one compile."""
+    addrs, gaps = _node_traces()
+    ratios = (1, 2, 4, 8)
+    params = stack_params(
+        [FamParams.of(fam_replace(CFG, allocation_ratio=r), SimFlags())
+         for r in ratios])
+    out = sweep(CFG, params, None,
+                np.stack([addrs] * 4), np.stack([gaps] * 4))
+    ipc = np.asarray(out["ipc"]).mean(axis=1)
+    assert (np.diff(ipc) <= 1e-3).all(), ipc
+
+
+def test_sweep_rejects_mixed_block_bytes():
+    """block_bytes is static shape: a params batch built from a different
+    block size than the donor cfg must be rejected, not silently mis-sized."""
+    addrs, gaps = _node_traces()
+    params = stack_params([FamParams.of(CFG),
+                           FamParams.of(fam_replace(CFG, block_bytes=64))])
+    with pytest.raises(ValueError, match="static shape"):
+        sweep(CFG, params, None, np.stack([addrs] * 2), np.stack([gaps] * 2))
+
+
+def test_sweep_flags_override():
+    """sweep(..., flags=...) applies one SimFlags to every system."""
+    addrs, gaps = _node_traces()
+    params = stack_params([FamParams.of(CFG, SimFlags(wfq=True)),
+                           FamParams.of(CFG, SimFlags(bw_adapt=True))])
+    A, G = np.stack([addrs] * 2), np.stack([gaps] * 2)
+    out = sweep(CFG, params, SimFlags(core_prefetch=False,
+                                      dram_prefetch=False), A, G)
+    # both systems forced to the no-prefetch baseline -> identical metrics
+    pf = np.asarray(out["prefetches_issued"])
+    np.testing.assert_array_equal(pf, np.zeros_like(pf))
+    np.testing.assert_allclose(np.asarray(out["ipc"])[0],
+                               np.asarray(out["ipc"])[1])
+
+
+# ---------------------------------------------------------------------------
+# phase A -> phase C handoff
+# ---------------------------------------------------------------------------
+
+def test_phase_c_uses_phase_a_cpf_lines():
+    """The fill buffer must record the lines phase A validated, carried in
+    ``req`` — phase C must not recompute them from the post-update stride."""
+    cfg = CFG
+    p = FamParams.of(cfg, SimFlags(all_local=False))
+    ns = famsim._init_node(cfg, p)
+    # establish a stride-2 history: last line 100, stride 2
+    ns = ns._replace(core_last=jnp.int32(100), core_stride=jnp.int32(2))
+    addr = jnp.int32(102 * 64)          # stride 2 again -> cpf fires
+    ns2, req = famsim._phase_a(cfg, p, ns, addr, jnp.float32(10.0),
+                               jnp.bool_(True))
+    expect = 102 + 2 * (1 + np.arange(famsim.CORE_PF_DEGREE))
+    np.testing.assert_array_equal(np.asarray(req["cpf_lines"]), expect)
+
+    d_fin = jnp.float32(500.0)
+    pf_fin = jnp.zeros((cfg.prefetch_degree,), jnp.float32)
+    cpf_fin = jnp.full((famsim.CORE_PF_DEGREE,), 400.0, jnp.float32)
+    ns3 = famsim._phase_c(cfg, p, ns2, req, d_fin, pf_fin, cpf_fin)
+    recorded = np.asarray(ns3.core_buf_line)
+    recorded = recorded[recorded > 0] - 1
+    valid = np.asarray(req["cpf_valid"])
+    assert set(recorded.tolist()) == set(expect[valid].tolist())
+
+
+def test_phase_c_records_nothing_when_stride_breaks():
+    """A broken stride invalidates the candidates; the fill buffer must
+    stay empty even though phase C runs after the stride state updated."""
+    cfg = CFG
+    p = FamParams.of(cfg, SimFlags())
+    ns = famsim._init_node(cfg, p)
+    ns = ns._replace(core_last=jnp.int32(100), core_stride=jnp.int32(2))
+    addr = jnp.int32(107 * 64)          # stride 7 != 2 -> no core prefetch
+    ns2, req = famsim._phase_a(cfg, p, ns, addr, jnp.float32(10.0),
+                               jnp.bool_(True))
+    assert not np.asarray(req["cpf_valid"]).any()
+    ns3 = famsim._phase_c(cfg, p, ns2, req, jnp.float32(500.0),
+                          jnp.zeros((cfg.prefetch_degree,), jnp.float32),
+                          jnp.full((famsim.CORE_PF_DEGREE,), 400.0,
+                                   jnp.float32))
+    assert (np.asarray(ns3.core_buf_line) == 0).all()

@@ -1,0 +1,81 @@
+"""Trace reproducibility: generation must be byte-identical across
+processes regardless of PYTHONHASHSEED (the seed used the salted builtin
+``hash()``, so no two interpreter runs produced the same numbers)."""
+import hashlib
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.traces import (WORKLOAD_NAMES, generate, node_seed,
+                               trace_seed)
+
+_DIGEST_SNIPPET = """
+import hashlib, sys
+sys.path.insert(0, {src!r})
+from repro.core.traces import generate
+a, g = generate({name!r}, 2000, seed=3)
+h = hashlib.sha256(a.tobytes() + g.tobytes()).hexdigest()
+print(h)
+"""
+
+
+def _subprocess_digest(name: str, hashseed: str) -> str:
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, PYTHONHASHSEED=hashseed)
+    out = subprocess.run(
+        [sys.executable, "-c",
+         _DIGEST_SNIPPET.format(src=os.path.abspath(src), name=name)],
+        env=env, capture_output=True, text=True, check=True)
+    return out.stdout.strip()
+
+
+def test_trace_identical_across_hashseeds():
+    """Regenerating a trace in subprocesses with different PYTHONHASHSEED
+    must produce byte-identical output (and match this process)."""
+    name = "bfs"
+    a, g = generate(name, 2000, seed=3)
+    here = hashlib.sha256(a.tobytes() + g.tobytes()).hexdigest()
+    d0 = _subprocess_digest(name, "0")
+    d1 = _subprocess_digest(name, "12345")
+    assert d0 == d1 == here
+
+
+def test_trace_seed_is_stable_hash():
+    # crc32-derived: fixed values guard against accidental reseeding schemes
+    assert trace_seed("bfs", 3) == trace_seed("bfs", 3)
+    assert trace_seed("bfs", 3) != trace_seed("bfs", 4)
+    assert trace_seed("bfs", 3) != trace_seed("cc", 3)
+
+
+def test_generate_deterministic_in_process():
+    for name in ("603.bwaves_s", "canneal", "LU"):
+        a1, g1 = generate(name, 1500, seed=7)
+        a2, g2 = generate(name, 1500, seed=7)
+        np.testing.assert_array_equal(a1, a2)
+        np.testing.assert_array_equal(g1, g2)
+
+
+def test_node_seed_shared_by_simulator_and_benchmarks():
+    """famsim.simulate and the benchmark harness must derive node-trace
+    seeds through the same helper (they diverged in the seed: seed+i vs
+    seed+17*i)."""
+    from benchmarks.common import _traces
+
+    wls = ["LU", "bfs"]
+    addrs, gaps = _traces(wls, 800, seed=5)
+    for i, w in enumerate(wls):
+        a, g = generate(w, 800, node_seed(5, i))
+        np.testing.assert_array_equal(addrs[i], a)
+        np.testing.assert_array_equal(gaps[i], g)
+
+
+def test_all_patterns_generate():
+    """Every workload's generator runs and yields sane shapes/ranges."""
+    for name in WORKLOAD_NAMES:
+        a, g = generate(name, 600, seed=1)
+        assert a.shape == (600,) and g.shape == (600,)
+        assert a.dtype == np.int64 and (a >= 0).all()
+        assert (g > 0).all()
