@@ -10,29 +10,33 @@ Figures of merit follow paper §V-A: IPC gain is measured against the
 workload/node-count; relative FAM latency likewise; relative prefetches are
 against the non-adaptive (FIFO) prefetcher.
 
-Execution goes through the **batched sweep engine**: every figure declares
-its grid as a list of :class:`Point` (config x flags x node workloads) and
-:func:`run_points` groups them by ``(static_shape, N, T)`` — each group is
-ONE ahead-of-time compile and ONE vmapped device call over all its sweep
-points, instead of a compile per (config, flags) pair. Compile time is
-measured separately from steady-state run time (`jit(...).lower().compile()`
-+ `block_until_ready`), so reported us_per_call reflects simulation only.
+Execution goes through :mod:`repro.experiments`: every figure declares its
+grid as an :class:`~repro.experiments.Experiment` (named axes over config
+overrides x flags x workloads), ``plan()`` resolves it into compile groups
+keyed by ``(static_shape, N, T_bucket)``, and ``execute()`` runs each group
+as ONE ahead-of-time compile and ONE (optionally device-sharded) vmapped
+call. Compile time is measured separately from steady-state run time, so
+reported us_per_call reflects simulation only.
+
+``Point``/``run_points`` remain as a deprecated shim over the same
+machinery; new code should declare an ``Experiment``.
 """
 from __future__ import annotations
 
 import json
 import time
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.base import FamConfig, fam_replace
-from repro.core.fam_params import FamParams, stack_params
-from repro.core.famsim import SimFlags, build_sim, build_sweep
+from repro.core.famsim import SimFlags, build_sim
 from repro.core.ipc_model import geomean
-from repro.core.traces import generate, node_seed
+from repro.experiments import (ExperimentResult, ResolvedPoint, RunInfo,
+                               execute, plan_points, trace_arrays)
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "benchmarks"
 
@@ -52,12 +56,18 @@ def WFQ(w: int) -> SimFlags:
 
 
 # ---------------------------------------------------------------------------
-# Batched sweep execution
+# Deprecated Point/run_points shim (use repro.experiments instead)
 # ---------------------------------------------------------------------------
+
+#: Kept as an import-compatible alias; the accounting object now lives in
+#: ``repro.experiments.executor``.
+SweepInfo = RunInfo
+
 
 @dataclass(frozen=True)
 class Point:
-    """One simulated system of a figure's sweep grid."""
+    """One simulated system of a figure's sweep grid (DEPRECATED — declare
+    an :class:`repro.experiments.Experiment` instead)."""
 
     cfg: FamConfig
     flags: SimFlags
@@ -65,116 +75,31 @@ class Point:
     seed: int = 0
 
 
-@dataclass
-class SweepInfo:
-    """Wall-clock accounting for a batch of points."""
+def run_points(points: Sequence[Point], T: int
+               ) -> Tuple[List[Dict[str, np.ndarray]], RunInfo]:
+    """DEPRECATED: run every point, batching shared compiled shapes.
 
-    compiles: int = 0              # fresh compiles (0 if executables cached)
-    planned_groups: int = 0        # compile groups the grid needs —
-                                   # deterministic, unlike ``compiles``
-    compile_s: float = 0.0
-    run_s: float = 0.0
-    systems: int = 0
-    events: int = 0                # total simulated events (sum S*N*T)
-    groups: List[dict] = field(default_factory=list)
-
-    def us_per_call(self) -> float:
-        return self.run_s / max(self.events, 1) * 1e6
-
-    def as_dict(self) -> dict:
-        return {"compiles": self.compiles,
-                "planned_groups": self.planned_groups,
-                "compile_s": round(self.compile_s, 3),
-                "run_s": round(self.run_s, 3),
-                "systems": self.systems, "events": self.events,
-                "us_per_event": self.us_per_call(), "groups": self.groups}
-
-
-_TRACE_CACHE: Dict = {}
+    Thin shim over ``repro.experiments.plan_points`` + ``execute``; returns
+    (metrics aligned with ``points`` — each a dict of (N,) arrays — and the
+    wall-clock/compile accounting), exactly like the PR-1 harness did.
+    """
+    warnings.warn(
+        "benchmarks.common.run_points/Point are deprecated; declare a "
+        "repro.experiments.Experiment (see docs/experiments.md)",
+        DeprecationWarning, stacklevel=2)
+    resolved = [ResolvedPoint(cfg=p.cfg, flags=p.flags,
+                              workloads=tuple(p.workloads), T=T,
+                              seed=p.seed, coords=(("point", str(i)),))
+                for i, p in enumerate(points)]
+    result = execute(plan_points(resolved, name="run_points"))
+    return list(result.metrics), result.info
 
 
 def _traces(workloads: Sequence[str], T: int, seed: int
             ) -> Tuple[np.ndarray, np.ndarray]:
-    pairs = []
-    for i, w in enumerate(workloads):
-        k = (w, T, node_seed(seed, i))
-        if k not in _TRACE_CACHE:
-            _TRACE_CACHE[k] = generate(w, T, node_seed(seed, i))
-        pairs.append(_TRACE_CACHE[k])
-    return (np.stack([a for a, _ in pairs]),
-            np.stack([g for _, g in pairs]))
-
-
-_EXEC_CACHE: Dict = {}
-
-
-def _compiled_sweep(cfg: FamConfig, S: int, N: int, T: int,
-                    info: Optional[SweepInfo] = None):
-    """AOT-compiled batched runner for (static shape, S, N, T); compile time
-    lands in ``info`` (zero when the executable is cached)."""
-    import jax
-    import jax.numpy as jnp
-    key = (cfg.static_shape(), S, N, T)
-    if key not in _EXEC_CACHE:
-        fn = build_sweep(cfg, N)
-        p_proto = FamParams.of(cfg)
-        params_shape = jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct((S,) + jnp.shape(x), x.dtype),
-            p_proto)
-        t0 = time.perf_counter()
-        compiled = fn.lower(
-            params_shape,
-            jax.ShapeDtypeStruct((S, N, T), jnp.int32),
-            jax.ShapeDtypeStruct((S, N, T), jnp.float32)).compile()
-        dt = time.perf_counter() - t0
-        _EXEC_CACHE[key] = compiled
-        if info is not None:
-            info.compiles += 1
-            info.compile_s += dt
-            info.groups.append({"static_shape": str(cfg.static_shape()),
-                                "S": S, "N": N, "T": T,
-                                "compile_s": round(dt, 3)})
-    return _EXEC_CACHE[key]
-
-
-def run_points(points: Sequence[Point], T: int
-               ) -> Tuple[List[Dict[str, np.ndarray]], SweepInfo]:
-    """Run every point, batching all points that share a compiled shape.
-
-    Returns (metrics aligned with ``points`` — each a dict of (N,) arrays —
-    and the wall-clock/compile accounting).
-    """
-    import jax
-
-    info = SweepInfo()
-    groups: Dict[Tuple, List[int]] = {}
-    for i, pt in enumerate(points):
-        key = (pt.cfg.static_shape(), len(pt.workloads))
-        groups.setdefault(key, []).append(i)
-    info.planned_groups = len(groups)
-
-    results: List[Optional[Dict[str, np.ndarray]]] = [None] * len(points)
-    for key, idxs in groups.items():
-        _, N = key
-        S = len(idxs)
-        cfg0 = points[idxs[0]].cfg
-        params = stack_params([FamParams.of(points[i].cfg, points[i].flags)
-                               for i in idxs])
-        tr = [_traces(points[i].workloads, T, points[i].seed) for i in idxs]
-        addrs = np.stack([a for a, _ in tr])
-        gaps = np.stack([g for _, g in tr])
-        compiled = _compiled_sweep(cfg0, S, N, T, info)
-        t0 = time.perf_counter()
-        out = compiled(params, addrs.astype(np.int32),
-                       gaps.astype(np.float32))
-        out = jax.block_until_ready(out)
-        info.run_s += time.perf_counter() - t0
-        info.systems += S
-        info.events += S * N * T
-        out = {k: np.asarray(v) for k, v in out.items()}
-        for j, i in enumerate(idxs):
-            results[i] = {k: v[j] for k, v in out.items()}
-    return results, info  # type: ignore[return-value]
+    """Node traces for one system (shared memoized cache with the
+    experiments executor; kept for the per-point reference path)."""
+    return trace_arrays(workloads, T, seed)
 
 
 # ---------------------------------------------------------------------------
@@ -215,22 +140,26 @@ def run_sim(cfg: FamConfig, flags: SimFlags, workloads: Sequence[str],
     return {k: np.asarray(v) for k, v in out.items()}, dt
 
 
-def engine_check(points: Sequence[Point], batched: Sequence[Dict[str, np.ndarray]],
-                 T: int) -> dict:
+def engine_check(points: Sequence[ResolvedPoint],
+                 batched: Sequence[Dict[str, np.ndarray]],
+                 T: Optional[int] = None) -> dict:
     """Cross-check a subset of batched results against the per-point path.
 
-    Returns a JSON-able record with the max relative metric difference plus
-    the per-point cost split: one steady run per point, and — for compile
-    keys first warmed during THIS check — the compile time alone (warm-up
-    minus that point's steady run, matching what the old one-compile-per-
-    point paradigm actually paid)."""
+    Each point's true T comes from ``pt.T`` (``T`` is a fallback for bare
+    Point shims). Returns a JSON-able record with the max relative metric
+    difference plus the per-point cost split: one steady run per point,
+    and — for compile keys first warmed during THIS check — the compile
+    time alone (warm-up minus that point's steady run, matching what the
+    old one-compile-per-point paradigm actually paid)."""
     max_rel = 0.0
     steady = 0.0
     compile_s = 0.0
     for pt, got in zip(points, batched):
-        key = (pt.cfg, pt.flags, len(pt.workloads), T)
+        T_pt = getattr(pt, "T", None) or T
+        key = (pt.cfg, pt.flags, len(pt.workloads), T_pt)
         fresh = key not in _SIM_COMPILE_S
-        ref, dt = run_sim(pt.cfg, pt.flags, list(pt.workloads), T, pt.seed)
+        ref, dt = run_sim(pt.cfg, pt.flags, list(pt.workloads), T_pt,
+                          pt.seed)
         steady += dt
         if fresh:
             compile_s += max(_SIM_COMPILE_S[key] - dt, 0.0)
@@ -244,17 +173,19 @@ def engine_check(points: Sequence[Point], batched: Sequence[Dict[str, np.ndarray
             "matches_1e-5": bool(max_rel < 1e-5)}
 
 
-def engine_row(name: str, points: Sequence[Point],
-               check_pts: Sequence[Point],
-               res: Dict[Point, Dict[str, np.ndarray]],
-               info: SweepInfo, T: int) -> dict:
+def engine_row(name: str, result: ExperimentResult,
+               check_pts: Sequence[ResolvedPoint]) -> dict:
     """The ``*_engine`` acceptance row shared by fig08/fig16: per-point
-    cross-check + recorded wall-clock comparison.
+    cross-check + recorded wall-clock comparison (and, from this PR on,
+    the sharded-vs-vmap bit-exactness record in ``engine.shard_check``).
 
     The per-point estimate scales the checked subset's cost to the whole
     figure the way the old path would have paid it: one compile per unique
     (cfg, flags, N) key plus one steady run per point."""
-    check = engine_check(check_pts, [res[p] for p in check_pts], T)
+    info = result.info
+    points = result.points
+    check = engine_check(check_pts,
+                         [result.metrics_for(p) for p in check_pts])
     uniq = lambda pts: len({(p.cfg, p.flags, len(p.workloads)) for p in pts})
     est_full = (check["per_point_compile_s"] *
                 uniq(points) / max(uniq(check_pts), 1) +
@@ -277,13 +208,18 @@ def engine_row(name: str, points: Sequence[Point],
     }
 
 
+def info_row(name: str, info: RunInfo) -> dict:
+    """The lightweight ``*_engine`` row used by figures without a per-point
+    cross-check: planned groups + the full accounting (per-group compile
+    and run wall-clock, sharding record)."""
+    return {"name": name, "us_per_call": info.us_per_call(),
+            "derived": f"groups={info.planned_groups}",
+            "engine": info.as_dict()}
+
+
 # ---------------------------------------------------------------------------
 # misc row helpers
 # ---------------------------------------------------------------------------
-
-def copies(workload: str, n: int) -> List[str]:
-    return [workload] * n
-
 
 def save_rows(figure: str, rows: List[dict]):
     RESULTS.mkdir(parents=True, exist_ok=True)

@@ -4,41 +4,41 @@ Paper claim: IPC gain flat for 64-512 B (slight peak at 128-256 B), falling
 beyond; 4096 B (page-on-touch) blows FAM latency up ~17x and IPC collapses.
 
 Block size is a *static* shape parameter (it sets the cache geometry), so
-the sweep engine costs one compile per block size — but the BASELINE and
-DRAM variants of every workload share that compile (2 x n_workloads systems
-per vmapped call). The per-point cross-check + wall-clock comparison for
-the acceptance gate lands in the ``fig08_engine`` row.
+the planner keys one compile group per block size — the BASELINE and DRAM
+variants of every workload share that group (2 x n_workloads systems per
+vmapped call). The per-point cross-check + wall-clock comparison for the
+acceptance gate lands in the ``fig08_engine`` row.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import (BASELINE, DRAM, FamConfig, Point,
-                               engine_row, fam_replace, geomean,
-                               run_points, save_rows, workloads)
+from benchmarks.common import (BASELINE, DRAM, FamConfig, engine_row,
+                               fam_replace, geomean, save_rows, workloads)
+from repro.experiments import Experiment, config_axis, flag_axis, workload_axis
 
 BLOCK_SIZES = [64, 128, 256, 512, 1024, 4096]
 T = 12_000
 
 
+def experiment(quick: bool = True) -> Experiment:
+    return Experiment(
+        name="fig08_blocksize", T=T,
+        base=fam_replace(FamConfig(), num_nodes=1),
+        axes=(config_axis("block", BLOCK_SIZES, param="block_bytes"),
+              workload_axis(workloads(quick)),
+              flag_axis("variant", {"base": BASELINE, "dram": DRAM})))
+
+
 def run(quick: bool = True):
     wls = workloads(quick)
-    points = []
-    for bs in BLOCK_SIZES:
-        cfg = fam_replace(FamConfig(), block_bytes=bs, num_nodes=1)
-        for w in wls:
-            points.append(Point(cfg, BASELINE, (w,)))
-            points.append(Point(cfg, DRAM, (w,)))
-    results, info = run_points(points, T)
-    res = dict(zip(points, results))
+    res = experiment(quick).run(cross_check_shard=True)
+    info = res.info
 
     rows = []
     for bs in BLOCK_SIZES:
-        cfg = fam_replace(FamConfig(), block_bytes=bs, num_nodes=1)
         gains, rels = [], []
         for w in wls:
-            base = res[Point(cfg, BASELINE, (w,))]
-            out = res[Point(cfg, DRAM, (w,))]
+            base = res.get(block=bs, workload=w, variant="base")
+            out = res.get(block=bs, workload=w, variant="dram")
             gains.append(float(out["ipc"][0] / max(base["ipc"][0], 1e-9)))
             rels.append(float(out["fam_latency"][0] /
                               max(base["fam_latency"][0], 1e-9)))
@@ -52,9 +52,11 @@ def run(quick: bool = True):
             "rel_fam_latency_geomean": geomean(rels),
         })
 
-    # engine acceptance: batched == per-point within 1e-5, and the recorded
-    # wall-clock comparison (per-point pays a compile per (flags, shape))
-    check_pts = [p for p in points if p.cfg.block_bytes == BLOCK_SIZES[0]]
-    rows.append(engine_row("fig08_engine", points, check_pts, res, info, T))
+    # engine acceptance: batched == per-point within 1e-5, the recorded
+    # wall-clock comparison (per-point pays a compile per (flags, shape)),
+    # and the sharded-vs-vmap bit-exactness record
+    check_pts = [p for p in res.points
+                 if p.cfg.block_bytes == BLOCK_SIZES[0]]
+    rows.append(engine_row("fig08_engine", res, check_pts))
     save_rows("fig08_blocksize", rows)
     return rows

@@ -5,29 +5,35 @@ Paper claims (geomeans): core-pf IPC gain 1.20/1.18/1.10 for 1/2/4 nodes;
 +DRAM prefetch -> 1.26/1.24/1.11; BW adaptation adds +4%/+8% at 2/4 nodes;
 FAM latency -29%/-34% (1/2 nodes); prefetches issued -18%/-21% (2/4 nodes).
 
-All four prefetch configs are dynamic flags, so the sweep engine runs ONE
-compile per node count (the node count sets the vmapped system width).
+All four prefetch configs are dynamic flags, so the planner keys ONE
+compile group per node count (the node count sets the vmapped system
+width).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import (ADAPT, BASELINE, CORE, DRAM, FamConfig,
-                               Point, copies, geomean, run_points,
-                               save_rows, workloads)
+                               geomean, info_row, save_rows, workloads)
+from repro.experiments import Experiment, flag_axis, nodes_axis, workload_axis
 
 T = 10_000
 NODE_COUNTS = (1, 2, 4)
 VARIANTS = {"base": BASELINE, "core": CORE, "dram": DRAM, "adapt": ADAPT}
 
 
+def experiment(quick: bool = True) -> Experiment:
+    return Experiment(
+        name="fig10_bw_adaptation", T=T, base=FamConfig(),
+        axes=(nodes_axis(NODE_COUNTS),
+              workload_axis(workloads(quick)),
+              flag_axis("variant", VARIANTS)))
+
+
 def run(quick: bool = True):
     wls = workloads(quick)
-    cfg = FamConfig()
-    points = [Point(cfg, fl, tuple(copies(w, n)))
-              for n in NODE_COUNTS for w in wls for fl in VARIANTS.values()]
-    results, info = run_points(points, T)
-    res = dict(zip(points, results))
+    res = experiment(quick).run()
+    info = res.info
 
     rows = []
     per_wl_4node = {}
@@ -37,9 +43,8 @@ def run(quick: bool = True):
         rel_pf = []
         hits = {"demand": [], "corepf": [], "demand_ad": [], "corepf_ad": []}
         for w in wls:
-            nodes = tuple(copies(w, n))
-            out = {k: res[Point(cfg, fl, nodes)]
-                   for k, fl in VARIANTS.items()}
+            out = {k: res.get(nodes=n, workload=w, variant=k)
+                   for k in VARIANTS}
             b_ipc = np.maximum(out["base"]["ipc"].mean(), 1e-9)
             b_lat = np.maximum(out["base"]["fam_latency"].mean(), 1e-9)
             for k in ("core", "dram", "adapt"):
@@ -71,8 +76,6 @@ def run(quick: bool = True):
     rows.append({"name": "fig11_per_workload_4node", "us_per_call": 0.0,
                  "derived": "see per_workload field",
                  "per_workload": per_wl_4node})
-    rows.append({"name": "fig10_engine", "us_per_call": info.us_per_call(),
-                 "derived": f"groups={info.planned_groups}",
-                 "engine": info.as_dict()})
+    rows.append(info_row("fig10_engine", info))
     save_rows("fig10_bw_adaptation", rows)
     return rows

@@ -6,37 +6,42 @@ Paper claims: weights 1/2/3 improve mean IPC by ~8/9/9% (4-node) and
 prefetches issued fall 17/31/37% with weight.
 
 FIFO vs WFQ and the WFQ weight are dynamic parameters, so the whole grid
-costs ONE compile per node count.
+plans into ONE compile group per node count.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (DRAM, WFQ, FamConfig, Point, copies,
-                               geomean, run_points, save_rows, workloads)
+from benchmarks.common import (DRAM, WFQ, FamConfig, geomean, info_row,
+                               save_rows, workloads)
+from repro.experiments import Experiment, flag_axis, nodes_axis, workload_axis
 
 T = 10_000
 WEIGHTS = (1, 2, 3)
 NODE_COUNTS = (2, 4)
+VARIANTS = {"fifo": DRAM, **{f"w{w}": WFQ(w) for w in WEIGHTS}}
+
+
+def experiment(quick: bool = True) -> Experiment:
+    return Experiment(
+        name="fig12_wfq", T=T, base=FamConfig(),
+        axes=(nodes_axis(NODE_COUNTS),
+              workload_axis(workloads(quick)),
+              flag_axis("variant", VARIANTS)))
 
 
 def run(quick: bool = True):
     wls = workloads(quick)
-    cfg = FamConfig()
-    variants = {"fifo": DRAM, **{f"w{w}": WFQ(w) for w in WEIGHTS}}
-    points = [Point(cfg, fl, tuple(copies(w, n)))
-              for n in NODE_COUNTS for w in wls for fl in variants.values()]
-    results, info = run_points(points, T)
-    res = dict(zip(points, results))
+    res = experiment(quick).run()
+    info = res.info
 
     rows = []
     for n in NODE_COUNTS:
         for w_ in WEIGHTS:
             gains, lat, pf, dh, ch = [], [], [], [], []
             for w in wls:
-                nodes = tuple(copies(w, n))
-                fifo = res[Point(cfg, DRAM, nodes)]
-                wfq = res[Point(cfg, WFQ(w_), nodes)]
+                fifo = res.get(nodes=n, workload=w, variant="fifo")
+                wfq = res.get(nodes=n, workload=w, variant=f"w{w_}")
                 gains.append(wfq["ipc"].mean() / max(fifo["ipc"].mean(), 1e-9))
                 lat.append(wfq["fam_latency"].mean() /
                            max(fifo["fam_latency"].mean(), 1e-9))
@@ -57,8 +62,6 @@ def run(quick: bool = True):
                 "demand_hit_fraction": float(np.mean(dh)),
                 "corepf_hit_fraction": float(np.mean(ch)),
             })
-    rows.append({"name": "fig12_engine", "us_per_call": info.us_per_call(),
-                 "derived": f"groups={info.planned_groups}",
-                 "engine": info.as_dict()})
+    rows.append(info_row("fig12_engine", info))
     save_rows("fig12_wfq", rows)
     return rows

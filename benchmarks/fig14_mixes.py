@@ -5,14 +5,16 @@ IPC over the non-adaptive (FIFO) prefetcher on average; the winner
 depends on the co-running mix.
 
 All six configs (baseline + 5 prefetch variants) are dynamic flags, so the
-whole figure runs in ONE compile (mixes x configs vmapped together).
+whole figure plans into ONE compile group (mixes x configs vmapped
+together).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import (ADAPT, BASELINE, CORE, DRAM, WFQ, FamConfig,
-                               Point, geomean, run_points, save_rows)
+                               geomean, info_row, save_rows)
+from repro.experiments import Experiment, flag_axis, mix_axis
 
 T = 10_000
 
@@ -30,22 +32,28 @@ CONFIGS = {"core": CORE, "fifo": DRAM, "adapt": ADAPT,
            "wfq1": WFQ(1), "wfq2": WFQ(2)}
 
 
+def _mixes(quick: bool):
+    return dict(list(MIXES.items())[:4]) if quick else MIXES
+
+
+def experiment(quick: bool = True) -> Experiment:
+    return Experiment(
+        name="fig14_mixes", T=T, base=FamConfig(),
+        axes=(mix_axis(_mixes(quick)),
+              flag_axis("variant", {"base": BASELINE, **CONFIGS})))
+
+
 def run(quick: bool = True):
-    cfg = FamConfig()
-    mixes = dict(list(MIXES.items())[:4]) if quick else MIXES
-    points = [Point(cfg, fl, tuple(wls))
-              for wls in mixes.values()
-              for fl in (BASELINE, *CONFIGS.values())]
-    results, info = run_points(points, T)
-    res = dict(zip(points, results))
+    mixes = _mixes(quick)
+    res = experiment(quick).run()
+    info = res.info
 
     rows = []
     adapt_over_fifo, wfq_over_fifo = [], []
     for mix, wls in mixes.items():
-        nodes = tuple(wls)
-        b_ipc = np.maximum(res[Point(cfg, BASELINE, nodes)]["ipc"], 1e-9)
-        r = {cname: geomean(res[Point(cfg, fl, nodes)]["ipc"] / b_ipc)
-             for cname, fl in CONFIGS.items()}
+        b_ipc = np.maximum(res.get(mix=mix, variant="base")["ipc"], 1e-9)
+        r = {cname: geomean(res.get(mix=mix, variant=cname)["ipc"] / b_ipc)
+             for cname in CONFIGS}
         adapt_over_fifo.append(r["adapt"] / r["fifo"])
         wfq_over_fifo.append(r["wfq2"] / r["fifo"])
         rows.append({
@@ -59,8 +67,6 @@ def run(quick: bool = True):
         "derived": (f"adapt_vs_fifo={np.mean(adapt_over_fifo):.3f};"
                     f"wfq2_vs_fifo={np.mean(wfq_over_fifo):.3f}"),
     })
-    rows.append({"name": "fig14_engine", "us_per_call": info.us_per_call(),
-                 "derived": f"groups={info.planned_groups}",
-                 "engine": info.as_dict()})
+    rows.append(info_row("fig14_engine", info))
     save_rows("fig14_mixes", rows)
     return rows

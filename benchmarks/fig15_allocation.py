@@ -6,16 +6,16 @@ Paper claims: with core-pf only, IPC decrement grows from ~10% (ratio 1) to
 variants matter most at high ratios.
 
 The allocation ratio is a dynamic parameter, so the ENTIRE figure — every
-ratio x config x workload — runs under a single compile.
+ratio x config x workload — plans into a single compile group.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (ADAPT, CORE, DRAM, WFQ, FamConfig, Point,
-                               copies, fam_replace, geomean, run_points,
-                               save_rows, workloads)
+from benchmarks.common import (ADAPT, CORE, DRAM, WFQ, FamConfig, geomean,
+                               info_row, save_rows, workloads)
 from repro.core.famsim import SimFlags
+from repro.experiments import Experiment, config_axis, flag_axis, workload_axis
 
 T = 10_000
 RATIOS = (1, 2, 4, 8)
@@ -24,29 +24,34 @@ VARIANTS = (("core", CORE), ("dram", DRAM), ("adapt", ADAPT),
             ("wfq2", WFQ(2)))
 
 
+def _wls(quick: bool):
+    return workloads(quick)[:4] if quick else workloads(False)
+
+
+def experiment(quick: bool = True) -> Experiment:
+    return Experiment(
+        name="fig15_allocation", T=T, base=FamConfig(), nodes=4,
+        axes=(config_axis("ratio", RATIOS, param="allocation_ratio"),
+              workload_axis(_wls(quick)),
+              flag_axis("variant", {"local": LOCAL, **dict(VARIANTS)})))
+
+
 def run(quick: bool = True):
-    wls = workloads(quick)[:4] if quick else workloads(False)
-    points = []
-    for ratio in RATIOS:
-        cfg = fam_replace(FamConfig(), allocation_ratio=ratio)
-        for w in wls:
-            nodes = tuple(copies(w, 4))
-            points.append(Point(cfg, LOCAL, nodes))
-            points.extend(Point(cfg, fl, nodes) for _, fl in VARIANTS)
-    results, info = run_points(points, T)
-    res = dict(zip(points, results))
+    wls = _wls(quick)
+    res = experiment(quick).run()
+    info = res.info
 
     rows = []
     for ratio in RATIOS:
-        cfg = fam_replace(FamConfig(), allocation_ratio=ratio)
         agg = {k: [] for k, _ in VARIANTS}
         for w in wls:
-            nodes = tuple(copies(w, 4))
-            l_ipc = np.maximum(res[Point(cfg, LOCAL, nodes)]["ipc"].mean(),
-                               1e-9)
-            for key, fl in VARIANTS:
-                agg[key].append(res[Point(cfg, fl, nodes)]["ipc"].mean() /
-                                l_ipc)
+            l_ipc = np.maximum(
+                res.get(ratio=ratio, workload=w, variant="local")
+                ["ipc"].mean(), 1e-9)
+            for key, _ in VARIANTS:
+                agg[key].append(
+                    res.get(ratio=ratio, workload=w, variant=key)
+                    ["ipc"].mean() / l_ipc)
         rows.append({
             "name": f"fig15_ratio{ratio}",
             "us_per_call": info.us_per_call(),
@@ -55,8 +60,6 @@ def run(quick: bool = True):
             "ratio": ratio,
             **{f"ipc_vs_all_local_{k}": geomean(v) for k, v in agg.items()},
         })
-    rows.append({"name": "fig15_engine", "us_per_call": info.us_per_call(),
-                 "derived": f"groups={info.planned_groups}",
-                 "engine": info.as_dict()})
+    rows.append(info_row("fig15_engine", info))
     save_rows("fig15_allocation", rows)
     return rows

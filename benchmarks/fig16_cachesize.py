@@ -5,8 +5,8 @@ Paper claims: average IPC gain 1.17/1.19/1.20/1.22 for 4/8/16/32 MB
 (+5% from 8->32 MB); pop2, roms, cc, bc, XSBench are the size-sensitive
 workloads.
 
-Cache size is a static shape parameter, so the sweep engine costs one
-compile per size — shared by the BASELINE and WFQ variants of every
+Cache size is a static shape parameter, so the planner keys one compile
+group per size — shared by the BASELINE and WFQ variants of every
 workload. The per-point cross-check + wall-clock comparison lands in the
 ``fig16_engine`` row.
 """
@@ -14,9 +14,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (BASELINE, WFQ, FamConfig, Point, copies,
-                               engine_row, fam_replace, geomean,
-                               run_points, save_rows, workloads)
+from benchmarks.common import (BASELINE, WFQ, FamConfig, engine_row,
+                               geomean, save_rows, workloads)
+from repro.experiments import Experiment, config_axis, flag_axis, workload_axis
 
 T = 16_000
 # cache capacities scaled with the scaled-down node stream (the paper's
@@ -24,24 +24,27 @@ T = 16_000
 SIZES_KB = (256, 512, 1024, 2048)
 
 
+def experiment(quick: bool = True) -> Experiment:
+    return Experiment(
+        name="fig16_cachesize", T=T, base=FamConfig(), nodes=4,
+        axes=(config_axis("cache", [kb << 10 for kb in SIZES_KB],
+                          param="dram_cache_bytes",
+                          labels=[str(kb) for kb in SIZES_KB]),
+              workload_axis(workloads(quick)),
+              flag_axis("variant", {"base": BASELINE, "wfq2": WFQ(2)})))
+
+
 def run(quick: bool = True):
     wls = workloads(quick)
-    points = []
-    for kb in SIZES_KB:
-        cfg = fam_replace(FamConfig(), dram_cache_bytes=kb << 10)
-        for w in wls:
-            points.append(Point(cfg, BASELINE, tuple(copies(w, 4))))
-            points.append(Point(cfg, WFQ(2), tuple(copies(w, 4))))
-    results, info = run_points(points, T)
-    res = dict(zip(points, results))
+    res = experiment(quick).run(cross_check_shard=True)
+    info = res.info
 
     rows = []
     for kb in SIZES_KB:
-        cfg = fam_replace(FamConfig(), dram_cache_bytes=kb << 10)
         gains, occ = [], []
         for w in wls:
-            base = res[Point(cfg, BASELINE, tuple(copies(w, 4)))]
-            out = res[Point(cfg, WFQ(2), tuple(copies(w, 4)))]
+            base = res.get(cache=kb, workload=w, variant="base")
+            out = res.get(cache=kb, workload=w, variant="wfq2")
             gains.append(out["ipc"].mean() / max(base["ipc"].mean(), 1e-9))
             occ.append(out["cache_occupancy"].mean())
         rows.append({
@@ -53,8 +56,8 @@ def run(quick: bool = True):
             "ipc_gain_geomean": geomean(gains),
         })
 
-    check_pts = [p for p in points
+    check_pts = [p for p in res.points
                  if p.cfg.dram_cache_bytes == SIZES_KB[0] << 10][:4]
-    rows.append(engine_row("fig16_engine", points, check_pts, res, info, T))
+    rows.append(engine_row("fig16_engine", res, check_pts))
     save_rows("fig16_cachesize", rows)
     return rows

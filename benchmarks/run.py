@@ -1,8 +1,14 @@
 """Benchmark entry point — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV per the scaffold contract and saves
-full JSON rows under results/benchmarks/. ``--full`` runs all 19 workloads
-per figure (slow); default is the quick representative subset.
+full JSON rows under results/benchmarks/.
+
+Select figures positionally and pass ``--full`` through to each figure's
+``run(quick=)``::
+
+    python -m benchmarks.run                  # all figures, quick subset
+    python -m benchmarks.run fig08 fig16      # just these two
+    python -m benchmarks.run --full fig14     # fig14 over all 19 workloads
 """
 from __future__ import annotations
 
@@ -14,13 +20,21 @@ import time
 # allow `python benchmarks/run.py` (script path on sys.path, repo root not)
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
+FIGURE_NAMES = ("fig08", "fig10", "fig12", "fig14", "fig15", "fig16")
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Run paper-figure benchmarks through repro.experiments")
+    ap.add_argument("figures", nargs="*", metavar="figure",
+                    help=f"figure names to run (default: all of "
+                         f"{', '.join(FIGURE_NAMES)})")
+    ap.add_argument("--full", action="store_true",
+                    help="all 19 workloads per figure (default: quick subset)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig08,fig10,fig12,fig14,fig15,fig16")
-    args = ap.parse_args()
+                    help="deprecated comma-list alternative to positional "
+                         "figure names (fig08,fig10,...)")
+    args = ap.parse_args(argv)
 
     from benchmarks import (fig08_blocksize, fig10_bw_adaptation, fig12_wfq,
                             fig14_mixes, fig15_allocation, fig16_cachesize)
@@ -29,8 +43,14 @@ def main() -> None:
         "fig12": fig12_wfq, "fig14": fig14_mixes,
         "fig15": fig15_allocation, "fig16": fig16_cachesize,
     }
+    keep = set(args.figures)
     if args.only:
-        keep = set(args.only.split(","))
+        keep |= set(args.only.split(","))
+    if keep:
+        unknown = keep - set(figures)
+        if unknown:
+            ap.error(f"unknown figures: {sorted(unknown)} "
+                     f"(choose from {list(figures)})")
         figures = {k: v for k, v in figures.items() if k in keep}
 
     print("name,us_per_call,derived")

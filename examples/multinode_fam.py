@@ -1,33 +1,32 @@
 """Multi-node pooled-memory study (paper §V-B/§V-C in miniature): 4 compute
 nodes share one FAM pool; compare the paper's configurations.
 
-All five configurations differ only in dynamic parameters (feature flags),
-so the batched sweep engine runs them as ONE compiled program — one vmapped
-call over 5 simulated systems.
+Declared through the first-class ``repro.experiments`` API: the five
+configurations are one flag axis, all differing only in dynamic parameters,
+so ``plan()`` resolves them into ONE compile group — one AOT compile, one
+vmapped (and, with multiple devices, S-sharded) call over 5 simulated
+systems, with trace generation overlapped against device simulation.
 
 Run:  PYTHONPATH=src python examples/multinode_fam.py
 """
-import time
-
 import numpy as np
 
 from repro.configs.base import FamConfig
-from repro.core.fam_params import FamParams, stack_params
-from repro.core.famsim import SimFlags, sweep
-from repro.core.traces import generate, node_seed
+from repro.core.famsim import SimFlags
+from repro.experiments import Experiment, flag_axis
 
 # paper §V-B/§V-C methodology: copies of the same application per node
-WORKLOADS = ["603.bwaves_s"] * 4
+WORKLOADS = ("603.bwaves_s",) * 4
 T = 12_000
 
-CONFIGS = [
-    ("baseline (no prefetch)", SimFlags(core_prefetch=False,
-                                        dram_prefetch=False)),
-    ("core prefetch", SimFlags(dram_prefetch=False)),
-    ("+ DRAM-cache prefetch (FIFO)", SimFlags()),
-    ("+ BW adaptation (source)", SimFlags(bw_adapt=True)),
-    ("+ WFQ w=2 (memory node)", SimFlags(wfq=True, wfq_weight=2)),
-]
+CONFIGS = {
+    "baseline (no prefetch)": SimFlags(core_prefetch=False,
+                                       dram_prefetch=False),
+    "core prefetch": SimFlags(dram_prefetch=False),
+    "+ DRAM-cache prefetch (FIFO)": SimFlags(),
+    "+ BW adaptation (source)": SimFlags(bw_adapt=True),
+    "+ WFQ w=2 (memory node)": SimFlags(wfq=True, wfq_weight=2),
+}
 
 
 def main():
@@ -37,31 +36,30 @@ def main():
           f"{cfg.dram_cache_bytes >> 20} MB DRAM cache, "
           f"{cfg.block_bytes} B blocks")
 
-    traces = [generate(w, T, node_seed(0, i))
-              for i, w in enumerate(WORKLOADS)]
-    addrs = np.stack([a for a, _ in traces])
-    gaps = np.stack([g for _, g in traces])
-    S = len(CONFIGS)
-    params = stack_params([FamParams.of(cfg, fl) for _, fl in CONFIGS])
+    exp = Experiment(name="multinode_fam", base=cfg, workloads=WORKLOADS,
+                     T=T, axes=(flag_axis("config", CONFIGS),))
+    plan = exp.plan()
+    print(f"plan: {plan.num_points} systems -> {plan.num_groups} compile "
+          f"group(s) {plan.describe()}")
 
-    t0 = time.perf_counter()
-    out = sweep(cfg, params, None, np.stack([addrs] * S),
-                np.stack([gaps] * S))
-    out = {k: np.asarray(v) for k, v in out.items()}
-    wall = time.perf_counter() - t0
-    print(f"{S} configurations x {len(WORKLOADS)} nodes x {T} events in one "
-          f"compile: {wall:.1f}s")
+    res = exp.run(cross_check_shard=True)
+    info = res.info
+    print(f"{info.systems} configurations x {len(WORKLOADS)} nodes x {T} "
+          f"events: compile {info.compile_s:.1f}s + run {info.run_s:.1f}s "
+          f"on {info.devices} device(s); sharded-vs-vmap bit_exact="
+          f"{info.shard_check['bit_exact']}")
 
     base = None
     print(f"{'config':32s} {'gm IPC':>8s} {'gain':>6s} {'FAM lat':>8s} "
           f"{'prefetches':>10s}")
-    for i, (name, _) in enumerate(CONFIGS):
-        gm = float(np.exp(np.mean(np.log(out["ipc"][i]))))
+    for name in CONFIGS:
+        out = res.get(config=name)
+        gm = float(np.exp(np.mean(np.log(out["ipc"]))))
         if base is None:
             base = gm
         print(f"{name:32s} {gm:8.3f} {gm/base:6.2f}x "
-              f"{np.mean(out['fam_latency'][i]):8.0f} "
-              f"{int(out['prefetches_issued'][i].sum()):10d}")
+              f"{np.mean(out['fam_latency']):8.0f} "
+              f"{int(out['prefetches_issued'].sum()):10d}")
 
 
 if __name__ == "__main__":

@@ -290,11 +290,12 @@ def _phase_c(cfg: FamConfig, p: FamParams, ns: NodeState, req,
     return ns
 
 
-def _make_run(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2):
-    """One-system step loop: run(params, addrs (N,T), gaps (N,T)) -> metrics.
+def _make_step(cfg: FamConfig, num_nodes: int):
+    """The shared per-event step: step(p, carry, (addr, gap, warm)).
 
-    Only the static shape parameters of ``cfg`` are read here; every
-    dynamic value comes from the traced ``FamParams``.
+    Both the classic fixed-T runner (``_make_run``) and the dynamic-T
+    masked runner (``_make_run_masked``) scan this exact function, so the
+    two paths execute identical floating-point programs on live steps.
     """
     D = cfg.prefetch_degree
 
@@ -337,30 +338,87 @@ def _make_run(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2):
         )(nodes, req, t.demand_finish, pf_fin, cpf_fin)
         return (nodes, t.new_busy), None
 
+    return step
+
+
+def _init_carry(cfg: FamConfig, p: FamParams, num_nodes: int):
+    one = _init_node(cfg, p)
+    nodes = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (num_nodes,) + x.shape).copy(), one)
+    return nodes, jnp.zeros((2,), jnp.float32)
+
+
+def _metrics(nodes: NodeState) -> Dict[str, jax.Array]:
+    ipc = nodes.instr / jnp.maximum(nodes.cycles, 1.0)
+    return {
+        "ipc": ipc,
+        "fam_latency": nodes.fam_lat_sum / jnp.maximum(nodes.fam_cnt, 1.0),
+        "demand_hit_fraction": nodes.demand_hit /
+            jnp.maximum(nodes.demand_fam, 1.0),
+        "corepf_hit_fraction": nodes.corepf_hit /
+            jnp.maximum(nodes.corepf_fam, 1.0),
+        "prefetches_issued": nodes.pf_issued,
+        "issue_rate": nodes.throttle.issue_rate,
+        "cache_occupancy": jax.vmap(dc.occupancy)(nodes.cache),
+    }
+
+
+def _make_run(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2):
+    """One-system step loop: run(params, addrs (N,T), gaps (N,T)) -> metrics.
+
+    Only the static shape parameters of ``cfg`` are read here; every
+    dynamic value comes from the traced ``FamParams``.
+    """
+    step = _make_step(cfg, num_nodes)
+
     def run(p: FamParams, addrs, gaps):
         N, T = addrs.shape
         assert N == num_nodes
         gaps = gaps.astype(jnp.float32) / p.cores_per_node  # aggregate stream
-        one = _init_node(cfg, p)
-        nodes = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (N,) + x.shape).copy(), one)
         warm = jnp.arange(T) >= int(T * warmup_frac)
         (nodes, _), _ = jax.lax.scan(
             lambda c, i: step(p, c, i),
-            (nodes, jnp.zeros((2,), jnp.float32)),
+            _init_carry(cfg, p, N),
             (addrs.T.astype(jnp.int32), gaps.T, warm))
-        ipc = nodes.instr / jnp.maximum(nodes.cycles, 1.0)
-        return {
-            "ipc": ipc,
-            "fam_latency": nodes.fam_lat_sum / jnp.maximum(nodes.fam_cnt, 1.0),
-            "demand_hit_fraction": nodes.demand_hit /
-                jnp.maximum(nodes.demand_fam, 1.0),
-            "corepf_hit_fraction": nodes.corepf_hit /
-                jnp.maximum(nodes.corepf_fam, 1.0),
-            "prefetches_issued": nodes.pf_issued,
-            "issue_rate": nodes.throttle.issue_rate,
-            "cache_occupancy": jax.vmap(dc.occupancy)(nodes.cache),
-        }
+        return _metrics(nodes)
+
+    return run
+
+
+def _make_run_masked(cfg: FamConfig, num_nodes: int):
+    """Dynamic-T runner for bucketed (padded) traces.
+
+    run(params, addrs (N, T_pad), gaps (N, T_pad), t_true, warm_start)
+    simulates only the first ``t_true`` events: padded tail steps compute
+    and are then discarded with a carry-select, so every piece of state —
+    including the final-state metrics (``issue_rate``, ``cache_occupancy``)
+    — is bit-identical to an unpadded run of length ``t_true``.
+
+    ``warm_start`` is the first accumulated event index, computed on the
+    host as ``int(t_true * warmup_frac)`` so it matches ``_make_run``'s
+    static arithmetic exactly. Both scalars are traced: one executable
+    serves every true length that pads to the same bucket.
+    """
+    step = _make_step(cfg, num_nodes)
+
+    def run(p: FamParams, addrs, gaps, t_true, warm_start):
+        N, T_pad = addrs.shape
+        assert N == num_nodes
+        gaps = gaps.astype(jnp.float32) / p.cores_per_node
+        i = jnp.arange(T_pad)
+        valid = i < t_true
+        warm = (i >= warm_start) & valid
+
+        def masked_step(c, inp):
+            addr, gap, w, v = inp
+            c2, _ = step(p, c, (addr, gap, w))
+            c = jax.tree.map(lambda a, b: jnp.where(v, a, b), c2, c)
+            return c, None
+
+        (nodes, _), _ = jax.lax.scan(
+            masked_step, _init_carry(cfg, p, N),
+            (addrs.T.astype(jnp.int32), gaps.T, warm, valid))
+        return _metrics(nodes)
 
     return run
 
@@ -405,6 +463,25 @@ def build_sweep(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2):
         run = _make_run(cfg, num_nodes, warmup_frac)
         _SWEEP_CACHE[key] = jax.jit(jax.vmap(run))
     return _SWEEP_CACHE[key]
+
+
+_MASKED_CACHE: Dict = {}
+
+
+def build_masked_vmap(cfg: FamConfig, num_nodes: int):
+    """Unjitted vmapped dynamic-T runner:
+    fn(params_batch, addrs (S, N, T_pad), gaps, t_true (S,), warm_start (S,))
+    -> metrics dict of (S, N) arrays.
+
+    Left unjitted on purpose: the ``repro.experiments`` executor wraps it in
+    either a plain ``jax.jit`` (single device) or a ``shard_map`` over the S
+    axis (multi-device) and AOT-compiles the result. One entry per
+    ``cfg.static_shape()``, like :func:`build_sweep`.
+    """
+    key = (cfg.static_shape(), num_nodes)
+    if key not in _MASKED_CACHE:
+        _MASKED_CACHE[key] = jax.vmap(_make_run_masked(cfg, num_nodes))
+    return _MASKED_CACHE[key]
 
 
 def sweep(cfg: FamConfig, params_batch: FamParams, flags: Optional[SimFlags],

@@ -1,0 +1,39 @@
+"""First-class experiment API over the FAM simulator: spec -> plan -> execute.
+
+* ``Experiment`` / axis constructors (``repro.experiments.spec``) —
+  declare a paper figure as named axes over ``FamConfig`` overrides,
+  ``SimFlags`` variants, workloads, node counts, T, and seeds.
+* ``plan`` / ``Plan`` (``repro.experiments.plan``) — resolve the grid into
+  compile groups keyed by ``(static_shape, N, T_bucket)``.
+* ``execute`` (``repro.experiments.executor``) — one AOT compile + one
+  (optionally device-sharded) vmapped call per group, with host trace
+  generation overlapped against device simulation.
+
+See docs/experiments.md for the compile-key model and migration notes.
+"""
+from repro.experiments.executor import (  # noqa: F401
+    ExperimentResult,
+    RunInfo,
+    execute,
+    trace_arrays,
+)
+from repro.experiments.plan import (  # noqa: F401
+    CompileGroup,
+    CompileKey,
+    Plan,
+    plan_points,
+    point_key,
+    t_bucket,
+)
+from repro.experiments.spec import (  # noqa: F401
+    Axis,
+    AxisValue,
+    Experiment,
+    ResolvedPoint,
+    config_axis,
+    flag_axis,
+    mix_axis,
+    nodes_axis,
+    seed_axis,
+    workload_axis,
+)

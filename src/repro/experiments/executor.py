@@ -1,0 +1,312 @@
+"""Plan executor: device sharding + async trace/sim overlap.
+
+One :class:`~repro.experiments.plan.CompileGroup` is one AOT compile and
+one device call: the group's S systems are vmapped together and — when
+more than one device is visible — the S axis is sharded across devices
+with ``repro.parallel.compat.shard_map`` (a 1-device run falls back to a
+plain ``jax.jit`` of the same vmapped program, so the two paths execute
+identical per-system code and are cross-checked bit-exact).
+
+Host-side trace generation for group i+1 overlaps device simulation of
+group i (double-buffered through a one-worker thread pool); trace arrays
+are memoized per ``(workload, T, node_seed)`` so repeated points are free.
+``ResolvedPoint.seed`` threads into ``traces.node_seed(seed, node_index)``
+— repeated points that differ only in seed simulate different traces.
+
+Compile time is measured separately from steady-state run time
+(``jit(...).lower(...).compile()`` + ``block_until_ready``) and recorded
+per group, so ``us_per_event`` reflects simulation only.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.fam_params import FamParams, stack_params
+from repro.core.famsim import build_masked_vmap
+from repro.core.traces import generate, node_seed
+from repro.experiments.plan import CompileGroup, Plan
+from repro.experiments.spec import ResolvedPoint
+
+
+@dataclass
+class RunInfo:
+    """Wall-clock / compile accounting for one executed plan."""
+
+    compiles: int = 0              # fresh compiles (0 if executables cached)
+    planned_groups: int = 0        # deterministic, unlike ``compiles``
+    compile_s: float = 0.0
+    run_s: float = 0.0
+    systems: int = 0
+    events: int = 0                # true simulated events (sum S*N*T)
+    padded_events: int = 0         # extra events paid to T-bucketing
+    devices: int = 1
+    groups: List[dict] = field(default_factory=list)
+    shard_check: Optional[dict] = None
+
+    def us_per_call(self) -> float:
+        return self.run_s / max(self.events, 1) * 1e6
+
+    def as_dict(self) -> dict:
+        d = {"compiles": self.compiles,
+             "planned_groups": self.planned_groups,
+             "compile_s": round(self.compile_s, 3),
+             "run_s": round(self.run_s, 3),
+             "systems": self.systems, "events": self.events,
+             "padded_events": self.padded_events,
+             "devices": self.devices,
+             "us_per_event": self.us_per_call(), "groups": self.groups}
+        if self.shard_check is not None:
+            d["shard_check"] = self.shard_check
+        return d
+
+
+class ExperimentResult:
+    """Per-point metrics + accounting, addressable by axis coordinates."""
+
+    def __init__(self, points: Sequence[ResolvedPoint],
+                 metrics: Sequence[Dict[str, np.ndarray]], info: RunInfo):
+        self.points = tuple(points)
+        self.metrics = list(metrics)
+        self.info = info
+        self._by_coords = {frozenset(p.coords): i
+                           for i, p in enumerate(self.points)}
+        self._by_point = {p: i for i, p in enumerate(self.points)}
+
+    def metrics_for(self, pt: ResolvedPoint) -> Dict[str, np.ndarray]:
+        return self.metrics[self._by_point[pt]]
+
+    def get(self, **coords) -> Dict[str, np.ndarray]:
+        """Metrics for the point at the given axis coordinates, e.g.
+        ``result.get(block=256, workload="LU", variant="dram")``. Every
+        axis must be specified; values are coerced to their string labels.
+        """
+        key = frozenset((k, str(v)) for k, v in coords.items())
+        try:
+            return self.metrics[self._by_coords[key]]
+        except KeyError:
+            raise KeyError(
+                f"no point at {dict(coords)!r}; axes present: "
+                f"{sorted({k for p in self.points for k, _ in p.coords})}"
+            ) from None
+
+
+# ---------------------------------------------------------------------------
+# Trace assembly (host side, overlappable)
+# ---------------------------------------------------------------------------
+
+_TRACE_CACHE: Dict = {}
+
+
+def trace_arrays(workloads: Sequence[str], T: int, seed: int
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """(N, T) node traces for one system; per-node seeds derive through
+    ``traces.node_seed`` (shared with ``famsim.simulate``), memoized."""
+    pairs = []
+    for i, w in enumerate(workloads):
+        k = (w, T, node_seed(seed, i))
+        if k not in _TRACE_CACHE:
+            _TRACE_CACHE[k] = generate(w, T, node_seed(seed, i))
+        pairs.append(_TRACE_CACHE[k])
+    return (np.stack([a for a, _ in pairs]),
+            np.stack([g for _, g in pairs]))
+
+
+@dataclass
+class _GroupData:
+    """Device-ready inputs for one compile group (S systems, padded)."""
+
+    params: FamParams
+    addrs: np.ndarray          # (S, N, T_pad) int32
+    gaps: np.ndarray           # (S, N, T_pad) float32
+    t_true: np.ndarray         # (S,) int32
+    warm_start: np.ndarray     # (S,) int32
+
+
+def _prepare(points: Sequence[ResolvedPoint], idxs: Sequence[int],
+             t_pad: int, warmup_frac: float) -> _GroupData:
+    pts = [points[i] for i in idxs]
+    N = len(pts[0].workloads)
+    S = len(pts)
+    addrs = np.zeros((S, N, t_pad), np.int32)
+    gaps = np.zeros((S, N, t_pad), np.float32)
+    for j, pt in enumerate(pts):
+        a, g = trace_arrays(pt.workloads, pt.T, pt.seed)
+        addrs[j, :, :pt.T] = a
+        gaps[j, :, :pt.T] = g
+    params = stack_params([FamParams.of(pt.cfg, pt.flags) for pt in pts])
+    t_true = np.array([pt.T for pt in pts], np.int32)
+    # host-side int arithmetic, matching famsim._make_run's static
+    # ``int(T * warmup_frac)`` exactly
+    warm_start = np.array([int(pt.T * warmup_frac) for pt in pts], np.int32)
+    return _GroupData(params, addrs, gaps, t_true, warm_start)
+
+
+# ---------------------------------------------------------------------------
+# Compilation (vmap single-device / shard_map multi-device)
+# ---------------------------------------------------------------------------
+
+_EXEC_CACHE: Dict = {}
+
+
+def _compiled(cfg, S: int, N: int, t_pad: int, mode,
+              info: Optional[RunInfo] = None):
+    """AOT-compiled group runner. ``mode`` is ``"vmap"`` or
+    ``("shard", D)``; compile time lands in ``info`` (zero when cached)."""
+    import jax
+    import jax.numpy as jnp
+
+    key = (cfg.static_shape(), S, N, t_pad, mode)
+    if key not in _EXEC_CACHE:
+        fn = build_masked_vmap(cfg, N)
+        if mode != "vmap":
+            from jax.sharding import PartitionSpec as P
+
+            from repro.parallel import compat
+            _, D = mode
+            mesh = compat.make_mesh((D,), ("dev",))
+            fn = compat.shard_map(fn, mesh=mesh, in_specs=P("dev"),
+                                  out_specs=P("dev"))
+        p_proto = FamParams.of(cfg)
+        params_shape = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((S,) + jnp.shape(x), x.dtype),
+            p_proto)
+        i32 = jnp.int32
+        t0 = time.perf_counter()
+        compiled = jax.jit(fn).lower(
+            params_shape,
+            jax.ShapeDtypeStruct((S, N, t_pad), i32),
+            jax.ShapeDtypeStruct((S, N, t_pad), jnp.float32),
+            jax.ShapeDtypeStruct((S,), i32),
+            jax.ShapeDtypeStruct((S,), i32)).compile()
+        dt = time.perf_counter() - t0
+        _EXEC_CACHE[key] = compiled
+        if info is not None:
+            info.compiles += 1
+            info.compile_s += dt
+    return _EXEC_CACHE[key]
+
+
+def _run_group(data: _GroupData, compiled) -> Dict[str, np.ndarray]:
+    import jax
+    out = compiled(data.params, data.addrs, data.gaps, data.t_true,
+                   data.warm_start)
+    out = jax.block_until_ready(out)
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def _pad_systems(idxs: Sequence[int], D: int) -> List[int]:
+    """Pad the group's point-index list so S divides the device count."""
+    idxs = list(idxs)
+    rem = len(idxs) % D
+    if rem:
+        idxs += [idxs[-1]] * (D - rem)
+    return idxs
+
+
+# ---------------------------------------------------------------------------
+# The executor
+# ---------------------------------------------------------------------------
+
+def execute(plan: Plan, *, devices: Optional[int] = None,
+            overlap: bool = True, warmup_frac: float = 0.2,
+            cross_check_shard: bool = False) -> ExperimentResult:
+    """Run every point of ``plan``; one device call per compile group.
+
+    devices: shard each group's S axis over this many devices (default:
+        all visible). 1 uses the plain vmapped path.
+    overlap: double-buffer host trace generation for group i+1 under the
+        device simulation of group i.
+    cross_check_shard: re-run the first group through the *other* path
+        (shard_map vs vmap) and record whether the metrics are bit-exact
+        in ``info.shard_check``.
+    """
+    import jax
+
+    D = len(jax.devices()) if devices is None else devices
+    info = RunInfo(planned_groups=plan.num_groups, devices=D)
+
+    exec_idxs: List[List[int]] = []
+    for g in plan.groups:
+        exec_idxs.append(_pad_systems(g.indices, D) if D > 1
+                         else list(g.indices))
+    mode = ("shard", D) if D > 1 else "vmap"
+
+    results: List[Optional[Dict[str, np.ndarray]]] = [None] * plan.num_points
+    pool = ThreadPoolExecutor(max_workers=1) if overlap and \
+        len(plan.groups) > 1 else None
+    try:
+        pending: Optional[Future] = None
+        if pool is not None:
+            pending = pool.submit(_prepare, plan.points, exec_idxs[0],
+                                  plan.groups[0].t_pad, warmup_frac)
+        group0_data = group0_out = None
+        for gi, g in enumerate(plan.groups):
+            if pool is not None:
+                data = pending.result()
+                if gi + 1 < len(plan.groups):
+                    nxt = plan.groups[gi + 1]
+                    pending = pool.submit(_prepare, plan.points,
+                                          exec_idxs[gi + 1],
+                                          nxt.t_pad, warmup_frac)
+            else:
+                data = _prepare(plan.points, exec_idxs[gi],
+                                g.t_pad, warmup_frac)
+            keep_group0 = gi == 0 and cross_check_shard
+
+            S_exec = len(exec_idxs[gi])
+            N, t_pad = g.key.num_nodes, g.t_pad
+            before = info.compiles
+            before_s = info.compile_s
+            compiled = _compiled(plan.points[g.indices[0]].cfg, S_exec, N,
+                                 t_pad, mode, info)
+            compile_s = info.compile_s - before_s
+            t0 = time.perf_counter()
+            out = _run_group(data, compiled)
+            run_s = time.perf_counter() - t0
+            if keep_group0:
+                group0_data, group0_out = data, out
+
+            true_events = sum(len(plan.points[i].workloads) *
+                              plan.points[i].T for i in g.indices)
+            info.run_s += run_s
+            info.systems += g.size
+            info.events += true_events
+            info.padded_events += S_exec * N * t_pad - true_events
+            info.groups.append({
+                "static_shape": str(g.key.static_shape),
+                "S": g.size, "S_exec": S_exec, "N": N, "T_pad": t_pad,
+                "compile_s": round(compile_s, 3), "run_s": round(run_s, 3),
+                "fresh_compile": info.compiles > before})
+            for j, i in enumerate(g.indices):
+                results[i] = {k: v[j] for k, v in out.items()}
+    finally:
+        if pool is not None:
+            pool.shutdown(wait=False)
+
+    if cross_check_shard and plan.groups:
+        info.shard_check = _shard_cross_check(plan, group0_data, group0_out,
+                                              exec_idxs[0], mode)
+    return ExperimentResult(plan.points, results, info)  # type: ignore[arg-type]
+
+
+def _shard_cross_check(plan: Plan, data: _GroupData,
+                       primary_out: Dict[str, np.ndarray],
+                       idxs: Sequence[int], primary_mode) -> dict:
+    """Compare the first group's (already computed) primary-path output
+    against a run through the *other* path — shard_map vs vmap — bit-exact
+    (the ROADMAP-mandated scale path must not change a single bit of any
+    metric)."""
+    g = plan.groups[0]
+    cfg = plan.points[g.indices[0]].cfg
+    S_exec, N, t_pad = len(idxs), g.key.num_nodes, g.t_pad
+    alt_mode = "vmap" if primary_mode != "vmap" else ("shard", 1)
+    alt = _run_group(data, _compiled(cfg, S_exec, N, t_pad, alt_mode))
+    bit_exact = all(np.array_equal(primary_out[k], alt[k])
+                    for k in primary_out)
+    return {"group": 0, "primary": str(primary_mode), "alt": str(alt_mode),
+            "systems": S_exec, "bit_exact": bool(bit_exact)}

@@ -1,0 +1,140 @@
+"""Compile-key planner: resolve a point list into compile groups.
+
+The simulator recompiles only when an array shape changes, so the compile
+key of a point is ``(cfg.static_shape(), num_nodes, T_bucket)``:
+
+* ``static_shape()`` — the shape-deciding subset of ``FamConfig`` (cache
+  geometry, table sizes, degrees, ``block_bytes``);
+* ``num_nodes`` — the vmapped system width;
+* ``T_bucket`` — the *canonical T bucket* deciding group membership. True
+  lengths round UP (never truncate) to a coarse geometric grid (1024,
+  1536, 2048, 3072, 4096, ... — alternating x1.5 / x1.33 steps) so
+  mixed-T experiments share executables. The group then *executes* at
+  ``t_pad`` — the max true T of its members, not the full bucket — so a
+  uniform-T group pays zero padding; the executor masks any padded tail
+  out of the simulation exactly (see ``famsim._make_run_masked``).
+
+Everything else — latencies, thresholds, the allocation ratio, the feature
+flags, the WFQ weight — is a dynamic ``FamParams`` scalar: a baseline and
+all its variants land in ONE group and share one compile. The plan is a
+plain, inspectable object; group membership and order are deterministic
+functions of the point list (first-appearance order), identical across
+processes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+from repro.experiments.spec import ResolvedPoint
+
+
+class CompileKey(NamedTuple):
+    """Everything that decides one compiled executable."""
+
+    static_shape: Tuple
+    num_nodes: int
+    t_bucket: int
+
+
+def t_bucket(T: int) -> int:
+    """Smallest canonical trace length >= T (NEVER truncates).
+
+    Canonical lengths are the geometric grid {1024, 1536} * 2^k — the
+    worst-case pad overhead is 50 % and any two lengths within ~1.5x of
+    each other share a bucket (and therefore an executable).
+    """
+    if T <= 0:
+        raise ValueError(f"trace length must be positive, got {T}")
+    b = 1024
+    while True:
+        if T <= b:
+            return b
+        if T <= b + b // 2:
+            return b + b // 2
+        b *= 2
+
+
+@dataclass(frozen=True)
+class CompileGroup:
+    """All points sharing one compiled executable.
+
+    ``key.t_bucket`` is the canonical bucket that decided *membership*;
+    ``t_pad`` is the length actually executed — the group's max true T.
+    A uniform-T group therefore pays ZERO padding; a mixed-T group pads
+    only up to its longest member, never to the full bucket.
+    """
+
+    key: CompileKey
+    indices: Tuple[int, ...]        # into Plan.points, first-appearance order
+    t_pad: int = 0
+
+    @property
+    def size(self) -> int:
+        return len(self.indices)
+
+
+@dataclass(frozen=True)
+class Plan:
+    """A resolved execution plan: points + their compile grouping."""
+
+    points: Tuple[ResolvedPoint, ...]
+    groups: Tuple[CompileGroup, ...]
+    name: str = ""
+
+    @property
+    def num_points(self) -> int:
+        return len(self.points)
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.groups)
+
+    def events(self) -> int:
+        """Total true simulated events (sum over points of N * T)."""
+        return sum(len(p.workloads) * p.T for p in self.points)
+
+    def padded_events(self) -> int:
+        """Extra events paid to bucketing (sum of N * (t_pad - T))."""
+        return sum(len(self.points[i].workloads) *
+                   (g.t_pad - self.points[i].T)
+                   for g in self.groups for i in g.indices)
+
+    def describe(self) -> List[dict]:
+        """JSON-able per-group summary (deterministic)."""
+        return [{"static_shape": str(g.key.static_shape),
+                 "N": g.key.num_nodes, "T_pad": g.t_pad,
+                 "S": g.size} for g in self.groups]
+
+
+def point_key(pt: ResolvedPoint,
+              bucket=t_bucket) -> CompileKey:
+    return CompileKey(pt.cfg.static_shape(), len(pt.workloads),
+                      bucket(pt.T))
+
+
+def plan_points(points: Sequence[ResolvedPoint], *, name: str = "",
+                bucket: Optional[object] = t_bucket) -> Plan:
+    """Group ``points`` by compile key, preserving first-appearance order.
+
+    ``bucket=None`` disables T-bucketing (each true T keys its own group —
+    useful for exactness tests and tiny one-off runs).
+    """
+    bucket_fn = bucket if bucket is not None else (lambda T: T)
+    groups: Dict[CompileKey, List[int]] = {}
+    order: List[CompileKey] = []
+    for i, pt in enumerate(points):
+        key = point_key(pt, bucket_fn)
+        if key.t_bucket < pt.T:
+            raise ValueError(
+                f"bucket {key.t_bucket} would truncate T={pt.T}")
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(i)
+    return Plan(points=tuple(points),
+                groups=tuple(
+                    CompileGroup(k, tuple(groups[k]),
+                                 t_pad=max(points[i].T for i in groups[k]))
+                    for k in order),
+                name=name)

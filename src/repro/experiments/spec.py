@@ -1,0 +1,185 @@
+"""Declarative experiment specs — the paper's figures as named axis grids.
+
+An :class:`Experiment` is the user-facing object: a base :class:`FamConfig`,
+defaults (T, seed, node count, flags), and a tuple of named :class:`Axis`
+objects. Each axis value contributes a slice of the final configuration —
+``FamConfig`` overrides, a :class:`SimFlags` variant, a workload (or an
+explicit per-node workload tuple), a node count, T, or a seed — and the
+grid is the Cartesian product of the axes.
+
+``Experiment.points()`` resolves every grid cell into a
+:class:`ResolvedPoint` (one simulated system) tagged with its axis
+coordinates, ``Experiment.plan()`` groups the points into compile groups
+(see ``repro.experiments.plan``), and ``Experiment.run()`` executes the
+plan and returns an :class:`~repro.experiments.executor.ExperimentResult`
+whose ``get(axis=label, ...)`` looks metrics up by coordinates.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+from repro.configs.base import FamConfig, fam_replace
+from repro.core.famsim import SimFlags
+
+
+@dataclass(frozen=True)
+class AxisValue:
+    """One position along an axis: the configuration slice it contributes.
+
+    ``cfg`` is a tuple of ``(field, value)`` pairs (kept as a tuple so the
+    value is hashable) applied to the experiment's base ``FamConfig``;
+    whether the swept field is a static shape parameter or a dynamic
+    ``FamParams`` scalar is the *planner's* concern, not the spec's.
+    """
+
+    label: str
+    cfg: Tuple[Tuple[str, Any], ...] = ()
+    flags: Optional[SimFlags] = None
+    workload: Optional[str] = None          # replicated over the node count
+    workloads: Optional[Tuple[str, ...]] = None  # explicit per-node tuple
+    nodes: Optional[int] = None
+    T: Optional[int] = None
+    seed: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class Axis:
+    name: str
+    values: Tuple[AxisValue, ...]
+
+    def __post_init__(self):
+        labels = [v.label for v in self.values]
+        if len(set(labels)) != len(labels):
+            raise ValueError(f"axis {self.name!r} has duplicate labels: "
+                             f"{labels}")
+
+
+# -- axis constructors for the common sweep kinds ---------------------------
+
+def config_axis(name: str, values: Sequence[Any], param: Optional[str] = None,
+                labels: Optional[Sequence[str]] = None) -> Axis:
+    """Sweep one ``FamConfig`` field (static or dynamic — the planner sorts
+    points into compile groups either way)."""
+    param = param or name
+    labels = [str(v) for v in values] if labels is None else list(labels)
+    return Axis(name, tuple(AxisValue(label=lb, cfg=((param, v),))
+                            for lb, v in zip(labels, values)))
+
+
+def flag_axis(name: str, variants: Mapping[str, SimFlags]) -> Axis:
+    """Sweep prefetcher/scheduler feature variants (always dynamic: every
+    variant shares its group's compile)."""
+    return Axis(name, tuple(AxisValue(label=k, flags=v)
+                            for k, v in variants.items()))
+
+
+def workload_axis(workloads: Sequence[str], name: str = "workload") -> Axis:
+    """One single-application system per workload; the node count (from a
+    ``nodes_axis`` or the experiment default) replicates it per node."""
+    return Axis(name, tuple(AxisValue(label=w, workload=w)
+                            for w in workloads))
+
+
+def mix_axis(mixes: Mapping[str, Sequence[str]], name: str = "mix") -> Axis:
+    """Explicit per-node workload tuples (paper Fig. 14 style mixes)."""
+    return Axis(name, tuple(AxisValue(label=k, workloads=tuple(v))
+                            for k, v in mixes.items()))
+
+
+def nodes_axis(counts: Sequence[int], name: str = "nodes") -> Axis:
+    return Axis(name, tuple(AxisValue(label=str(n), nodes=n)
+                            for n in counts))
+
+
+def seed_axis(seeds: Sequence[int], name: str = "seed") -> Axis:
+    return Axis(name, tuple(AxisValue(label=str(s), seed=s) for s in seeds))
+
+
+# -- resolved grid cells ----------------------------------------------------
+
+@dataclass(frozen=True)
+class ResolvedPoint:
+    """One fully-resolved simulated system of an experiment grid."""
+
+    cfg: FamConfig
+    flags: SimFlags
+    workloads: Tuple[str, ...]
+    T: int
+    seed: int = 0
+    coords: Tuple[Tuple[str, str], ...] = ()
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.workloads)
+
+
+@dataclass(frozen=True)
+class Experiment:
+    """A named grid of simulated systems over the FAM simulator."""
+
+    name: str
+    axes: Tuple[Axis, ...]
+    base: FamConfig = field(default_factory=FamConfig)
+    flags: SimFlags = field(default_factory=SimFlags)
+    workloads: Optional[Tuple[str, ...]] = None   # default when no axis sets one
+    nodes: int = 1
+    T: int = 10_000
+    seed: int = 0
+
+    def __post_init__(self):
+        names = [a.name for a in self.axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate axis names: {names}")
+
+    def points(self) -> Tuple[ResolvedPoint, ...]:
+        """Resolve the Cartesian product of the axes, in axis-major order.
+
+        Later axes' contributions override earlier ones where they collide
+        (e.g. a per-value T over the experiment default).
+        """
+        out = []
+        for combo in itertools.product(*(a.values for a in self.axes)):
+            cfg, flags = self.base, self.flags
+            # one workload source, overridden in axis order: ("single", w)
+            # replicates over the node count, ("tuple", ws) is explicit
+            wl = ("tuple", tuple(self.workloads)) if self.workloads else None
+            nodes, T, seed = self.nodes, self.T, self.seed
+            for av in combo:
+                if av.cfg:
+                    cfg = fam_replace(cfg, **dict(av.cfg))
+                if av.flags is not None:
+                    flags = av.flags
+                if av.workload is not None:
+                    wl = ("single", av.workload)
+                if av.workloads is not None:
+                    wl = ("tuple", tuple(av.workloads))
+                if av.nodes is not None:
+                    nodes = av.nodes
+                if av.T is not None:
+                    T = av.T
+                if av.seed is not None:
+                    seed = av.seed
+            workloads = None
+            if wl is not None:
+                workloads = (wl[1],) * nodes if wl[0] == "single" else wl[1]
+            if not workloads:
+                raise ValueError(
+                    f"experiment {self.name!r}: no workload for cell "
+                    f"{[av.label for av in combo]} — add a workload/mix "
+                    "axis or set Experiment.workloads")
+            coords = tuple((ax.name, av.label)
+                           for ax, av in zip(self.axes, combo))
+            out.append(ResolvedPoint(cfg=cfg, flags=flags,
+                                     workloads=workloads, T=T, seed=seed,
+                                     coords=coords))
+        return tuple(out)
+
+    def plan(self, **kw):
+        from repro.experiments.plan import plan_points
+        return plan_points(self.points(), name=self.name, **kw)
+
+    def run(self, *, plan_kw: Optional[dict] = None, **execute_kw):
+        from repro.experiments.executor import execute
+        return execute(self.plan(**(plan_kw or {})), **execute_kw)

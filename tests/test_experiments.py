@@ -1,0 +1,298 @@
+"""The repro.experiments API: the compile-key planner must be deterministic
+and group baseline+variants together; dynamic-T bucketing must pad (never
+truncate) and the padded masked runner must reproduce the unpadded
+per-point simulator; the device-sharded path must match the single-device
+vmap path bit-exactly; and Point.seed must thread through to the node
+traces."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FamConfig, fam_replace
+from repro.core.famsim import SimFlags, build_sim
+from repro.core.traces import generate, node_seed
+from repro.experiments import (Axis, AxisValue, Experiment, config_axis,
+                               execute, flag_axis, plan_points, seed_axis,
+                               t_bucket, trace_arrays, workload_axis)
+
+BASE = SimFlags(core_prefetch=False, dram_prefetch=False)
+DRAM = SimFlags()
+T = 900          # buckets to 1024; uniform-T, so the group executes at 900
+
+
+def _small_experiment():
+    return Experiment(
+        name="small", T=T,
+        axes=(workload_axis(["LU", "bfs"]),
+              flag_axis("variant", {"base": BASE, "dram": DRAM})))
+
+
+@pytest.fixture(scope="module")
+def small_result():
+    return _small_experiment().run(cross_check_shard=True)
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def test_baseline_and_variants_share_one_group():
+    plan = _small_experiment().plan()
+    assert plan.num_groups == 1
+    (g,) = plan.groups
+    assert g.indices == (0, 1, 2, 3)
+    assert g.key.num_nodes == 1 and g.key.t_bucket == 1024
+    # uniform-T group: executes at the true T, zero padding
+    assert g.t_pad == T and plan.padded_events() == 0
+
+
+def test_static_axis_splits_groups_dynamic_does_not():
+    exp = Experiment(
+        name="split", T=T,
+        axes=(config_axis("block", [128, 256], param="block_bytes"),
+              config_axis("ratio", [1, 8], param="allocation_ratio"),
+              workload_axis(["LU"])))
+    plan = exp.plan()
+    # block_bytes is static shape (2 groups); allocation_ratio is dynamic
+    assert plan.num_groups == 2
+    assert all(g.size == 2 for g in plan.groups)
+
+
+def test_t_bucketing_merges_and_never_truncates():
+    pts = []
+    for T_true in (700, 900, 1100):
+        pts += Experiment(name="t", T=T_true,
+                          axes=(workload_axis(["LU"]),)).points()
+    plan = plan_points(pts)
+    for g in plan.groups:
+        assert g.key.t_bucket >= g.t_pad
+        for i in g.indices:
+            assert g.t_pad >= plan.points[i].T      # pads, never truncates
+    # 700 and 900 share bucket 1024 and execute at 900; 1100 goes to the
+    # 1536 bucket but executes at its own length
+    assert [g.key.t_bucket for g in plan.groups] == [1024, 1536]
+    assert [g.t_pad for g in plan.groups] == [900, 1100]
+    assert plan.groups[0].size == 2
+    assert plan.padded_events() == 1 * (900 - 700)
+    # bucket=None disables bucketing entirely: one exact-T group each
+    assert plan_points(pts, bucket=None).num_groups == 3
+
+
+def test_workload_sources_override_in_axis_order():
+    """Whichever axis sets the workload source LAST wins — a mix axis after
+    a workload axis must not be silently discarded (and vice versa)."""
+    from repro.experiments import mix_axis
+    wl = workload_axis(["LU"])
+    mix = mix_axis({"m": ["bfs", "mg"]})
+    pts = Experiment(name="o1", T=T, axes=(wl, mix)).points()
+    assert all(p.workloads == ("bfs", "mg") for p in pts)
+    pts = Experiment(name="o2", T=T, nodes=2, axes=(mix, wl)).points()
+    assert all(p.workloads == ("LU", "LU") for p in pts)
+
+
+def test_t_bucket_properties():
+    for T_true in (1, 7, 1024, 1025, 5000, 12_000, 60_000, 250_000):
+        b = t_bucket(T_true)
+        assert b >= T_true                      # never truncates
+        assert t_bucket(b) == b                 # canonical (idempotent)
+        assert b < 2 * max(T_true, 1024)        # bounded pad overhead
+    with pytest.raises(ValueError):
+        t_bucket(0)
+
+
+def test_plan_keys_deterministic_across_processes():
+    """The fig08 plan's group keys (and order) must be identical in a fresh
+    interpreter — they are the compile cache keys."""
+    from benchmarks.fig08_blocksize import experiment
+    here = [repr(g.key) for g in experiment(quick=True).plan().groups]
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    snippet = (
+        "import sys; sys.path[:0] = [{root!r}, {src!r}]\n"
+        "from benchmarks.fig08_blocksize import experiment\n"
+        "for g in experiment(quick=True).plan().groups: print(repr(g.key))\n"
+    ).format(root=root, src=os.path.join(root, "src"))
+    out = subprocess.run([sys.executable, "-c", snippet],
+                         capture_output=True, text=True, check=True)
+    assert out.stdout.splitlines() == here
+
+
+def test_figure_plans_within_pr1_group_counts():
+    """plan() must report <= the PR-1 compile-group counts per figure:
+    fig08 one group per block size, fig10/fig12 one per node count,
+    fig14/fig15 ONE, fig16 one per cache size."""
+    from benchmarks import (fig08_blocksize, fig10_bw_adaptation, fig12_wfq,
+                            fig14_mixes, fig15_allocation, fig16_cachesize)
+    expect = {fig08_blocksize: 6, fig10_bw_adaptation: 3, fig12_wfq: 2,
+              fig14_mixes: 1, fig15_allocation: 1, fig16_cachesize: 4}
+    for mod, n in expect.items():
+        plan = mod.experiment(quick=True).plan()
+        assert plan.num_groups <= n, (mod.__name__, plan.describe())
+
+
+# ---------------------------------------------------------------------------
+# executor
+# ---------------------------------------------------------------------------
+
+def test_padded_executor_matches_unpadded_per_point(small_result):
+    """The masked executor must reproduce the classic build_sim run
+    bit-exactly — both for a uniform-T group (executed at exact T) and for
+    a genuinely padded point in a mixed-T group. Padding may cost compute,
+    never metrics."""
+    import jax.numpy as jnp
+
+    # uniform-T fixture group (t_pad == T)
+    a, g = generate("LU", T, node_seed(0, 0))
+    run = build_sim(FamConfig(), DRAM, 1)
+    ref = run(jnp.asarray(a[None]), jnp.asarray(g[None]))
+    got = small_result.get(workload="LU", variant="dram")
+    for k, v in ref.items():
+        np.testing.assert_array_equal(np.asarray(v), got[k], err_msg=k)
+
+    # mixed-T group: T=700 and T=900 share one executable at t_pad=900,
+    # so the T=700 point simulates 200 masked tail steps
+    exp = Experiment(name="mixed_t", workloads=("LU",),
+                     axes=(Axis("t", (AxisValue("700", T=700),
+                                      AxisValue("900", T=900))),))
+    plan = exp.plan()
+    assert plan.num_groups == 1 and plan.groups[0].t_pad == 900
+    res = execute(plan)
+    for T_true in (700, 900):
+        a, g = generate("LU", T_true, node_seed(0, 0))
+        ref = run(jnp.asarray(a[None]), jnp.asarray(g[None]))
+        got = res.get(t=T_true)
+        for k, v in ref.items():
+            np.testing.assert_array_equal(np.asarray(v), got[k],
+                                          err_msg=f"T={T_true} {k}")
+
+
+def test_sharded_path_bit_exact(small_result):
+    """The shard_map path must be numerically identical to the vmap path
+    (recorded by the executor's cross-check)."""
+    chk = small_result.info.shard_check
+    assert chk is not None and chk["bit_exact"] is True
+
+
+def test_sharded_two_devices_bit_exact():
+    """With 2 (forced host) devices, execute(devices=2) shards an odd S
+    over the mesh — padding the system axis — and must match the
+    single-device vmap results bit-exactly."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    snippet = """
+import os, sys
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                           + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, {src!r})
+import numpy as np, jax
+assert len(jax.devices()) == 2, jax.devices()
+from repro.experiments import Experiment, execute, workload_axis
+exp = Experiment(name="shard2", T=500,
+                 axes=(workload_axis(["LU", "bfs", "mg"]),))
+plan = exp.plan()
+r2 = execute(plan, devices=2)   # S=3 padded to 4 across the mesh
+r1 = execute(plan, devices=1)
+assert r2.info.devices == 2
+ok = all(np.array_equal(r2.metrics[i][k], r1.metrics[i][k])
+         for i in range(plan.num_points) for k in r1.metrics[i])
+print("BITEXACT", ok)
+""".format(src=os.path.join(root, "src"))
+    out = subprocess.run([sys.executable, "-c", snippet],
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "BITEXACT True" in out.stdout
+
+
+def test_overlap_matches_serial():
+    """Async double-buffered trace prep must not change any metric — on a
+    plan with MULTIPLE groups, so the thread-pool path actually runs (a
+    1-group plan disables the pool)."""
+    exp = Experiment(
+        name="overlap", T=600,
+        axes=(config_axis("block", [128, 256], param="block_bytes"),
+              workload_axis(["LU", "bfs"])))
+    plan = exp.plan()
+    assert plan.num_groups == 2
+    overlapped = execute(plan, overlap=True)
+    serial = execute(plan, overlap=False)
+    for i in range(plan.num_points):
+        for k, v in overlapped.metrics[i].items():
+            np.testing.assert_array_equal(v, serial.metrics[i][k])
+    # list-typed Experiment.workloads must coerce, not crash hashing
+    res = Experiment(name="listwl", T=600, workloads=["LU"],
+                     axes=(seed_axis([0]),)).run()
+    assert res.get(seed=0)["ipc"].shape == (1,)
+
+
+def test_info_records_per_group_wallclock(small_result):
+    info = small_result.info
+    assert info.planned_groups == 1 == len(info.groups)
+    g = info.groups[0]
+    for field in ("compile_s", "run_s", "S", "N", "T_pad", "static_shape"):
+        assert field in g
+    assert g["T_pad"] == T
+    assert info.events == 4 * 1 * T
+    assert info.padded_events == 0          # uniform-T: no padding paid
+    d = info.as_dict()
+    assert d["shard_check"]["bit_exact"] is True
+
+
+def test_result_coordinate_lookup(small_result):
+    out = small_result.get(workload="LU", variant="dram")
+    assert out["ipc"].shape == (1,)
+    with pytest.raises(KeyError, match="variant"):
+        small_result.get(workload="LU", variant="nope")
+
+
+# ---------------------------------------------------------------------------
+# seeds
+# ---------------------------------------------------------------------------
+
+def test_seed_threads_to_node_traces():
+    """Repeated points that differ only in seed must simulate different
+    traces (ResolvedPoint.seed -> traces.node_seed)."""
+    res = Experiment(name="seeds", T=T, workloads=("LU",),
+                     axes=(seed_axis([0, 1]),)).run()
+    a0 = res.get(seed=0)
+    a1 = res.get(seed=1)
+    assert not np.array_equal(a0["ipc"], a1["ipc"])
+    assert not np.array_equal(a0["fam_latency"], a1["fam_latency"])
+    # and the executor's trace assembly derives per-node seeds through
+    # traces.node_seed, like famsim.simulate
+    addrs, _ = trace_arrays(("LU", "bfs"), 600, seed=7)
+    for i, w in enumerate(("LU", "bfs")):
+        np.testing.assert_array_equal(addrs[i],
+                                      generate(w, 600, node_seed(7, i))[0])
+
+
+def test_point_seed_regression_through_shim():
+    """The deprecated run_points path must thread Point.seed too."""
+    from benchmarks.common import Point, run_points
+    pts = [Point(FamConfig(), DRAM, ("LU",), seed=0),
+           Point(FamConfig(), DRAM, ("LU",), seed=3)]
+    with pytest.warns(DeprecationWarning):
+        results, info = run_points(pts, T)
+    assert not np.array_equal(results[0]["ipc"], results[1]["ipc"])
+
+
+# ---------------------------------------------------------------------------
+# deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_run_points_deprecated_but_equivalent(small_result):
+    """run_points warns, and returns exactly what the Experiment path
+    produced for the same grid."""
+    from benchmarks.common import Point, run_points
+    pts = [Point(FamConfig(), fl, (w,))
+           for w in ("LU", "bfs") for fl in (BASE, DRAM)]
+    with pytest.warns(DeprecationWarning, match="Experiment"):
+        results, info = run_points(pts, T)
+    assert info.planned_groups == 1
+    names = {"base": BASE, "dram": DRAM}
+    for pt, got in zip(pts, results):
+        label = next(k for k, v in names.items() if v == pt.flags)
+        ref = small_result.get(workload=pt.workloads[0], variant=label)
+        for k, v in ref.items():
+            np.testing.assert_array_equal(v, got[k])
