@@ -13,10 +13,13 @@ against the non-adaptive (FIFO) prefetcher.
 Execution goes through :mod:`repro.experiments`: every figure declares its
 grid as an :class:`~repro.experiments.Experiment` (named axes over config
 overrides x flags x workloads), ``plan()`` resolves it into compile groups
-keyed by ``(static_shape, N, T_bucket)``, and ``execute()`` runs each group
-as ONE ahead-of-time compile and ONE (optionally device-sharded) vmapped
-call. Compile time is measured separately from steady-state run time, so
-reported us_per_call reflects simulation only.
+keyed by ``(geometry_free_shape, N, T_bucket)`` — cache geometry pads to
+each group's maximum and the system axis to canonical widths, so even
+block-size/cache-size sweeps (fig08/fig16) are ONE group — and
+``execute()`` runs each group as ONE ahead-of-time compile and ONE
+(optionally device-sharded) vmapped call. Compile time is measured
+separately from steady-state run time, so reported us_per_call reflects
+simulation only.
 
 ``Point``/``run_points`` remain as a deprecated shim over the same
 machinery; new code should declare an ``Experiment``.

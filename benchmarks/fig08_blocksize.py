@@ -3,11 +3,14 @@
 Paper claim: IPC gain flat for 64-512 B (slight peak at 128-256 B), falling
 beyond; 4096 B (page-on-touch) blows FAM latency up ~17x and IPC collapses.
 
-Block size is a *static* shape parameter (it sets the cache geometry), so
-the planner keys one compile group per block size — the BASELINE and DRAM
-variants of every workload share that group (2 x n_workloads systems per
-vmapped call). The per-point cross-check + wall-clock comparison for the
-acceptance gate lands in the ``fig08_engine`` row.
+Block size is fully *dynamic* since the padded-geometry refactor: the
+planner pads the cache allocation to the largest swept geometry (64 B
+blocks -> 16384 sets) and every block size's effective geometry rides
+along as traced ``FamParams`` scalars, so the WHOLE figure — every block
+size x workload x variant — plans into ONE compile group and one vmapped
+device call (bit-exact vs the per-point exact-geometry runs). The
+per-point cross-check + wall-clock comparison for the acceptance gate
+lands in the ``fig08_engine`` row.
 """
 from __future__ import annotations
 
@@ -32,6 +35,7 @@ def run(quick: bool = True):
     wls = workloads(quick)
     res = experiment(quick).run(cross_check_shard=True)
     info = res.info
+    assert info.planned_groups == 1, info.groups  # dynamic geometry: 1 compile
 
     rows = []
     for bs in BLOCK_SIZES:

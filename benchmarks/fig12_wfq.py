@@ -6,7 +6,9 @@ Paper claims: weights 1/2/3 improve mean IPC by ~8/9/9% (4-node) and
 prefetches issued fall 17/31/37% with weight.
 
 FIFO vs WFQ and the WFQ weight are dynamic parameters, so the whole grid
-plans into ONE compile group per node count.
+plans into ONE compile group per node count; the system axis S pads to
+canonical widths (and left the compile key), so workload subsets within
+~25 % of each other land on shared executables.
 """
 from __future__ import annotations
 

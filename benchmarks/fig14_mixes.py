@@ -6,7 +6,9 @@ depends on the co-running mix.
 
 All six configs (baseline + 5 prefetch variants) are dynamic flags, so the
 whole figure plans into ONE compile group (mixes x configs vmapped
-together).
+together); the system axis S pads to canonical widths (and left the
+compile key), so mix subsets within ~25 % of each other land on shared
+executables.
 """
 from __future__ import annotations
 

@@ -6,7 +6,9 @@ Paper claims: with core-pf only, IPC decrement grows from ~10% (ratio 1) to
 variants matter most at high ratios.
 
 The allocation ratio is a dynamic parameter, so the ENTIRE figure — every
-ratio x config x workload — plans into a single compile group.
+ratio x config x workload — plans into a single compile group; the system
+axis S pads to canonical widths (and left the compile key), so workload
+subsets within ~25 % of each other land on shared executables.
 """
 from __future__ import annotations
 

@@ -5,10 +5,13 @@ Paper claims: average IPC gain 1.17/1.19/1.20/1.22 for 4/8/16/32 MB
 (+5% from 8->32 MB); pop2, roms, cc, bc, XSBench are the size-sensitive
 workloads.
 
-Cache size is a static shape parameter, so the planner keys one compile
-group per size — shared by the BASELINE and WFQ variants of every
-workload. The per-point cross-check + wall-clock comparison lands in the
-``fig16_engine`` row.
+Cache size is fully *dynamic* since the padded-geometry refactor: the
+planner pads the cache allocation to the largest swept capacity (512
+sets at 2048 KB) and each capacity's effective set count masks it down,
+so the WHOLE figure — every size x workload x variant — plans into ONE
+compile group and one vmapped device call (bit-exact vs the per-point
+exact-geometry runs). The per-point cross-check + wall-clock comparison
+lands in the ``fig16_engine`` row.
 """
 from __future__ import annotations
 
@@ -38,6 +41,7 @@ def run(quick: bool = True):
     wls = workloads(quick)
     res = experiment(quick).run(cross_check_shard=True)
     info = res.info
+    assert info.planned_groups == 1, info.groups  # dynamic geometry: 1 compile
 
     rows = []
     for kb in SIZES_KB:

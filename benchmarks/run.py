@@ -4,11 +4,12 @@ Prints ``name,us_per_call,derived`` CSV per the scaffold contract and saves
 full JSON rows under results/benchmarks/.
 
 Select figures positionally and pass ``--full`` through to each figure's
-``run(quick=)``::
+``run(quick=)``; ``--plan`` dry-runs the planner instead of executing::
 
     python -m benchmarks.run                  # all figures, quick subset
     python -m benchmarks.run fig08 fig16      # just these two
     python -m benchmarks.run --full fig14     # fig14 over all 19 workloads
+    python -m benchmarks.run --plan           # print compile groups, run nothing
 """
 from __future__ import annotations
 
@@ -31,6 +32,10 @@ def main(argv=None) -> None:
                          f"{', '.join(FIGURE_NAMES)})")
     ap.add_argument("--full", action="store_true",
                     help="all 19 workloads per figure (default: quick subset)")
+    ap.add_argument("--plan", action="store_true",
+                    help="dry-run: print each figure's resolved compile "
+                         "groups (key, point count, pad overhead) without "
+                         "executing anything")
     ap.add_argument("--only", default=None,
                     help="deprecated comma-list alternative to positional "
                          "figure names (fig08,fig10,...)")
@@ -53,6 +58,10 @@ def main(argv=None) -> None:
                      f"(choose from {list(figures)})")
         figures = {k: v for k, v in figures.items() if k in keep}
 
+    if args.plan:
+        print_plans(figures, quick=not args.full)
+        return
+
     print("name,us_per_call,derived")
     for key, mod in figures.items():
         t0 = time.time()
@@ -61,6 +70,26 @@ def main(argv=None) -> None:
             print(f"{r['name']},{r['us_per_call']:.3f},\"{r['derived']}\"",
                   flush=True)
         print(f"# {key} wall={time.time() - t0:.1f}s", file=sys.stderr)
+
+
+def print_plans(figures, quick: bool) -> None:
+    """``--plan``: resolve and print every figure's compile groups without
+    generating a trace or compiling anything. One summary line per figure
+    (``<name>: G group(s), P points, E events (+X padded, O% overhead)``)
+    plus one indented line per group — deterministic, so tests assert the
+    one-group-per-figure ceilings on this exact output."""
+    for key, mod in figures.items():
+        plan = mod.experiment(quick=quick).plan()
+        events = plan.events()
+        padded = plan.padded_events()
+        print(f"{plan.name}: {plan.num_groups} group(s), "
+              f"{plan.num_points} points, {events} events "
+              f"(+{padded} padded, {padded / max(events, 1):.1%} overhead)")
+        for i, d in enumerate(plan.describe()):
+            print(f"  group {i}: S={d['S']} S_pad={d['S_pad']} "
+                  f"N={d['N']} T_pad={d['T_pad']} "
+                  f"pad_geom=({d['pad_sets']}x{d['pad_ways']}) "
+                  f"key={d['static_shape']}")
 
 
 if __name__ == "__main__":

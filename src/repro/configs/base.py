@@ -346,18 +346,33 @@ class FamConfig:
         """Cycles of FAM DDR occupancy to move `nbytes`."""
         return nbytes / (self.fam_bw_gbps / self.clock_ghz)  # bytes / (B/cycle)
 
-    def static_shape(self) -> Tuple:
-        """The compile-relevant (shape-deciding) subset of this config.
+    def geometry_free_shape(self) -> Tuple:
+        """The shape-deciding subset of this config *minus* the cache
+        geometry — the part no amount of padding can unify.
 
-        Two configs with equal ``static_shape()`` can share one compiled
-        simulator: everything else is carried as a traced ``FamParams``
-        scalar (see ``repro.core.fam_params``). ``block_bytes`` is static
-        because it sets the cache geometry and the page/block bit split.
+        The cache geometry (``num_sets``, ``cache_ways``) and the
+        page/block bit split (``block_bytes``) are NOT here: the planner
+        pads the cache state to the maximum swept ``(num_sets, ways)`` and
+        the effective geometry rides along as traced ``FamParams`` scalars
+        (``num_sets``/``cache_ways``/``block_bits``), so points that differ
+        only in geometry share one compiled executable.
         """
-        return (self.num_sets, self.cache_ways, self.prefetch_queue,
-                self.prefetch_degree, self.block_bytes,
+        return (self.prefetch_queue, self.prefetch_degree,
                 self.spp_signature_bits, self.spp_pattern_entries,
                 self.spp_signature_entries, self.spp_max_lookahead)
+
+    def static_shape(self) -> Tuple:
+        """The allocation-deciding subset of this config: this config's own
+        cache geometry (as the padded allocation) + the geometry-free shape.
+
+        Two configs with equal ``static_shape()`` can share one compiled
+        simulator; everything else — including the *effective* geometry and
+        ``block_bytes`` — is carried as a traced ``FamParams`` scalar (see
+        ``repro.core.fam_params``). The planner goes further: it groups by
+        ``geometry_free_shape()`` and pads the allocation to the group
+        maximum, so even geometry-swept points share one executable.
+        """
+        return (self.num_sets, self.cache_ways) + self.geometry_free_shape()
 
     def cxl_transfer_cycles(self, nbytes: int) -> float:
         flits = -(-max(nbytes, 28) // self.cxl_flit_bytes)

@@ -5,9 +5,18 @@ Node physical addresses are decomposed as  page | block | offset:
     block = (addr >> block_bits) & (blocks_per_page - 1)
 A *block address* (page << blocks_per_page_bits | block) is the unit the
 DRAM cache and prefetcher operate on (128-512 B sub-page blocks).
+
+Two flavours of every decomposition live here: the classic static one
+(``block_bytes`` a python int, shift amounts constant-folded) and a
+``dyn_*`` one whose shift amount is a **traced** ``block_bits`` scalar —
+the form the simulator uses now that the block size is a dynamic
+``FamParams`` value. Both compute identical integers for identical
+inputs (shifts and masks are exact), so swapping one for the other never
+changes a metric bit.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 PAGE_BITS = 12  # 4 KiB pages
@@ -36,3 +45,32 @@ def blocks_per_page(block_bytes: int) -> int:
 
 def from_page_block(page, block, block_bytes: int):
     return (page << (PAGE_BITS - block_bits(block_bytes))) + block
+
+
+# ---------------------------------------------------------------------------
+# Traced-geometry decomposition (block_bits is a jnp scalar)
+# ---------------------------------------------------------------------------
+
+def dyn_block_bits(block_bytes):
+    """Traced log2 for power-of-two block sizes (host ints also accepted)."""
+    b = jnp.asarray(block_bytes, jnp.int32)
+    return jnp.int32(31) - jax.lax.clz(b)
+
+
+def dyn_blocks_per_page(block_bits):
+    """``blocks_per_page`` with a traced ``block_bits`` shift amount."""
+    bb = jnp.asarray(block_bits, jnp.int32)
+    return jnp.left_shift(jnp.int32(1), jnp.int32(PAGE_BITS) - bb)
+
+
+def dyn_split(addr, block_bits):
+    """``split`` with a traced ``block_bits``: -> (page, block_in_page)."""
+    bb = jnp.asarray(block_bits, jnp.int32)
+    page = addr >> PAGE_BITS
+    block = (addr >> bb) & (dyn_blocks_per_page(bb) - 1)
+    return page, block
+
+
+def dyn_block_addr(addr, block_bits):
+    """Global block index with a traced ``block_bits`` shift amount."""
+    return addr >> jnp.asarray(block_bits, jnp.int32)

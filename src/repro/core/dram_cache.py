@@ -8,6 +8,18 @@ victim. ~7 B/block metadata => <5% of cache capacity (paper's 16 MB example).
 Functional jnp state -> jit/vmap/scan-safe; the same structure backs both
 the simulator and the production ``TieredBlockPool`` (where the "data" lives
 in an HBM block pool and slot index = HBM pool slot).
+
+**Padded geometry.** State arrays may be allocated at a *maximum* swept
+``(num_sets, ways)`` while the effective geometry rides along as (possibly
+traced) ``num_sets``/``ways`` scalars on every operation: the set hash is
+taken modulo the effective set count, and lookup/insert/LRU restrict tag
+matches, vacancy, and victim selection to the first ``ways`` ways. Because
+set indices never reach a padded row and way masks keep writes inside the
+effective ways, the padded region stays all-invalid forever and every
+operation is **bit-identical** to the same operation on an exactly-sized
+state (property-tested in ``tests/test_dram_cache_padded.py``). Passing
+``num_sets=None``/``ways=None`` (the default) uses the full array shape —
+the classic exact-geometry behaviour.
 """
 from __future__ import annotations
 
@@ -29,16 +41,31 @@ def init_cache(num_sets: int, ways: int) -> CacheState:
                       stamp=jnp.zeros((), jnp.int32))
 
 
-def _set_index(block_addr, num_sets: int):
+def _set_index(block_addr, num_sets):
+    """Set hash modulo the (possibly traced) effective set count."""
     h = (block_addr.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)) >> 7
-    return (h % jnp.uint32(num_sets)).astype(jnp.int32)
+    mod = jnp.asarray(num_sets).astype(jnp.uint32)
+    return (h % mod).astype(jnp.int32)
 
 
-def lookup(state: CacheState, block_addr) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """-> (hit, set_idx, way). Pure query; no state change."""
-    si = _set_index(block_addr, state.tags.shape[0])
+def _way_mask(state: CacheState, ways):
+    """(W_pad,) bool: True for the effective ways (``ways`` may be traced)."""
+    return jnp.arange(state.tags.shape[1]) < jnp.asarray(ways)
+
+
+def lookup(state: CacheState, block_addr, num_sets=None, ways=None
+           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """-> (hit, set_idx, way). Pure query; no state change.
+
+    ``num_sets``/``ways`` give the effective geometry of a padded state
+    (both may be traced scalars); ``None`` uses the full array shape.
+    """
+    si = _set_index(block_addr,
+                    state.tags.shape[0] if num_sets is None else num_sets)
     row = state.tags[si]
     match = row == (block_addr.astype(jnp.int32) + 1)
+    if ways is not None:
+        match = match & _way_mask(state, ways)
     hit = jnp.any(match)
     way = jnp.argmax(match).astype(jnp.int32)
     return hit, si, way
@@ -56,41 +83,67 @@ def touch(state: CacheState, set_idx, way, enable=True) -> CacheState:
                           stamp=stamp)
 
 
-def insert(state: CacheState, block_addr, enable=True
+def insert(state: CacheState, block_addr, enable=True,
+           num_sets=None, ways=None
            ) -> Tuple[CacheState, jax.Array, jax.Array]:
     """Fill one block: evict set-LRU victim if no vacancy.
 
-    Returns (state, evicted_tag-1 or -1, slot) where slot = set*ways + way
+    Returns (state, evicted_tag-1 or -1, slot) where slot = set*W_pad + way
     identifies the cache data location (used as HBM pool slot in tiering).
     ``enable`` masks the written values (in-place-friendly, see touch).
+    ``num_sets``/``ways`` give the effective geometry of a padded state:
+    vacancy and LRU victim selection never consider a padded way.
     """
     en = jnp.asarray(enable)
-    si = _set_index(block_addr, state.tags.shape[0])
+    si = _set_index(block_addr,
+                    state.tags.shape[0] if num_sets is None else num_sets)
     row_tags = state.tags[si]
     row_lru = state.lru[si]
     tag = block_addr.astype(jnp.int32) + 1
     already = row_tags == tag
-    has = jnp.any(already)
     vacant = row_tags == 0
+    victim_lru = row_lru
+    if ways is not None:
+        wmask = _way_mask(state, ways)
+        already = already & wmask
+        vacant = vacant & wmask
+        victim_lru = jnp.where(wmask, row_lru, jnp.iinfo(jnp.int32).max)
+    has = jnp.any(already)
     has_vacant = jnp.any(vacant)
     way = jnp.where(has, jnp.argmax(already),
                     jnp.where(has_vacant, jnp.argmax(vacant),
-                              jnp.argmin(row_lru))).astype(jnp.int32)
+                              jnp.argmin(victim_lru))).astype(jnp.int32)
     evicted = jnp.where(en & ~(has | has_vacant), row_tags[way] - 1, -1)
     stamp = state.stamp + en.astype(jnp.int32)
     new = CacheState(
         tags=state.tags.at[si, way].set(jnp.where(en, tag, row_tags[way])),
         lru=state.lru.at[si, way].set(jnp.where(en, stamp, row_lru[way])),
         stamp=stamp)
-    ways = state.tags.shape[1]
-    return new, evicted, si * ways + way
+    w_pad = state.tags.shape[1]
+    return new, evicted, si * w_pad + way
 
 
-def invalidate(state: CacheState, block_addr) -> CacheState:
-    hit, si, way = lookup(state, block_addr)
+def invalidate(state: CacheState, block_addr, num_sets=None, ways=None
+               ) -> CacheState:
+    hit, si, way = lookup(state, block_addr, num_sets=num_sets, ways=ways)
     tags = jnp.where(hit, state.tags.at[si, way].set(0), state.tags)
     return state._replace(tags=tags)
 
 
-def occupancy(state: CacheState) -> jax.Array:
-    return jnp.mean((state.tags > 0).astype(jnp.float32))
+def occupancy(state: CacheState, num_sets=None, ways=None) -> jax.Array:
+    """Fraction of the EFFECTIVE cache entries holding a valid tag.
+
+    The padded region never holds tags (see module docstring), so the sum
+    over the full array equals the sum over the effective region, and the
+    divisor uses the effective entry count — the quotient is bit-identical
+    to ``jnp.mean`` over an exactly-sized state (0/1 partial sums are
+    integers, exact in f32 below 2**24 entries).
+    """
+    filled = (state.tags > 0).astype(jnp.float32)
+    if num_sets is None and ways is None:
+        return jnp.mean(filled)
+    num_sets = state.tags.shape[0] if num_sets is None else num_sets
+    ways = state.tags.shape[1] if ways is None else ways
+    total = (jnp.asarray(num_sets, jnp.int32) *
+             jnp.asarray(ways, jnp.int32)).astype(jnp.float32)
+    return jnp.sum(filled) / total

@@ -17,7 +17,10 @@ DWRR share (demand W/(W+1), prefetch 1/(W+1)), else at full bandwidth
 Algorithm 1 (implemented verbatim in repro/core/wfq.py and used directly by
 the TieredBlockPool copy engine); the fluid form is what keeps the
 simulator's step vectorizable. Block-size ratio r is inherent here because
-service time is proportional to bytes.
+service time is proportional to bytes — and since the dynamic-geometry
+refactor the per-request byte counts (``block_bytes``/``demand_bytes``)
+are traced ``FamParams`` scalars, so block-size sweeps share this whole
+service model under one compile; nothing here depends on an array shape.
 """
 from __future__ import annotations
 

@@ -2,14 +2,19 @@
 
 The simulator's configuration splits into two kinds of parameter:
 
-* **static shape parameters** (stay on ``FamConfig``): set counts, table
-  entries, queue sizes, prefetch degrees, block size — anything that decides
-  an array shape or a bit-width. Changing one forces a recompile.
+* **static shape parameters** (stay on ``FamConfig``): the *padded* cache
+  geometry, table entries, queue sizes, prefetch degrees — anything that
+  decides an array allocation. Changing one forces a recompile.
 * **dynamic parameters** (:class:`FamParams`): latencies, bandwidths,
-  thresholds, weights, the allocation ratio, and the feature flags. These
+  thresholds, weights, the allocation ratio, the feature flags — and,
+  since the dynamic-geometry refactor, the *effective* cache geometry
+  (``num_sets``, ``cache_ways``, ``block_bits``/``block_bytes``). These
   are plain scalars threaded through the simulator as traced values, so a
   whole sweep over them (plus its baseline!) runs under ONE jit compile,
-  and ``jax.vmap`` batches independent simulated systems.
+  and ``jax.vmap`` batches independent simulated systems. The cache state
+  is allocated at the maximum swept ``(num_sets, ways)`` and every cache
+  operation masks down to the effective geometry (see
+  ``repro.core.dram_cache``) — bit-exactly equivalent to the unpadded run.
 
 ``FamParams`` deliberately mirrors the ``FamConfig`` attribute names it
 replaces (``fam_mem_latency``, ``cxl_min_latency_cycles``,
@@ -24,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FamConfig
+from repro.core.addresses import block_bits
 
 
 class FamParams(NamedTuple):
@@ -40,8 +46,12 @@ class FamParams(NamedTuple):
     cxl_min_latency_cycles: jax.Array
     fam_cycles_per_byte: jax.Array     # DDR occupancy per byte moved
     demand_bytes: jax.Array
-    block_bytes: jax.Array             # service-size copy; shapes use the
-                                       # static FamConfig.block_bytes
+    block_bytes: jax.Array             # service size (bytes moved per fill)
+    # effective cache geometry (the CacheState is allocated at the padded
+    # maximum; these traced scalars mask it down — see repro.core.dram_cache)
+    num_sets: jax.Array                # i32 effective set count
+    cache_ways: jax.Array              # i32 effective associativity
+    block_bits: jax.Array              # i32 log2(block_bytes): traced shift
     # prefetcher / throttle
     spp_confidence_threshold: jax.Array
     sample_interval: jax.Array
@@ -80,6 +90,9 @@ class FamParams(NamedTuple):
             fam_cycles_per_byte=f32(cfg.fam_service_cycles(1)),
             demand_bytes=f32(cfg.demand_bytes),
             block_bytes=f32(cfg.block_bytes),
+            num_sets=i32(cfg.num_sets),
+            cache_ways=i32(cfg.cache_ways),
+            block_bits=i32(block_bits(cfg.block_bytes)),
             spp_confidence_threshold=f32(cfg.spp_confidence_threshold),
             sample_interval=i32(cfg.sample_interval),
             latency_noise_threshold=f32(cfg.latency_noise_threshold),

@@ -17,17 +17,24 @@ fractions. The core model is analytic: cycles = sum(gap) + sum(stall/MLP).
 
 Configuration is split two ways (see ``repro.core.fam_params``):
 
-* ``FamConfig`` supplies the **static shape parameters** (cache geometry,
-  table sizes, degrees) that are baked into the compiled program;
+* ``FamConfig`` supplies the **static shape parameters** (the *padded*
+  cache allocation, table sizes, degrees) that are baked into the
+  compiled program;
 * ``FamParams`` carries every **dynamic scalar** (latencies, bandwidths,
-  thresholds, the allocation ratio, and the feature flags) as traced
-  values.
+  thresholds, the allocation ratio, the feature flags — and the
+  *effective* cache geometry ``num_sets``/``cache_ways``/``block_bits``)
+  as traced values.
+
+The cache state may be allocated at a maximum swept ``(num_sets, ways)``
+(``pad_sets``/``pad_ways`` on the builders) while each system's effective
+geometry masks it down per operation (``repro.core.dram_cache``) — block
+size included, via the traced ``block_bits`` address split — bit-exactly
+equivalent to the unpadded run.
 
 ``build_sim`` keeps the classic one-system API (params become XLA
 constants).  ``sweep``/``build_sweep`` vmap the same step function over a
 batch of independent simulated systems — sweep points x workloads — so a
-whole paper figure costs ONE jit compile per static cache shape instead of
-one per sweep point.
+whole paper figure costs ONE jit compile, geometry sweeps included.
 """
 from __future__ import annotations
 
@@ -42,7 +49,8 @@ from repro.configs.base import FamConfig
 from repro.core import dram_cache as dc
 from repro.core import prefetch_queue as pq
 from repro.core import spp as spp_lib
-from repro.core.addresses import PAGE_BITS, block_bits
+from repro.core.addresses import (PAGE_BITS, dyn_block_addr,
+                                  dyn_blocks_per_page, dyn_split)
 from repro.core.fam_controller import arbitrate
 from repro.core.fam_params import FamParams, stack_params
 from repro.core.throttle import (ThrottleState, init_throttle, maybe_adapt,
@@ -86,11 +94,16 @@ class NodeState(NamedTuple):
     pf_issued: jax.Array       # DRAM-cache prefetches issued to FAM
 
 
-def _init_node(cfg: FamConfig, p: FamParams) -> NodeState:
+def _init_node(cfg: FamConfig, p: FamParams,
+               pad_sets: Optional[int] = None,
+               pad_ways: Optional[int] = None) -> NodeState:
+    """``pad_sets``/``pad_ways`` size the cache *allocation* (>= every
+    effective geometry in the batch); default: ``cfg``'s own geometry."""
     f0 = jnp.float32(0.0)
     return NodeState(
         clock=f0, spp=spp_lib.init_spp(cfg),
-        cache=dc.init_cache(cfg.num_sets, cfg.cache_ways),
+        cache=dc.init_cache(pad_sets or cfg.num_sets,
+                            pad_ways or cfg.cache_ways),
         queue=pq.init_queue(cfg.prefetch_queue),
         throttle=init_throttle(p),
         core_last=jnp.int32(-1), core_stride=jnp.int32(0),
@@ -109,14 +122,25 @@ def _is_fam_page(allocation_ratio, page):
     return (h % mod) != 0
 
 
-def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm):
+def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
+             live=True):
     """Per-node pre-arbitration work. Returns (ns, req) where req carries
-    this node's demand + prefetch candidates."""
-    bb = block_bits(cfg.block_bytes)
-    clock = ns.clock + gap
+    this node's demand + prefetch candidates.
+
+    ``live`` (a traced bool in the dynamic-T masked runner) gates every
+    state write through the per-op ``enable`` masks that already exist:
+    a non-live step is an exact no-op — bit-identical carry out — without
+    the whole-state carry-select (and its full-array copies) the masked
+    runner used to pay per step. ``live=True`` folds to the classic step.
+    """
+    # effective geometry: traced scalars masking the padded cache state
+    bb = jnp.asarray(p.block_bits, jnp.int32)
+    eff_sets, eff_ways = p.num_sets, p.cache_ways
+    live = jnp.asarray(live)
+    clock = ns.clock + jnp.where(live, gap, 0.0)
 
     # retire completed prefetches into the cache (bounded per step)
-    done = (ns.queue.block > 0) & (ns.queue.finish <= clock)
+    done = (ns.queue.block > 0) & (ns.queue.finish <= clock) & live
     score = jnp.where(done, -ns.queue.finish, -jnp.inf)
     _, idxs = jax.lax.top_k(score, COMPLETIONS_PER_STEP)
     cache = ns.cache
@@ -127,7 +151,8 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm):
         slot = idxs[i]
         ok = done[slot] & (queue_block[slot] > 0)
         blk = queue_block[slot] - 1
-        cache, _, _ = dc.insert(cache, blk, enable=ok)
+        cache, _, _ = dc.insert(cache, blk, enable=ok,
+                                num_sets=eff_sets, ways=eff_ways)
         queue_block = queue_block.at[slot].set(
             jnp.where(ok, 0, queue_block[slot]))
         return cache, queue_block
@@ -136,10 +161,11 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm):
                                            (cache, queue_block))
     queue = ns.queue._replace(block=queue_block)
 
-    page = (addr >> PAGE_BITS).astype(jnp.int32)
-    block_in_page = ((addr >> bb) & ((1 << (PAGE_BITS - bb)) - 1)).astype(jnp.int32)
-    gblock = (addr >> bb).astype(jnp.int32)
-    is_fam = _is_fam_page(p.allocation_ratio, page) & ~p.all_local
+    page, block_in_page = dyn_split(addr, bb)
+    page = page.astype(jnp.int32)
+    block_in_page = block_in_page.astype(jnp.int32)
+    gblock = dyn_block_addr(addr, bb).astype(jnp.int32)
+    is_fam = _is_fam_page(p.allocation_ratio, page) & ~p.all_local & live
 
     # core-prefetch fill buffer (LLC side): a demand whose line was core-
     # prefetched is served on-chip once the fill lands
@@ -149,7 +175,7 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm):
     cpb_fin = jnp.max(jnp.where(cb_match, ns.core_buf_fin, 0.0))
 
     # demand probe (masked out entirely when DRAM-cache prefetch is off)
-    hit, si, way = dc.lookup(cache, gblock)
+    hit, si, way = dc.lookup(cache, gblock, num_sets=eff_sets, ways=eff_ways)
     hit = hit & is_fam & p.dram_prefetch
     cache = dc.touch(cache, si, way, enable=hit)
     inflight, inflight_fin = pq.contains(queue, gblock)
@@ -162,22 +188,23 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm):
     # misses per paper §III; here the demand stream trains)
     spp, sig = spp_lib.update(cfg, ns.spp, page, block_in_page,
                               enable=is_fam & p.dram_prefetch)
-    bpp = 1 << (PAGE_BITS - bb)
+    bpp = dyn_blocks_per_page(bb)
     cand_gblock, cand_valid = spp_lib.predict(
         cfg, spp, page, block_in_page, sig, cfg.prefetch_degree, bpp=bpp,
         threshold=p.spp_confidence_threshold)
 
     def not_redundant(b):
-        h, _, _ = dc.lookup(cache, b)
+        h, _, _ = dc.lookup(cache, b, num_sets=eff_sets, ways=eff_ways)
         infl, _ = pq.contains(queue, b)
         return ~h & ~infl
 
     fresh = jax.vmap(not_redundant)(cand_gblock)
     pf_valid = cand_valid & fresh & is_fam & p.dram_prefetch
     pf_blocks = cand_gblock
-    # throttle: grant tokens for the surviving candidates
+    # throttle: grant tokens for the surviving candidates (the token
+    # bucket must not drift on non-live steps)
     want = jnp.sum(pf_valid.astype(jnp.int32))
-    thr, grant = take_tokens(ns.throttle, want, p.bw_adapt)
+    thr, grant = take_tokens(ns.throttle, want, p.bw_adapt & live)
     rank = jnp.cumsum(pf_valid.astype(jnp.int32))
     pf_valid = pf_valid & (rank <= grant)
     # queue-space gate (§III-A2: drop when the queue is full/threshold)
@@ -193,15 +220,17 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm):
     cpf_pages = (cpf_lines >> (PAGE_BITS - 6)).astype(jnp.int32)
     cpf_fam = jax.vmap(lambda pg: _is_fam_page(p.allocation_ratio, pg))(
         cpf_pages) & ~p.all_local
-    cpf_valid = stride_ok & cpf_fam & p.core_prefetch
+    cpf_valid = stride_ok & cpf_fam & p.core_prefetch & live
     cpf_gblock = (cpf_lines >> (bb - 6)).astype(jnp.int32)
-    cpf_hits = jax.vmap(lambda b: dc.lookup(cache, b)[0])(cpf_gblock) & \
-        p.dram_prefetch
+    cpf_hits = jax.vmap(
+        lambda b: dc.lookup(cache, b, num_sets=eff_sets, ways=eff_ways)[0]
+    )(cpf_gblock) & p.dram_prefetch
     cpf_to_fam = cpf_valid & ~cpf_hits
 
     ns = ns._replace(clock=clock, spp=spp, cache=cache, queue=queue,
-                     throttle=thr, core_last=line,
-                     core_stride=jnp.where(stride != 0, stride,
+                     throttle=thr,
+                     core_last=jnp.where(live, line, ns.core_last),
+                     core_stride=jnp.where(live & (stride != 0), stride,
                                            ns.core_stride))
     # NOTE: cpf_lines rides along in req so phase C fills the buffer with
     # exactly the lines validated here — recomputing them after the
@@ -212,7 +241,7 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm):
                pf_blocks=pf_blocks, pf_valid=pf_valid,
                cpf_lines=cpf_lines,
                cpf_valid=cpf_valid, cpf_hits=cpf_hits & cpf_valid,
-               cpf_to_fam=cpf_to_fam, gap=gap, warm=warm)
+               cpf_to_fam=cpf_to_fam, gap=gap, warm=warm, live=live)
     return ns, req
 
 
@@ -262,15 +291,17 @@ def _phase_c(cfg: FamConfig, p: FamParams, ns: NodeState, req,
     buf_line, buf_fin, ptr = jax.lax.fori_loop(
         0, CORE_PF_DEGREE, put, (buf_line, buf_fin, ptr))
 
+    live = req["live"]
     thr = observe(ns.throttle, lat, fam_miss, req["hit"],
-                  jnp.sum(req["pf_valid"].astype(jnp.int32)))
-    thr = maybe_adapt(p, thr, enabled=p.bw_adapt)
+                  jnp.sum(req["pf_valid"].astype(jnp.int32)),
+                  enable=live)
+    thr = maybe_adapt(p, thr, enabled=p.bw_adapt & live)
 
     # node-level accounting: the trace event stream aggregates the node's
     # cores, so per-event compute gaps shrink by 1/cores (higher FAM arrival
     # rate — the paper's congestion regime) while one event's stall only
     # blocks one core: stall_node = lat / (mlp * cores).
-    stall = lat / (p.mlp * p.cores_per_node)
+    stall = jnp.where(live, lat / (p.mlp * p.cores_per_node), 0.0)
     w = warm.astype(jnp.float32)
     npf = jnp.sum(req["pf_valid"].astype(jnp.int32)).astype(jnp.float32)
     ns = ns._replace(
@@ -291,19 +322,24 @@ def _phase_c(cfg: FamConfig, p: FamParams, ns: NodeState, req,
 
 
 def _make_step(cfg: FamConfig, num_nodes: int):
-    """The shared per-event step: step(p, carry, (addr, gap, warm)).
+    """The shared per-event step: step(p, carry, (addr, gap, warm, live)).
 
-    Both the classic fixed-T runner (``_make_run``) and the dynamic-T
-    masked runner (``_make_run_masked``) scan this exact function, so the
-    two paths execute identical floating-point programs on live steps.
+    Both the classic fixed-T runner (``_make_run``, live always True) and
+    the dynamic-T masked runner (``_make_run_masked``) scan this exact
+    function, so the two paths execute identical floating-point programs
+    on live steps — and a non-live step is an exact no-op on the carry
+    (every state write is gated through the per-op enable masks; the FAM
+    busy chains are preserved because no request is valid), which is what
+    lets the masked runner skip the whole-state carry-select it used to
+    pay per step.
     """
     D = cfg.prefetch_degree
 
     def step(p, carry, inputs):
         nodes, fam_busy = carry
-        addr, gap, warm = inputs     # addr/gap: (N,)
+        addr, gap, warm, live = inputs     # addr/gap: (N,)
         nodes, req = jax.vmap(
-            lambda ns, a, g: _phase_a(cfg, p, ns, a, g, warm))(
+            lambda ns, a, g: _phase_a(cfg, p, ns, a, g, warm, live))(
                 nodes, addr, gap)
 
         # finite prefetch input queue at the FAM controller: when the
@@ -341,14 +377,16 @@ def _make_step(cfg: FamConfig, num_nodes: int):
     return step
 
 
-def _init_carry(cfg: FamConfig, p: FamParams, num_nodes: int):
-    one = _init_node(cfg, p)
+def _init_carry(cfg: FamConfig, p: FamParams, num_nodes: int,
+                pad_sets: Optional[int] = None,
+                pad_ways: Optional[int] = None):
+    one = _init_node(cfg, p, pad_sets, pad_ways)
     nodes = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (num_nodes,) + x.shape).copy(), one)
     return nodes, jnp.zeros((2,), jnp.float32)
 
 
-def _metrics(nodes: NodeState) -> Dict[str, jax.Array]:
+def _metrics(nodes: NodeState, p: FamParams) -> Dict[str, jax.Array]:
     ipc = nodes.instr / jnp.maximum(nodes.cycles, 1.0)
     return {
         "ipc": ipc,
@@ -359,15 +397,20 @@ def _metrics(nodes: NodeState) -> Dict[str, jax.Array]:
             jnp.maximum(nodes.corepf_fam, 1.0),
         "prefetches_issued": nodes.pf_issued,
         "issue_rate": nodes.throttle.issue_rate,
-        "cache_occupancy": jax.vmap(dc.occupancy)(nodes.cache),
+        # occupancy over the EFFECTIVE geometry (padded region stays empty)
+        "cache_occupancy": jax.vmap(
+            lambda c: dc.occupancy(c, p.num_sets, p.cache_ways))(nodes.cache),
     }
 
 
-def _make_run(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2):
+def _make_run(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2,
+              pad_sets: Optional[int] = None,
+              pad_ways: Optional[int] = None):
     """One-system step loop: run(params, addrs (N,T), gaps (N,T)) -> metrics.
 
-    Only the static shape parameters of ``cfg`` are read here; every
-    dynamic value comes from the traced ``FamParams``.
+    Only the static shape parameters of ``cfg`` (plus the optional padded
+    cache allocation) are read here; every dynamic value — the effective
+    cache geometry included — comes from the traced ``FamParams``.
     """
     step = _make_step(cfg, num_nodes)
 
@@ -376,21 +419,26 @@ def _make_run(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2):
         assert N == num_nodes
         gaps = gaps.astype(jnp.float32) / p.cores_per_node  # aggregate stream
         warm = jnp.arange(T) >= int(T * warmup_frac)
+        live = jnp.ones((T,), jnp.bool_)
         (nodes, _), _ = jax.lax.scan(
             lambda c, i: step(p, c, i),
-            _init_carry(cfg, p, N),
-            (addrs.T.astype(jnp.int32), gaps.T, warm))
-        return _metrics(nodes)
+            _init_carry(cfg, p, N, pad_sets, pad_ways),
+            (addrs.T.astype(jnp.int32), gaps.T, warm, live))
+        return _metrics(nodes, p)
 
     return run
 
 
-def _make_run_masked(cfg: FamConfig, num_nodes: int):
+def _make_run_masked(cfg: FamConfig, num_nodes: int,
+                     pad_sets: Optional[int] = None,
+                     pad_ways: Optional[int] = None):
     """Dynamic-T runner for bucketed (padded) traces.
 
     run(params, addrs (N, T_pad), gaps (N, T_pad), t_true, warm_start)
-    simulates only the first ``t_true`` events: padded tail steps compute
-    and are then discarded with a carry-select, so every piece of state —
+    simulates only the first ``t_true`` events: padded tail steps run the
+    step with ``live=False``, which makes them exact no-ops on the carry
+    (every write gated through the per-op enable masks — no whole-state
+    carry-select, no full-array copies), so every piece of state —
     including the final-state metrics (``issue_rate``, ``cache_occupancy``)
     — is bit-identical to an unpadded run of length ``t_true``.
 
@@ -409,16 +457,11 @@ def _make_run_masked(cfg: FamConfig, num_nodes: int):
         valid = i < t_true
         warm = (i >= warm_start) & valid
 
-        def masked_step(c, inp):
-            addr, gap, w, v = inp
-            c2, _ = step(p, c, (addr, gap, w))
-            c = jax.tree.map(lambda a, b: jnp.where(v, a, b), c2, c)
-            return c, None
-
         (nodes, _), _ = jax.lax.scan(
-            masked_step, _init_carry(cfg, p, N),
+            lambda c, inp: step(p, c, inp),
+            _init_carry(cfg, p, N, pad_sets, pad_ways),
             (addrs.T.astype(jnp.int32), gaps.T, warm, valid))
-        return _metrics(nodes)
+        return _metrics(nodes, p)
 
     return run
 
@@ -455,8 +498,9 @@ def build_sweep(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2):
     -> metrics dict with arrays of shape (S, N).
 
     One entry per ``cfg.static_shape()`` — every sweep point that only
-    varies dynamic parameters (including the feature flags) reuses the same
-    compiled program; jit re-traces only when (S, N, T) change shape.
+    varies dynamic parameters (feature flags, block size, and any cache
+    geometry fitting the donor's allocation) reuses the same compiled
+    program; jit re-traces only when (S, N, T) change shape.
     """
     key = (cfg.static_shape(), num_nodes, warmup_frac)
     if key not in _SWEEP_CACHE:
@@ -468,19 +512,26 @@ def build_sweep(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2):
 _MASKED_CACHE: Dict = {}
 
 
-def build_masked_vmap(cfg: FamConfig, num_nodes: int):
+def build_masked_vmap(cfg: FamConfig, num_nodes: int,
+                      pad_sets: Optional[int] = None,
+                      pad_ways: Optional[int] = None):
     """Unjitted vmapped dynamic-T runner:
     fn(params_batch, addrs (S, N, T_pad), gaps, t_true (S,), warm_start (S,))
     -> metrics dict of (S, N) arrays.
 
-    Left unjitted on purpose: the ``repro.experiments`` executor wraps it in
+    ``pad_sets``/``pad_ways`` size the shared cache allocation (default:
+    ``cfg``'s own geometry); each batched system's *effective* geometry is
+    its ``FamParams`` scalars and must fit inside the allocation. Left
+    unjitted on purpose: the ``repro.experiments`` executor wraps it in
     either a plain ``jax.jit`` (single device) or a ``shard_map`` over the S
     axis (multi-device) and AOT-compiles the result. One entry per
-    ``cfg.static_shape()``, like :func:`build_sweep`.
+    (geometry-free shape, padded allocation), like :func:`build_sweep`.
     """
-    key = (cfg.static_shape(), num_nodes)
+    key = (cfg.geometry_free_shape(), num_nodes,
+           pad_sets or cfg.num_sets, pad_ways or cfg.cache_ways)
     if key not in _MASKED_CACHE:
-        _MASKED_CACHE[key] = jax.vmap(_make_run_masked(cfg, num_nodes))
+        _MASKED_CACHE[key] = jax.vmap(
+            _make_run_masked(cfg, num_nodes, pad_sets, pad_ways))
     return _MASKED_CACHE[key]
 
 
@@ -488,7 +539,11 @@ def sweep(cfg: FamConfig, params_batch: FamParams, flags: Optional[SimFlags],
           addrs, gaps, warmup_frac: float = 0.2) -> Dict[str, jax.Array]:
     """Run S independent simulated systems in one (cached) compile.
 
-    cfg: static shape donor — every system must share ``cfg.static_shape()``.
+    cfg: static shape donor — every system must share
+        ``cfg.geometry_free_shape()`` and its effective cache geometry
+        must fit inside the donor's allocation (``num_sets``,
+        ``cache_ways``). Block size is fully dynamic (traced
+        ``block_bits`` address split).
     params_batch: ``FamParams`` with leading axis S (see ``stack_params``).
     flags: optional ``SimFlags`` applied uniformly to all S systems;
         ``None`` keeps the flags already embedded in ``params_batch``.
@@ -498,14 +553,17 @@ def sweep(cfg: FamConfig, params_batch: FamParams, flags: Optional[SimFlags],
     """
     if flags is not None:
         params_batch = params_batch.with_flags(flags)
-    bb = params_batch.block_bytes
-    if not isinstance(bb, jax.core.Tracer) and \
-            not bool(jnp.all(bb == cfg.block_bytes)):
-        raise ValueError(
-            "params_batch contains block_bytes != the static donor's "
-            f"({cfg.block_bytes}); block size is a static shape parameter — "
-            "group sweep points by cfg.static_shape() instead of batching "
-            "them together")
+    for field, cap in (("num_sets", cfg.num_sets),
+                       ("cache_ways", cfg.cache_ways)):
+        eff = getattr(params_batch, field)
+        if not isinstance(eff, jax.core.Tracer) and \
+                bool(jnp.any(eff > cap)):
+            raise ValueError(
+                f"params_batch effective {field} (max "
+                f"{int(jnp.max(eff))}) exceeds the static donor's padded "
+                f"allocation ({cap}); build the donor from the max swept "
+                "geometry (the repro.experiments planner does this "
+                "automatically)")
     S, N, T = addrs.shape
     fn = build_sweep(cfg, N, warmup_frac)
     return fn(params_batch, jnp.asarray(addrs), jnp.asarray(gaps))

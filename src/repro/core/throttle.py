@@ -51,15 +51,23 @@ def init_throttle(cfg) -> ThrottleState:
 
 
 def observe(s: ThrottleState, demand_latency, is_fam_demand, was_pf_hit,
-            pf_issued_now) -> ThrottleState:
-    """Record one event: FAM demand latency (masked) + issue counts."""
-    m = is_fam_demand.astype(jnp.float32)
+            pf_issued_now, enable=True) -> ThrottleState:
+    """Record one event: FAM demand latency (masked) + issue counts.
+
+    ``enable`` may be a traced bool (the masked runner's ``live`` flag):
+    a disabled observation leaves every counter — the sampling-cycle
+    event count included — untouched.
+    """
+    en = jnp.asarray(enable)
+    m = is_fam_demand.astype(jnp.float32) * en.astype(jnp.float32)
     return s._replace(
         lat_sum=s.lat_sum + demand_latency * m,
         lat_cnt=s.lat_cnt + m,
-        pf_useful=s.pf_useful + was_pf_hit.astype(jnp.float32),
-        pf_issued=s.pf_issued + pf_issued_now.astype(jnp.float32),
-        events=s.events + 1)
+        pf_useful=s.pf_useful + was_pf_hit.astype(jnp.float32) *
+            en.astype(jnp.float32),
+        pf_issued=s.pf_issued + pf_issued_now.astype(jnp.float32) *
+            en.astype(jnp.float32),
+        events=s.events + en.astype(jnp.int32))
 
 
 def maybe_adapt(cfg, s: ThrottleState, enabled=True) -> ThrottleState:

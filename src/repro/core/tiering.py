@@ -84,9 +84,14 @@ class TieredBlockPool:
         """Copy one block slow->fast, evicting the set-LRU victim.
 
         ``enable`` masks written values (in-place-friendly — no cond, so XLA
-        never copies the fast pool or metadata tables)."""
+        never copies the fast pool or metadata tables). The pool always runs
+        its EXACT geometry — the static ``num_sets``/``ways`` passed to the
+        cache ops fold the masked-geometry arithmetic away; padding is a
+        simulator-planner concern, not a runtime one."""
         en = jnp.asarray(enable)
-        cache, evicted, slot = dc.insert(st.cache, block_id, enable=en)
+        cache, evicted, slot = dc.insert(st.cache, block_id, enable=en,
+                                         num_sets=self.num_sets,
+                                         ways=self.cfg.cache_ways)
         slot_of_block = st.slot_of_block
         ev_idx = jnp.maximum(evicted, 0)
         slot_of_block = slot_of_block.at[ev_idx].set(
@@ -118,7 +123,8 @@ class TieredBlockPool:
         cfg = self.cfg
 
         def demand_one(st, bid):
-            hit, si, way = dc.lookup(st.cache, bid)
+            hit, si, way = dc.lookup(st.cache, bid, num_sets=self.num_sets,
+                                     ways=cfg.cache_ways)
             st = jax.lax.cond(hit, lambda s: s._replace(
                 cache=dc.touch(s.cache, si, way)), lambda s: s, st)
             st = self._maybe_fill(st, slow, bid, ~hit)
@@ -161,7 +167,8 @@ class TieredBlockPool:
 
             def pf_one(st, xs):
                 bid, v, rank = xs
-                fresh = ~dc.lookup(st.cache, bid)[0]
+                fresh = ~dc.lookup(st.cache, bid, num_sets=self.num_sets,
+                                   ways=cfg.cache_ways)[0]
                 do = v & fresh & (rank < granted)
                 st = self._maybe_fill(st, slow, bid, do)
                 return st._replace(

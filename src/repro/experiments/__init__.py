@@ -4,7 +4,9 @@
   declare a paper figure as named axes over ``FamConfig`` overrides,
   ``SimFlags`` variants, workloads, node counts, T, and seeds.
 * ``plan`` / ``Plan`` (``repro.experiments.plan``) — resolve the grid into
-  compile groups keyed by ``(static_shape, N, T_bucket)``.
+  compile groups keyed by ``(geometry_free_shape, N, T_bucket)`` with the
+  cache allocation padded to each group's max swept geometry and the
+  system axis padded to canonical widths (``s_bucket``).
 * ``execute`` (``repro.experiments.executor``) — one AOT compile + one
   (optionally device-sharded) vmapped call per group, with host trace
   generation overlapped against device simulation.
@@ -23,6 +25,7 @@ from repro.experiments.plan import (  # noqa: F401
     Plan,
     plan_points,
     point_key,
+    s_bucket,
     t_bucket,
 )
 from repro.experiments.spec import (  # noqa: F401

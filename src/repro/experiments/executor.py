@@ -1,10 +1,16 @@
 """Plan executor: device sharding + async trace/sim overlap.
 
 One :class:`~repro.experiments.plan.CompileGroup` is one AOT compile and
-one device call: the group's S systems are vmapped together and — when
-more than one device is visible — the S axis is sharded across devices
-with ``repro.parallel.compat.shard_map`` (a 1-device run falls back to a
-plain ``jax.jit`` of the same vmapped program, so the two paths execute
+one device call: the group's S systems are vmapped together — the cache
+state allocated at the group's padded ``(pad_sets, pad_ways)`` geometry
+with each system's effective geometry masking it down (bit-exact, see
+``repro.core.dram_cache``), the system axis padded to the group's
+canonical ``s_pad`` width by repeating the last member (inert: vmap lanes
+share no FAM-controller/WFQ state, and padded lanes' results are dropped
+before they reach any metric) — and, when more than one device is
+visible, the S axis is sharded across devices with
+``repro.parallel.compat.shard_map`` (a 1-device run falls back to a plain
+``jax.jit`` of the same vmapped program, so the two paths execute
 identical per-system code and are cross-checked bit-exact).
 
 Host-side trace generation for group i+1 overlaps device simulation of
@@ -29,7 +35,7 @@ import numpy as np
 from repro.core.fam_params import FamParams, stack_params
 from repro.core.famsim import build_masked_vmap
 from repro.core.traces import generate, node_seed
-from repro.experiments.plan import CompileGroup, Plan
+from repro.experiments.plan import CompileGroup, Plan, s_bucket
 from repro.experiments.spec import ResolvedPoint
 
 
@@ -43,7 +49,8 @@ class RunInfo:
     run_s: float = 0.0
     systems: int = 0
     events: int = 0                # true simulated events (sum S*N*T)
-    padded_events: int = 0         # extra events paid to T-bucketing
+    padded_events: int = 0         # extra events paid to T/S padding
+    padded_systems: int = 0        # inert systems added for canonical S
     devices: int = 1
     groups: List[dict] = field(default_factory=list)
     shard_check: Optional[dict] = None
@@ -58,6 +65,7 @@ class RunInfo:
              "run_s": round(self.run_s, 3),
              "systems": self.systems, "events": self.events,
              "padded_events": self.padded_events,
+             "padded_systems": self.padded_systems,
              "devices": self.devices,
              "us_per_event": self.us_per_call(), "groups": self.groups}
         if self.shard_check is not None:
@@ -154,15 +162,21 @@ _EXEC_CACHE: Dict = {}
 
 
 def _compiled(cfg, S: int, N: int, t_pad: int, mode,
-              info: Optional[RunInfo] = None):
+              info: Optional[RunInfo] = None, *,
+              pad_sets: Optional[int] = None, pad_ways: Optional[int] = None):
     """AOT-compiled group runner. ``mode`` is ``"vmap"`` or
-    ``("shard", D)``; compile time lands in ``info`` (zero when cached)."""
+    ``("shard", D)``; ``pad_sets``/``pad_ways`` size the shared cache
+    allocation (default: ``cfg``'s own geometry); compile time lands in
+    ``info`` (zero when cached)."""
     import jax
     import jax.numpy as jnp
 
-    key = (cfg.static_shape(), S, N, t_pad, mode)
+    pad_sets = pad_sets or cfg.num_sets
+    pad_ways = pad_ways or cfg.cache_ways
+    key = (cfg.geometry_free_shape(), pad_sets, pad_ways,
+           S, N, t_pad, mode)
     if key not in _EXEC_CACHE:
-        fn = build_masked_vmap(cfg, N)
+        fn = build_masked_vmap(cfg, N, pad_sets, pad_ways)
         if mode != "vmap":
             from jax.sharding import PartitionSpec as P
 
@@ -199,13 +213,27 @@ def _run_group(data: _GroupData, compiled) -> Dict[str, np.ndarray]:
     return {k: np.asarray(v) for k, v in out.items()}
 
 
-def _pad_systems(idxs: Sequence[int], D: int) -> List[int]:
-    """Pad the group's point-index list so S divides the device count."""
+def _pad_systems(idxs: Sequence[int], s_pad: int, D: int) -> List[int]:
+    """Pad the group's point-index list to the canonical S width, then —
+    when sharding — further up the canonical grid until the device count
+    divides it. Device counts with a prime factor outside the canonical
+    {4,5,6,7}*2^k grid (9, 11, 13, ...) never divide ANY canonical width,
+    so the search is bounded and falls back to the plain next multiple of
+    D. Padded lanes repeat the last member (inert; dropped on the way
+    out)."""
     idxs = list(idxs)
-    rem = len(idxs) % D
-    if rem:
-        idxs += [idxs[-1]] * (D - rem)
-    return idxs
+    target = max(s_pad, len(idxs))
+    D = max(D, 1)
+    if target % D:
+        cand = target
+        for _ in range(8):                    # bounded: <= ~16x growth
+            cand = s_bucket(cand + 1)
+            if cand % D == 0:
+                break
+        else:
+            cand = -(-target // D) * D        # no canonical width fits D
+        target = cand
+    return idxs + [idxs[-1]] * (target - len(idxs))
 
 
 # ---------------------------------------------------------------------------
@@ -230,10 +258,7 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
     D = len(jax.devices()) if devices is None else devices
     info = RunInfo(planned_groups=plan.num_groups, devices=D)
 
-    exec_idxs: List[List[int]] = []
-    for g in plan.groups:
-        exec_idxs.append(_pad_systems(g.indices, D) if D > 1
-                         else list(g.indices))
+    exec_idxs = [_pad_systems(g.indices, g.s_pad, D) for g in plan.groups]
     mode = ("shard", D) if D > 1 else "vmap"
 
     results: List[Optional[Dict[str, np.ndarray]]] = [None] * plan.num_points
@@ -263,7 +288,8 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
             before = info.compiles
             before_s = info.compile_s
             compiled = _compiled(plan.points[g.indices[0]].cfg, S_exec, N,
-                                 t_pad, mode, info)
+                                 t_pad, mode, info,
+                                 pad_sets=g.pad_sets, pad_ways=g.pad_ways)
             compile_s = info.compile_s - before_s
             t0 = time.perf_counter()
             out = _run_group(data, compiled)
@@ -277,9 +303,11 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
             info.systems += g.size
             info.events += true_events
             info.padded_events += S_exec * N * t_pad - true_events
+            info.padded_systems += S_exec - g.size
             info.groups.append({
                 "static_shape": str(g.key.static_shape),
                 "S": g.size, "S_exec": S_exec, "N": N, "T_pad": t_pad,
+                "pad_sets": g.pad_sets, "pad_ways": g.pad_ways,
                 "compile_s": round(compile_s, 3), "run_s": round(run_s, 3),
                 "fresh_compile": info.compiles > before})
             for j, i in enumerate(g.indices):
@@ -305,7 +333,9 @@ def _shard_cross_check(plan: Plan, data: _GroupData,
     cfg = plan.points[g.indices[0]].cfg
     S_exec, N, t_pad = len(idxs), g.key.num_nodes, g.t_pad
     alt_mode = "vmap" if primary_mode != "vmap" else ("shard", 1)
-    alt = _run_group(data, _compiled(cfg, S_exec, N, t_pad, alt_mode))
+    alt = _run_group(data, _compiled(cfg, S_exec, N, t_pad, alt_mode,
+                                     pad_sets=g.pad_sets,
+                                     pad_ways=g.pad_ways))
     bit_exact = all(np.array_equal(primary_out[k], alt[k])
                     for k in primary_out)
     return {"group": 0, "primary": str(primary_mode), "alt": str(alt_mode),

@@ -1,25 +1,37 @@
 """Compile-key planner: resolve a point list into compile groups.
 
-The simulator recompiles only when an array shape changes, so the compile
-key of a point is ``(cfg.static_shape(), num_nodes, T_bucket)``:
+The simulator recompiles only when an array *allocation* changes. Since the
+dynamic-geometry refactor, the cache geometry (``num_sets``, ``cache_ways``,
+``block_bytes``) is NOT an allocation decision: the planner pads the cache
+state to each group's maximum swept ``(num_sets, ways)`` and the effective
+geometry rides along as traced ``FamParams`` scalars (masked arithmetic in
+``repro.core.dram_cache``, traced ``block_bits`` address split) — bit-exactly
+equivalent to the unpadded run. Group *membership* therefore keys on
 
-* ``static_shape()`` — the shape-deciding subset of ``FamConfig`` (cache
-  geometry, table sizes, degrees, ``block_bytes``);
-* ``num_nodes`` — the vmapped system width;
-* ``T_bucket`` — the *canonical T bucket* deciding group membership. True
-  lengths round UP (never truncate) to a coarse geometric grid (1024,
-  1536, 2048, 3072, 4096, ... — alternating x1.5 / x1.33 steps) so
-  mixed-T experiments share executables. The group then *executes* at
+* ``cfg.geometry_free_shape()`` — table/queue sizes and degrees, the part
+  no padding can unify;
+* ``num_nodes`` — the per-system node width (the arbitration shape);
+* ``T_bucket`` — the *canonical T bucket*: true lengths round UP (never
+  truncate) to a coarse geometric grid (1024, 1536, 2048, 3072, 4096, ...)
+  so mixed-T experiments share executables. The group then *executes* at
   ``t_pad`` — the max true T of its members, not the full bucket — so a
   uniform-T group pays zero padding; the executor masks any padded tail
   out of the simulation exactly (see ``famsim._make_run_masked``).
 
-Everything else — latencies, thresholds, the allocation ratio, the feature
-flags, the WFQ weight — is a dynamic ``FamParams`` scalar: a baseline and
-all its variants land in ONE group and share one compile. The plan is a
-plain, inspectable object; group membership and order are deterministic
-functions of the point list (first-appearance order), identical across
-processes.
+and each group's final ``CompileKey.static_shape`` re-adds the PADDED
+geometry ``(pad_sets, pad_ways)``. The vmapped system axis S pads to a
+canonical width too (``s_bucket``: quarter-geometric grid, <= 25 % pad) by
+repeating the last member, so quick vs ``--full`` workload subsets land on
+shared executables; padded systems are inert — ``vmap`` lanes share no FAM
+controller / WFQ state — and their results are dropped.
+
+Everything else — latencies, thresholds, the allocation ratio, block size,
+cache capacity, the feature flags, the WFQ weight — is a dynamic
+``FamParams`` scalar: a baseline, all its variants, AND every swept
+geometry land in ONE group and share one compile (fig08 and fig16 collapse
+to a single group each). The plan is a plain, inspectable object; group
+membership and order are deterministic functions of the point list
+(first-appearance order), identical across processes.
 """
 from __future__ import annotations
 
@@ -30,7 +42,13 @@ from repro.experiments.spec import ResolvedPoint
 
 
 class CompileKey(NamedTuple):
-    """Everything that decides one compiled executable."""
+    """Everything that decides one compiled executable.
+
+    ``static_shape`` is ``(pad_sets, pad_ways) + geometry_free_shape`` for
+    a group key; :func:`point_key` returns the *membership* key, whose
+    ``static_shape`` is the geometry-free shape alone (padding is a group
+    property, computed after membership is known).
+    """
 
     static_shape: Tuple
     num_nodes: int
@@ -55,19 +73,49 @@ def t_bucket(T: int) -> int:
         b *= 2
 
 
+def s_bucket(S: int) -> int:
+    """Smallest canonical system-axis width >= S (never shrinks).
+
+    Canonical widths are the quarter-geometric grid {4, 5, 6, 7} * 2^k
+    (plus 1, 2, 3): worst-case pad overhead is 25 %, and any two point
+    counts within ~1.25x share a width — which is what lets a quick
+    workload subset reuse the executable a ``--full`` run compiled (or
+    vice versa). Padded systems repeat the group's last member and their
+    results are dropped (``vmap`` lanes are fully independent, so the
+    padding is inert by construction).
+    """
+    if S <= 0:
+        raise ValueError(f"system count must be positive, got {S}")
+    if S <= 4:
+        return S
+    b = 4
+    while True:
+        for m in (4, 5, 6, 7):
+            c = b * m // 4
+            if S <= c:
+                return c
+        b *= 2
+
+
 @dataclass(frozen=True)
 class CompileGroup:
     """All points sharing one compiled executable.
 
     ``key.t_bucket`` is the canonical bucket that decided *membership*;
-    ``t_pad`` is the length actually executed — the group's max true T.
-    A uniform-T group therefore pays ZERO padding; a mixed-T group pads
-    only up to its longest member, never to the full bucket.
+    ``t_pad`` is the length actually executed — the group's max true T —
+    so a uniform-T group pays ZERO time padding. ``s_pad`` is the
+    canonical system-axis width the group executes at (>= ``size``), and
+    ``pad_sets``/``pad_ways`` the shared cache allocation (the max
+    effective geometry over the members, echoed in
+    ``key.static_shape[:2]``).
     """
 
     key: CompileKey
     indices: Tuple[int, ...]        # into Plan.points, first-appearance order
     t_pad: int = 0
+    s_pad: int = 0
+    pad_sets: int = 0
+    pad_ways: int = 0
 
     @property
     def size(self) -> int:
@@ -95,32 +143,58 @@ class Plan:
         return sum(len(p.workloads) * p.T for p in self.points)
 
     def padded_events(self) -> int:
-        """Extra events paid to bucketing (sum of N * (t_pad - T))."""
-        return sum(len(self.points[i].workloads) *
-                   (g.t_pad - self.points[i].T)
-                   for g in self.groups for i in g.indices)
+        """Extra events paid to T-bucketing AND S-padding:
+        sum over groups of s_pad * N * t_pad minus the true events."""
+        total = 0
+        for g in self.groups:
+            true = sum(len(self.points[i].workloads) * self.points[i].T
+                       for i in g.indices)
+            total += g.s_pad * g.key.num_nodes * g.t_pad - true
+        return total
+
+    def padded_systems(self) -> int:
+        """Inert systems added to reach canonical S widths."""
+        return sum(g.s_pad - g.size for g in self.groups)
 
     def describe(self) -> List[dict]:
         """JSON-able per-group summary (deterministic)."""
-        return [{"static_shape": str(g.key.static_shape),
-                 "N": g.key.num_nodes, "T_pad": g.t_pad,
-                 "S": g.size} for g in self.groups]
+        out = []
+        for g in self.groups:
+            true = sum(len(self.points[i].workloads) * self.points[i].T
+                       for i in g.indices)
+            exec_events = g.s_pad * g.key.num_nodes * g.t_pad
+            out.append({
+                "static_shape": str(g.key.static_shape),
+                "N": g.key.num_nodes, "T_pad": g.t_pad,
+                "S": g.size, "S_pad": g.s_pad,
+                "pad_sets": g.pad_sets, "pad_ways": g.pad_ways,
+                "pad_overhead": round(exec_events / max(true, 1) - 1.0, 3),
+            })
+        return out
 
 
 def point_key(pt: ResolvedPoint,
               bucket=t_bucket) -> CompileKey:
-    return CompileKey(pt.cfg.static_shape(), len(pt.workloads),
+    """The *membership* key of one point: geometry-free static shape +
+    node count + T bucket. The group's final key re-adds the padded
+    geometry once membership is known (see :func:`plan_points`)."""
+    return CompileKey(pt.cfg.geometry_free_shape(), len(pt.workloads),
                       bucket(pt.T))
 
 
 def plan_points(points: Sequence[ResolvedPoint], *, name: str = "",
-                bucket: Optional[object] = t_bucket) -> Plan:
-    """Group ``points`` by compile key, preserving first-appearance order.
+                bucket: Optional[object] = t_bucket,
+                s_bucket: Optional[object] = s_bucket) -> Plan:
+    """Group ``points`` by membership key, preserving first-appearance
+    order, then pad each group's cache allocation to its max effective
+    geometry and its system axis to the canonical width.
 
-    ``bucket=None`` disables T-bucketing (each true T keys its own group —
-    useful for exactness tests and tiny one-off runs).
+    ``bucket=None`` disables T-bucketing (each true T keys its own group);
+    ``s_bucket=None`` disables S-padding (groups execute at their exact
+    size) — both useful for exactness tests and tiny one-off runs.
     """
     bucket_fn = bucket if bucket is not None else (lambda T: T)
+    s_fn = s_bucket if s_bucket is not None else (lambda S: S)
     groups: Dict[CompileKey, List[int]] = {}
     order: List[CompileKey] = []
     for i, pt in enumerate(points):
@@ -132,9 +206,17 @@ def plan_points(points: Sequence[ResolvedPoint], *, name: str = "",
             groups[key] = []
             order.append(key)
         groups[key].append(i)
-    return Plan(points=tuple(points),
-                groups=tuple(
-                    CompileGroup(k, tuple(groups[k]),
-                                 t_pad=max(points[i].T for i in groups[k]))
-                    for k in order),
-                name=name)
+
+    built = []
+    for k in order:
+        idxs = groups[k]
+        pad_sets = max(points[i].cfg.num_sets for i in idxs)
+        pad_ways = max(points[i].cfg.cache_ways for i in idxs)
+        built.append(CompileGroup(
+            key=CompileKey((pad_sets, pad_ways) + k.static_shape,
+                           k.num_nodes, k.t_bucket),
+            indices=tuple(idxs),
+            t_pad=max(points[i].T for i in idxs),
+            s_pad=s_fn(len(idxs)),
+            pad_sets=pad_sets, pad_ways=pad_ways))
+    return Plan(points=tuple(points), groups=tuple(built), name=name)

@@ -31,7 +31,10 @@ class AxisValue:
     ``cfg`` is a tuple of ``(field, value)`` pairs (kept as a tuple so the
     value is hashable) applied to the experiment's base ``FamConfig``;
     whether the swept field is a static shape parameter or a dynamic
-    ``FamParams`` scalar is the *planner's* concern, not the spec's.
+    ``FamParams`` scalar is the *planner's* concern, not the spec's —
+    and since the dynamic-geometry refactor even ``block_bytes`` /
+    ``dram_cache_bytes`` / ``cache_ways`` sweeps plan into one padded
+    compile group.
     """
 
     label: str

@@ -60,6 +60,31 @@ def test_spp_prediction_stays_in_page():
 
 
 # ---------------------------------------------------------------------------
+# address decomposition (static vs traced-geometry forms)
+# ---------------------------------------------------------------------------
+
+def test_dyn_address_decomposition_matches_static():
+    """The dyn_* helpers (traced block_bits) must compute the exact same
+    integers as the classic static-int decomposition, for every swept
+    block size — the foundation of the dynamic-geometry compile sharing."""
+    from repro.core import addresses as ad
+    addr = jnp.arange(0, 1 << 20, 4097, dtype=jnp.int32)
+    for bb_bytes in (64, 128, 256, 512, 1024, 4096):
+        bits = ad.block_bits(bb_bytes)
+        dyn_bits = ad.dyn_block_bits(jnp.int32(bb_bytes))
+        assert int(dyn_bits) == bits
+        assert int(ad.dyn_blocks_per_page(dyn_bits)) == \
+            ad.blocks_per_page(bb_bytes)
+        page_s, blk_s = ad.split(addr, bb_bytes)
+        page_d, blk_d = ad.dyn_split(addr, dyn_bits)
+        np.testing.assert_array_equal(np.asarray(page_s), np.asarray(page_d))
+        np.testing.assert_array_equal(np.asarray(blk_s), np.asarray(blk_d))
+        np.testing.assert_array_equal(
+            np.asarray(ad.block_addr(addr, bb_bytes)),
+            np.asarray(ad.dyn_block_addr(addr, dyn_bits)))
+
+
+# ---------------------------------------------------------------------------
 # DRAM cache
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,102 @@
+"""Masked-geometry dram_cache: every operation on a state padded to a
+larger ``(num_sets, ways)`` allocation — with the effective geometry passed
+as scalars — must be bit-identical to the same operation on an exactly
+sized state, across randomized insert/touch/invalidate/occupancy sequences
+(the foundation of the planner's one-group-per-figure guarantee), and the
+padded region must stay invalid forever."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dram_cache as dc
+
+GEOMETRIES = [
+    # (sets, ways, pad_sets, pad_ways)
+    (4, 2, 4, 2),          # no padding: kwargs must be pure identity
+    (4, 2, 16, 2),         # padded sets only
+    (8, 4, 8, 8),          # padded ways only
+    (2, 2, 64, 16),        # both, heavily
+    (1, 1, 8, 4),          # degenerate direct-mapped single set
+]
+
+
+def _run_sequence(sets, ways, pad_sets, pad_ways, ops):
+    """Drive exact and padded states through one op sequence, asserting
+    every returned value and the effective state region match bit-for-bit
+    after each op."""
+    exact = dc.init_cache(sets, ways)
+    padded = dc.init_cache(pad_sets, pad_ways)
+    kw = dict(num_sets=sets, ways=ways)
+
+    def check(tag):
+        e_tags, p_tags = np.asarray(exact.tags), np.asarray(padded.tags)
+        e_lru, p_lru = np.asarray(exact.lru), np.asarray(padded.lru)
+        np.testing.assert_array_equal(e_tags, p_tags[:sets, :ways], tag)
+        np.testing.assert_array_equal(e_lru, p_lru[:sets, :ways], tag)
+        assert int(exact.stamp) == int(padded.stamp), tag
+        # the padded region must never acquire a tag
+        mask = np.ones_like(p_tags, bool)
+        mask[:sets, :ways] = False
+        assert (p_tags[mask] == 0).all(), tag
+
+    for op, addr in ops:
+        a = jnp.int32(addr)
+        if op == "insert":
+            exact, ev_e, _ = dc.insert(exact, a)
+            padded, ev_p, _ = dc.insert(padded, a, **kw)
+            assert int(ev_e) == int(ev_p), (op, addr)
+        elif op == "probe":           # lookup + LRU touch on hit
+            hit_e, si_e, way_e = dc.lookup(exact, a)
+            hit_p, si_p, way_p = dc.lookup(padded, a, **kw)
+            assert (bool(hit_e), int(si_e)) == (bool(hit_p), int(si_p))
+            if bool(hit_e):
+                assert int(way_e) == int(way_p), (op, addr)
+            exact = dc.touch(exact, si_e, way_e, enable=hit_e)
+            padded = dc.touch(padded, si_p, way_p, enable=hit_p)
+        elif op == "invalidate":
+            exact = dc.invalidate(exact, a)
+            padded = dc.invalidate(padded, a, **kw)
+        occ_e = dc.occupancy(exact)
+        occ_p = dc.occupancy(padded, **kw)
+        # bitwise-equal floats: same sum, same effective-entry divisor
+        assert np.float32(occ_e) == np.float32(occ_p), (op, addr)
+        check((op, addr))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), geom=st.sampled_from(GEOMETRIES))
+def test_padded_equals_exact_random_sequences(seed, geom):
+    rng = np.random.default_rng(seed)
+    sets, ways, pad_sets, pad_ways = geom
+    # enough distinct addresses to force evictions in every set
+    n_addr = 4 * sets * ways + 8
+    ops = []
+    for _ in range(40):
+        kind = ["insert", "insert", "probe", "invalidate"][rng.integers(4)]
+        ops.append((kind, int(rng.integers(0, n_addr))))
+    _run_sequence(sets, ways, pad_sets, pad_ways, ops)
+
+
+def test_eviction_ignores_padded_ways():
+    """A full effective set must evict its LRU member even when padded
+    ways sit empty next to it (vacancy must not leak into the padding)."""
+    st_ = dc.init_cache(1, 8)        # padded to 8 ways
+    kw = dict(num_sets=1, ways=2)    # effective: 1 set, 2 ways
+    st_, _, _ = dc.insert(st_, jnp.int32(1), **kw)
+    st_, _, _ = dc.insert(st_, jnp.int32(2), **kw)
+    hit, si, way = dc.lookup(st_, jnp.int32(1), **kw)
+    st_ = dc.touch(st_, si, way, enable=hit)      # 2 becomes LRU
+    st_, evicted, _ = dc.insert(st_, jnp.int32(3), **kw)
+    assert int(evicted) == 2
+    assert (np.asarray(st_.tags)[:, 2:] == 0).all()
+
+
+def test_set_hash_modulo_effective_sets():
+    """Addresses must map to the same set whether the modulus comes from
+    the array shape (exact) or a traced-style scalar (padded)."""
+    for n in (1, 2, 5, 64, 4096):
+        a = jnp.arange(0, 10_000, 37, dtype=jnp.int32)
+        exact = dc._set_index(a, n)
+        dyn = dc._set_index(a, jnp.int32(n))
+        np.testing.assert_array_equal(np.asarray(exact), np.asarray(dyn))
+        assert int(jnp.max(dyn)) < n

@@ -1,9 +1,12 @@
 """The repro.experiments API: the compile-key planner must be deterministic
-and group baseline+variants together; dynamic-T bucketing must pad (never
-truncate) and the padded masked runner must reproduce the unpadded
-per-point simulator; the device-sharded path must match the single-device
-vmap path bit-exactly; and Point.seed must thread through to the node
-traces."""
+and group baseline+variants together — cache geometry (block size, cache
+capacity) and the system axis S included, since the dynamic-geometry
+refactor dropped both from the compile key (fig08/fig16 = ONE group each);
+dynamic-T bucketing and canonical-S padding must pad (never truncate) and
+the padded masked runner — padded geometry included — must reproduce the
+unpadded per-point simulator bit-exactly; the device-sharded path must
+match the single-device vmap path bit-exactly; and Point.seed must thread
+through to the node traces."""
 import os
 import subprocess
 import sys
@@ -45,20 +48,33 @@ def test_baseline_and_variants_share_one_group():
     (g,) = plan.groups
     assert g.indices == (0, 1, 2, 3)
     assert g.key.num_nodes == 1 and g.key.t_bucket == 1024
-    # uniform-T group: executes at the true T, zero padding
-    assert g.t_pad == T and plan.padded_events() == 0
+    # uniform-T group at a canonical S: executes at the true T, zero padding
+    assert g.t_pad == T and g.s_pad == 4
+    assert plan.padded_events() == 0 and plan.padded_systems() == 0
 
 
-def test_static_axis_splits_groups_dynamic_does_not():
+def test_geometry_axes_merge_into_one_padded_group():
+    """Since the dynamic-geometry refactor, block size and cache capacity
+    are FamParams scalars: a geometry sweep plans into ONE group whose
+    allocation pads to the largest swept geometry."""
     exp = Experiment(
-        name="split", T=T,
+        name="merge", T=T,
         axes=(config_axis("block", [128, 256], param="block_bytes"),
               config_axis("ratio", [1, 8], param="allocation_ratio"),
               workload_axis(["LU"])))
     plan = exp.plan()
-    # block_bytes is static shape (2 groups); allocation_ratio is dynamic
-    assert plan.num_groups == 2
-    assert all(g.size == 2 for g in plan.groups)
+    assert plan.num_groups == 1
+    (g,) = plan.groups
+    assert g.size == 4
+    # 16 MB cache, 16 ways: 128 B blocks -> 8192 sets (the pad), 256 -> 4096
+    assert g.pad_sets == 8192 and g.pad_ways == 16
+    assert g.key.static_shape[:2] == (8192, 16)
+    # what padding cannot unify still splits: a bigger prefetch queue
+    pts = list(plan.points)
+    pts += Experiment(name="q", T=T, axes=(
+        config_axis("q", [128], param="prefetch_queue"),
+        workload_axis(["LU"]))).points()
+    assert plan_points(pts).num_groups == 2
 
 
 def test_t_bucketing_merges_and_never_truncates():
@@ -103,6 +119,19 @@ def test_t_bucket_properties():
         t_bucket(0)
 
 
+def test_s_bucket_properties():
+    from repro.experiments import s_bucket
+    for S in (1, 2, 3, 4, 5, 7, 8, 9, 24, 72, 100, 228, 1000):
+        b = s_bucket(S)
+        assert b >= S                           # never shrinks
+        assert s_bucket(b) == b                 # canonical (idempotent)
+        assert b <= S + max(-(-S // 4), 1)      # <= 25 % pad overhead
+    # the figure grids' exact widths (quick): all canonical but fig08's 72
+    assert [s_bucket(s) for s in (24, 48, 72, 80)] == [24, 48, 80, 80]
+    with pytest.raises(ValueError):
+        s_bucket(0)
+
+
 def test_plan_keys_deterministic_across_processes():
     """The fig08 plan's group keys (and order) must be identical in a fresh
     interpreter — they are the compile cache keys."""
@@ -119,17 +148,44 @@ def test_plan_keys_deterministic_across_processes():
     assert out.stdout.splitlines() == here
 
 
-def test_figure_plans_within_pr1_group_counts():
-    """plan() must report <= the PR-1 compile-group counts per figure:
-    fig08 one group per block size, fig10/fig12 one per node count,
-    fig14/fig15 ONE, fig16 one per cache size."""
+def test_figure_plans_one_group_per_figure():
+    """Dynamic geometry collapses fig08/fig16 to exactly ONE group each
+    (the PR-1/PR-2 engines paid one per block/cache size); fig10/fig12
+    stay at one group per node count (N cannot be padded away) and
+    fig14/fig15 at ONE."""
     from benchmarks import (fig08_blocksize, fig10_bw_adaptation, fig12_wfq,
                             fig14_mixes, fig15_allocation, fig16_cachesize)
-    expect = {fig08_blocksize: 6, fig10_bw_adaptation: 3, fig12_wfq: 2,
-              fig14_mixes: 1, fig15_allocation: 1, fig16_cachesize: 4}
-    for mod, n in expect.items():
+    for mod in (fig08_blocksize, fig14_mixes, fig15_allocation,
+                fig16_cachesize):
         plan = mod.experiment(quick=True).plan()
-        assert plan.num_groups <= n, (mod.__name__, plan.describe())
+        assert plan.num_groups == 1, (mod.__name__, plan.describe())
+    assert fig10_bw_adaptation.experiment(True).plan().num_groups == 3
+    assert fig12_wfq.experiment(True).plan().num_groups == 2
+    # the fig08 group's allocation pads to the smallest block's geometry
+    (g,) = fig08_blocksize.experiment(True).plan().groups
+    assert (g.pad_sets, g.pad_ways) == ((16 << 20) // 64 // 16, 16)
+
+
+def test_run_plan_dry_run(capsys):
+    """``benchmarks/run.py --plan`` prints every figure's resolved compile
+    groups — and the one-group-per-figure ceilings — without executing."""
+    from benchmarks.run import main
+    main(["--plan"])
+    out = capsys.readouterr().out
+    for line in ("fig08_blocksize: 1 group(s)", "fig16_cachesize: 1 group(s)",
+                 "fig14_mixes: 1 group(s)", "fig15_allocation: 1 group(s)",
+                 "fig10_bw_adaptation: 3 group(s)", "fig12_wfq: 2 group(s)"):
+        assert line in out, out
+    assert "pad_geom=(16384x16)" in out          # fig08's padded allocation
+    # quick vs --full share executables: same group keys/S_pad for fig14
+    main(["--plan", "fig14"])
+    quick = capsys.readouterr().out
+    main(["--plan", "--full", "fig14"])
+    full = capsys.readouterr().out
+    line_q = [ln for ln in quick.splitlines() if "group 0" in ln][0]
+    line_f = [ln for ln in full.splitlines() if "group 0" in ln][0]
+    assert "S=24 S_pad=24" in line_q and "S=42 S_pad=48" in line_f
+    assert line_q.split("key=")[1] == line_f.split("key=")[1]
 
 
 # ---------------------------------------------------------------------------
@@ -166,6 +222,62 @@ def test_padded_executor_matches_unpadded_per_point(small_result):
         for k, v in ref.items():
             np.testing.assert_array_equal(np.asarray(v), got[k],
                                           err_msg=f"T={T_true} {k}")
+
+
+def test_padded_geometry_executor_matches_exact_reference():
+    """The tentpole guarantee: a geometry sweep (block size AND cache
+    capacity) executed as ONE padded group must reproduce every point's
+    exact-geometry ``build_sim`` reference bit-for-bit — cache occupancy
+    (a geometry-normalized metric) included."""
+    import jax.numpy as jnp
+
+    exp = Experiment(
+        name="geom", T=700,
+        axes=(Axis("geom", (AxisValue("b64", cfg=(("block_bytes", 64),)),
+                            AxisValue("b4096", cfg=(("block_bytes", 4096),)),
+                            AxisValue("cache1m", cfg=(
+                                ("dram_cache_bytes", 1 << 20),)))),
+              workload_axis(["LU", "mg"]),
+              flag_axis("variant", {"base": BASE, "dram": DRAM})))
+    plan = exp.plan()
+    assert plan.num_groups == 1
+    assert plan.groups[0].pad_sets == (16 << 20) // 64 // 16
+    res = execute(plan)
+    for pt in res.points:
+        a, g = generate(pt.workloads[0], pt.T, node_seed(0, 0))
+        ref = build_sim(pt.cfg, pt.flags, 1)(jnp.asarray(a[None]),
+                                             jnp.asarray(g[None]))
+        got = res.metrics_for(pt)
+        for k, v in ref.items():
+            np.testing.assert_array_equal(np.asarray(v), got[k],
+                                          err_msg=f"{pt.coords} {k}")
+
+
+def test_padded_system_axis_bit_exact():
+    """Padding S to a canonical width (inert repeated lanes) must not
+    change any real point's metrics vs an unpadded execution."""
+    exp = Experiment(name="spad", T=600,
+                     axes=(workload_axis(["LU", "bfs", "mg"]),))
+    padded = execute(exp.plan())                 # S=3 (canonical already)
+    forced = execute(exp.plan(s_bucket=lambda s: 8))   # 5 inert lanes
+    unpadded = execute(exp.plan(s_bucket=None))
+    for i in range(3):
+        for k, v in unpadded.metrics[i].items():
+            np.testing.assert_array_equal(v, padded.metrics[i][k])
+            np.testing.assert_array_equal(v, forced.metrics[i][k])
+    assert forced.info.padded_systems == 5
+    assert forced.info.padded_events == 5 * 600
+
+
+def test_pad_systems_terminates_for_any_device_count():
+    """Device counts outside the canonical-width grid's prime factors
+    (9, 11, 13, ...) must fall back to a plain multiple of D instead of
+    searching the grid forever."""
+    from repro.experiments.executor import _pad_systems
+    for D, S in ((9, 5), (11, 24), (13, 3), (2, 3), (4, 6), (1, 72)):
+        out = _pad_systems(list(range(S)), S, D)
+        assert len(out) % D == 0 and len(out) >= S
+        assert out[:S] == list(range(S)) and set(out[S:]) <= {S - 1}
 
 
 def test_sharded_path_bit_exact(small_result):
@@ -208,10 +320,11 @@ print("BITEXACT", ok)
 def test_overlap_matches_serial():
     """Async double-buffered trace prep must not change any metric — on a
     plan with MULTIPLE groups, so the thread-pool path actually runs (a
-    1-group plan disables the pool)."""
+    1-group plan disables the pool). Geometry no longer splits groups, so
+    split on the prefetch queue size (a genuinely un-paddable shape)."""
     exp = Experiment(
         name="overlap", T=600,
-        axes=(config_axis("block", [128, 256], param="block_bytes"),
+        axes=(config_axis("queue", [64, 128], param="prefetch_queue"),
               workload_axis(["LU", "bfs"])))
     plan = exp.plan()
     assert plan.num_groups == 2

@@ -88,14 +88,34 @@ def test_sweep_ratio_monotonic():
     assert (np.diff(ipc) <= 1e-3).all(), ipc
 
 
-def test_sweep_rejects_mixed_block_bytes():
-    """block_bytes is static shape: a params batch built from a different
-    block size than the donor cfg must be rejected, not silently mis-sized."""
+def test_sweep_rejects_oversized_geometry():
+    """The donor's allocation is a ceiling: a params batch whose effective
+    geometry exceeds it (64 B blocks -> 16384 sets vs the donor's 4096)
+    must be rejected, not silently aliased into the smaller table."""
     addrs, gaps = _node_traces()
     params = stack_params([FamParams.of(CFG),
                            FamParams.of(fam_replace(CFG, block_bytes=64))])
-    with pytest.raises(ValueError, match="static shape"):
+    with pytest.raises(ValueError, match="padded allocation"):
         sweep(CFG, params, None, np.stack([addrs] * 2), np.stack([gaps] * 2))
+
+
+def test_sweep_mixed_block_bytes_bit_exact():
+    """Dynamic geometry through the classic sweep API: batching different
+    block sizes under a donor padded to the largest geometry must match
+    each per-point exact-geometry run bit-for-bit."""
+    addrs, gaps = _node_traces()
+    donor = fam_replace(CFG, block_bytes=64)     # 16384 sets: fits all
+    cfgs = [donor, CFG, fam_replace(CFG, block_bytes=1024)]
+    params = stack_params([FamParams.of(c, SimFlags()) for c in cfgs])
+    out = sweep(donor, params, None,
+                np.stack([addrs] * 3), np.stack([gaps] * 3))
+    out = {k: np.asarray(v) for k, v in out.items()}
+    for i, c in enumerate(cfgs):
+        ref = build_sim(c, SimFlags(), N)(jnp.asarray(addrs),
+                                          jnp.asarray(gaps))
+        for k, v in ref.items():
+            np.testing.assert_array_equal(np.asarray(v), out[k][i],
+                                          err_msg=(c.block_bytes, k))
 
 
 def test_sweep_flags_override():
