@@ -17,9 +17,17 @@ keyed by ``(geometry_free_shape, N, T_bucket)`` — cache geometry pads to
 each group's maximum and the system axis to canonical widths, so even
 block-size/cache-size sweeps (fig08/fig16) are ONE group — and
 ``execute()`` runs each group as ONE ahead-of-time compile and ONE
-(optionally device-sharded) vmapped call. Compile time is measured
-separately from steady-state run time, so reported us_per_call reflects
-simulation only.
+(optionally device-sharded) vmapped call. Traces come from the selected
+``repro.traces`` backend: ``device`` (default) synthesizes them IN GRAPH
+inside the group executable (zero host-side generation), ``numpy`` keeps
+the host reference generators (``--trace-backend`` on benchmarks.run).
+Compile time is measured separately from steady-state run time, so
+reported us_per_call never includes compilation; under the device
+backend the steady-state group call DOES include the fused in-graph
+trace generation (its standalone cost is recorded as
+``device_kernel_gen_s`` in fig14's ``trace_gen_compare``), so
+cross-backend us_per_call comparisons compare generation+simulation
+against simulation-after-host-staging.
 
 ``Point``/``run_points`` remain as a deprecated shim over the same
 machinery; new code should declare an ``Experiment``.
@@ -78,6 +86,23 @@ class Point:
     seed: int = 0
 
 
+#: The Point/run_points deprecation fires exactly ONCE per process (the
+#: default ``warnings`` filter already dedupes per call site, but the shim
+#: is reached from many call sites — tests reset this flag to re-arm it).
+_SHIM_WARNED = False
+
+
+def _warn_shim_deprecated() -> None:
+    global _SHIM_WARNED
+    if _SHIM_WARNED:
+        return
+    _SHIM_WARNED = True
+    warnings.warn(
+        "benchmarks.common.run_points/Point are deprecated; declare a "
+        "repro.experiments.Experiment (see docs/experiments.md)",
+        DeprecationWarning, stacklevel=3)
+
+
 def run_points(points: Sequence[Point], T: int
                ) -> Tuple[List[Dict[str, np.ndarray]], RunInfo]:
     """DEPRECATED: run every point, batching shared compiled shapes.
@@ -86,10 +111,7 @@ def run_points(points: Sequence[Point], T: int
     (metrics aligned with ``points`` — each a dict of (N,) arrays — and the
     wall-clock/compile accounting), exactly like the PR-1 harness did.
     """
-    warnings.warn(
-        "benchmarks.common.run_points/Point are deprecated; declare a "
-        "repro.experiments.Experiment (see docs/experiments.md)",
-        DeprecationWarning, stacklevel=2)
+    _warn_shim_deprecated()
     resolved = [ResolvedPoint(cfg=p.cfg, flags=p.flags,
                               workloads=tuple(p.workloads), T=T,
                               seed=p.seed, coords=(("point", str(i)),))
@@ -98,10 +120,23 @@ def run_points(points: Sequence[Point], T: int
     return list(result.metrics), result.info
 
 
-def _traces(workloads: Sequence[str], T: int, seed: int
-            ) -> Tuple[np.ndarray, np.ndarray]:
-    """Node traces for one system (shared memoized cache with the
-    experiments executor; kept for the per-point reference path)."""
+_DEV_TRACE_CACHE: Dict = {}
+
+
+def _traces(workloads: Sequence[str], T: int, seed: int,
+            trace_backend: str = "numpy") -> Tuple[np.ndarray, np.ndarray]:
+    """Node traces for one system. The numpy backend shares the executor's
+    memoized cache; the device backend pulls the device-generated bits to
+    host (identical to what the in-graph path feeds the simulation at the
+    same T — see repro.traces.device), memoized per (workloads, T, seed)
+    so engine_check points differing only in cfg/flags pull them once."""
+    if trace_backend == "device":
+        from repro.traces import system_traces
+        key = (tuple(workloads), T, seed)
+        if key not in _DEV_TRACE_CACHE:
+            _DEV_TRACE_CACHE[key] = system_traces(workloads, T, seed,
+                                                  backend="device")
+        return _DEV_TRACE_CACHE[key]
     return trace_arrays(workloads, T, seed)
 
 
@@ -114,14 +149,17 @@ _SIM_COMPILE_S: Dict = {}
 
 
 def run_sim(cfg: FamConfig, flags: SimFlags, workloads: Sequence[str],
-            T: int, seed: int = 0) -> Tuple[Dict[str, np.ndarray], float]:
+            T: int, seed: int = 0, trace_backend: str = "numpy"
+            ) -> Tuple[Dict[str, np.ndarray], float]:
     """One system through the classic per-point path.
 
     Returns (metrics, steady-state wall seconds): the first call per
     (cfg, flags, N, T) warms the jit cache and its compile time is recorded
     separately (``per_point_compile_seconds``) — the timed call is a second,
     fully synchronized execution (``block_until_ready``), so the returned
-    seconds reflect simulation only.
+    seconds reflect simulation only. ``trace_backend`` selects the trace
+    source (pre-staged device traces reproduce the executor's in-graph
+    generation bit-exactly at the same T).
     """
     import jax
     import jax.numpy as jnp
@@ -130,7 +168,7 @@ def run_sim(cfg: FamConfig, flags: SimFlags, workloads: Sequence[str],
     if key not in _SIM_CACHE:
         _SIM_CACHE[key] = build_sim(cfg, flags, N)
     run = _SIM_CACHE[key]
-    addrs, gaps = _traces(workloads, T, seed)
+    addrs, gaps = _traces(workloads, T, seed, trace_backend)
     addrs, gaps = jnp.asarray(addrs), jnp.asarray(gaps)
     warm_key = (cfg, flags, N, T)
     if warm_key not in _SIM_COMPILE_S:
@@ -145,8 +183,10 @@ def run_sim(cfg: FamConfig, flags: SimFlags, workloads: Sequence[str],
 
 def engine_check(points: Sequence[ResolvedPoint],
                  batched: Sequence[Dict[str, np.ndarray]],
-                 T: Optional[int] = None) -> dict:
-    """Cross-check a subset of batched results against the per-point path.
+                 T: Optional[int] = None,
+                 trace_backend: str = "numpy") -> dict:
+    """Cross-check a subset of batched results against the per-point path
+    (fed by the SAME trace backend, so the comparison stays bit-level).
 
     Each point's true T comes from ``pt.T`` (``T`` is a fallback for bare
     Point shims). Returns a JSON-able record with the max relative metric
@@ -162,7 +202,7 @@ def engine_check(points: Sequence[ResolvedPoint],
         key = (pt.cfg, pt.flags, len(pt.workloads), T_pt)
         fresh = key not in _SIM_COMPILE_S
         ref, dt = run_sim(pt.cfg, pt.flags, list(pt.workloads), T_pt,
-                          pt.seed)
+                          pt.seed, trace_backend)
         steady += dt
         if fresh:
             compile_s += max(_SIM_COMPILE_S[key] - dt, 0.0)
@@ -179,16 +219,32 @@ def engine_check(points: Sequence[ResolvedPoint],
 def engine_row(name: str, result: ExperimentResult,
                check_pts: Sequence[ResolvedPoint]) -> dict:
     """The ``*_engine`` acceptance row shared by fig08/fig16: per-point
-    cross-check + recorded wall-clock comparison (and, from this PR on,
-    the sharded-vs-vmap bit-exactness record in ``engine.shard_check``).
+    cross-check + recorded wall-clock comparison (and the sharded-vs-vmap
+    bit-exactness record in ``engine.shard_check``).
 
     The per-point estimate scales the checked subset's cost to the whole
     figure the way the old path would have paid it: one compile per unique
-    (cfg, flags, N) key plus one steady run per point."""
+    (cfg, flags, N) key plus one steady run per point. The cross-check
+    inherits the result's trace backend, so device-backend figures verify
+    in-graph generation against pre-staged traces bit-exactly — which
+    requires every checked point to have executed at its own true T
+    (device threefry draws are shaped, so a point padded to a LONGER
+    group t_pad carries a different trace prefix than a standalone
+    T-length generation). All figures are uniform-T per group, so the
+    per-point assertion below is a tripwire for future mixed-T figures,
+    not a live path."""
     info = result.info
     points = result.points
+    if info.trace_backend == "device":
+        bad = [(p.coords, p.T, result.t_pad_for(p)) for p in check_pts
+               if result.t_pad_for(p) != p.T]
+        assert not bad, (
+            "device-backend engine_check needs check points that executed "
+            "at their own true T (own group's t_pad); pre-stage at t_pad "
+            "and truncate to extend it to mixed-T groups", bad)
     check = engine_check(check_pts,
-                         [result.metrics_for(p) for p in check_pts])
+                         [result.metrics_for(p) for p in check_pts],
+                         trace_backend=info.trace_backend)
     uniq = lambda pts: len({(p.cfg, p.flags, len(p.workloads)) for p in pts})
     est_full = (check["per_point_compile_s"] *
                 uniq(points) / max(uniq(check_pts), 1) +
@@ -211,13 +267,89 @@ def engine_row(name: str, result: ExperimentResult,
     }
 
 
-def info_row(name: str, info: RunInfo) -> dict:
+def info_row(name: str, info: RunInfo, **extra) -> dict:
     """The lightweight ``*_engine`` row used by figures without a per-point
     cross-check: planned groups + the full accounting (per-group compile
-    and run wall-clock, sharding record)."""
+    and run wall-clock, trace backend + host-trace counter, sharding
+    record). ``extra`` JSON-only fields (e.g. fig14's
+    ``trace_gen_compare``) ride along; ``derived`` stays deterministic."""
     return {"name": name, "us_per_call": info.us_per_call(),
             "derived": f"groups={info.planned_groups}",
-            "engine": info.as_dict()}
+            "engine": info.as_dict(), **extra}
+
+
+def trace_gen_compare(plan) -> dict:
+    """Device-vs-numpy trace *generation* wall-clock at this figure's
+    scale — the acceptance record fig14 dumps into its engine JSON row.
+
+    The number that matters to the executor's steady-state path is the
+    HOST wall-clock each backend spends before the simulator can run:
+
+    * ``numpy_host_gen_s`` — generating every node trace and staging the
+      group's padded ``(S_exec, N, T_pad)`` arrays, measured with a cold
+      memo cache (what a fresh process pays; the executor can only hide
+      it under the previous group's simulation, and the first group has
+      no previous group);
+    * ``device_host_stage_s`` — stacking the per-node ``TraceParams``
+      scalars (the device backend's ENTIRE host-side cost; generation
+      itself happens in graph, fused with the simulation) — measured
+      with the spec-encoding lru caches cleared too, so both backends
+      pay fresh-process cost symmetrically.
+
+    ``device_not_slower`` is ``device_host_stage_s <= numpy_host_gen_s``.
+    The fused in-graph generation is also measured standalone
+    (``device_kernel_gen_s``, steady-state, compile separate) so the JSON
+    records what the device actually spends inside the group call — on a
+    single CPU device that throughput is comparable to numpy's; the
+    architectural win is that it leaves the host path entirely and
+    scales with ``vmap``/``shard_map`` across devices.
+
+    Deliberately coupled to executor internals (``_prepare`` /
+    ``_pad_systems`` / ``_TRACE_CACHE``): the whole point is to time the
+    executor's OWN staging path, not a reimplementation of it. The
+    forced-cold measurement evicts the process-global spec-encoding lru
+    caches; the timed device ``_prepare`` repopulates them for this
+    plan's workloads, so only unrelated workloads repay their (~ms)
+    encoding afterwards."""
+    import jax
+
+    from repro.experiments import executor as _ex
+    from repro.traces import device as dev
+
+    host_np = host_dev = kernel_dev = compile_dev = 0.0
+    events = 0
+    for g in plan.groups:
+        idxs = _ex._pad_systems(g.indices, g.s_pad, 1)
+        saved = dict(_ex._TRACE_CACHE)
+        _ex._TRACE_CACHE.clear()
+        try:
+            d_np = _ex._prepare(plan.points, idxs, g.t_pad, 0.2, "numpy")
+        finally:
+            _ex._TRACE_CACHE.update(saved)
+        dev.trace_params.cache_clear()        # symmetric fresh-process cost
+        dev._head_cdf.cache_clear()
+        d_dev = _ex._prepare(plan.points, idxs, g.t_pad, 0.2, "device")
+        host_np += d_np.prep_s
+        host_dev += d_dev.prep_s
+        (tp,) = d_dev.inputs
+        fn = jax.jit(jax.vmap(jax.vmap(dev.node_generator(g.t_pad))))
+        t0 = time.perf_counter()
+        compiled = fn.lower(tp).compile()
+        compile_dev += time.perf_counter() - t0
+        jax.block_until_ready(compiled(tp))           # warm dispatch
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(tp))
+        kernel_dev += time.perf_counter() - t0
+        events += len(idxs) * g.key.num_nodes * g.t_pad
+    return {
+        "events_staged": events,
+        "numpy_host_gen_s": round(host_np, 4),
+        "device_host_stage_s": round(host_dev, 4),
+        "device_kernel_gen_s": round(kernel_dev, 4),
+        "device_kernel_compile_s": round(compile_dev, 4),
+        "host_speedup": round(host_np / max(host_dev, 1e-9), 1),
+        "device_not_slower": bool(host_dev <= host_np),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -232,5 +364,5 @@ def save_rows(figure: str, rows: List[dict]):
 def workloads(quick: bool) -> List[str]:
     if quick:
         return QUICK_WORKLOADS
-    from repro.core.traces import WORKLOAD_NAMES
+    from repro.traces import WORKLOAD_NAMES
     return list(WORKLOAD_NAMES)

@@ -22,18 +22,20 @@ BLOCK_SIZES = [64, 128, 256, 512, 1024, 4096]
 T = 12_000
 
 
-def experiment(quick: bool = True) -> Experiment:
+def experiment(quick: bool = True,
+               trace_backend: str = "device") -> Experiment:
     return Experiment(
         name="fig08_blocksize", T=T,
         base=fam_replace(FamConfig(), num_nodes=1),
+        trace_backend=trace_backend,
         axes=(config_axis("block", BLOCK_SIZES, param="block_bytes"),
               workload_axis(workloads(quick)),
               flag_axis("variant", {"base": BASELINE, "dram": DRAM})))
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, trace_backend: str = "device"):
     wls = workloads(quick)
-    res = experiment(quick).run(cross_check_shard=True)
+    res = experiment(quick, trace_backend).run(cross_check_shard=True)
     info = res.info
     assert info.planned_groups == 1, info.groups  # dynamic geometry: 1 compile
 

@@ -24,17 +24,19 @@ NODE_COUNTS = (1, 2, 4)
 VARIANTS = {"base": BASELINE, "core": CORE, "dram": DRAM, "adapt": ADAPT}
 
 
-def experiment(quick: bool = True) -> Experiment:
+def experiment(quick: bool = True,
+               trace_backend: str = "device") -> Experiment:
     return Experiment(
         name="fig10_bw_adaptation", T=T, base=FamConfig(),
+        trace_backend=trace_backend,
         axes=(nodes_axis(NODE_COUNTS),
               workload_axis(workloads(quick)),
               flag_axis("variant", VARIANTS)))
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, trace_backend: str = "device"):
     wls = workloads(quick)
-    res = experiment(quick).run()
+    res = experiment(quick, trace_backend).run()
     info = res.info
 
     rows = []

@@ -9,13 +9,20 @@ whole figure plans into ONE compile group (mixes x configs vmapped
 together); the system axis S pads to canonical widths (and left the
 compile key), so mix subsets within ~25 % of each other land on shared
 executables.
+
+fig14 is also the trace-backend acceptance figure: with the default
+``device`` backend the run asserts ZERO host-side trace generation on the
+steady-state path (``RunInfo.host_trace_events``), and the engine row
+records the device-vs-numpy generation wall-clock comparison
+(``trace_gen_compare``) alongside ``trace_backend``.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import (ADAPT, BASELINE, CORE, DRAM, WFQ, FamConfig,
-                               geomean, info_row, save_rows)
+                               geomean, info_row, save_rows,
+                               trace_gen_compare)
 from repro.experiments import Experiment, flag_axis, mix_axis
 
 T = 10_000
@@ -38,17 +45,24 @@ def _mixes(quick: bool):
     return dict(list(MIXES.items())[:4]) if quick else MIXES
 
 
-def experiment(quick: bool = True) -> Experiment:
+def experiment(quick: bool = True,
+               trace_backend: str = "device") -> Experiment:
     return Experiment(
         name="fig14_mixes", T=T, base=FamConfig(),
+        trace_backend=trace_backend,
         axes=(mix_axis(_mixes(quick)),
               flag_axis("variant", {"base": BASELINE, **CONFIGS})))
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, trace_backend: str = "device"):
     mixes = _mixes(quick)
-    res = experiment(quick).run()
+    exp = experiment(quick, trace_backend)
+    res = exp.run()
     info = res.info
+    if trace_backend == "device":
+        # the no-host acceptance gate: the steady-state path generated
+        # every trace in graph
+        assert info.host_trace_events == 0, info.host_trace_events
 
     rows = []
     adapt_over_fifo, wfq_over_fifo = [], []
@@ -69,6 +83,11 @@ def run(quick: bool = True):
         "derived": (f"adapt_vs_fifo={np.mean(adapt_over_fifo):.3f};"
                     f"wfq2_vs_fifo={np.mean(wfq_over_fifo):.3f}"),
     })
-    rows.append(info_row("fig14_engine", info))
+    # the acceptance record is a property of the default quick/device
+    # configuration; numpy or --full runs skip its standalone kernel
+    # compile (~10 s) rather than re-measure it per invocation
+    extra = {"trace_gen_compare": trace_gen_compare(exp.plan())} \
+        if quick and trace_backend == "device" else {}
+    rows.append(info_row("fig14_engine", info, **extra))
     save_rows("fig14_mixes", rows)
     return rows

@@ -30,17 +30,19 @@ def _wls(quick: bool):
     return workloads(quick)[:4] if quick else workloads(False)
 
 
-def experiment(quick: bool = True) -> Experiment:
+def experiment(quick: bool = True,
+               trace_backend: str = "device") -> Experiment:
     return Experiment(
         name="fig15_allocation", T=T, base=FamConfig(), nodes=4,
+        trace_backend=trace_backend,
         axes=(config_axis("ratio", RATIOS, param="allocation_ratio"),
               workload_axis(_wls(quick)),
               flag_axis("variant", {"local": LOCAL, **dict(VARIANTS)})))
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, trace_backend: str = "device"):
     wls = _wls(quick)
-    res = experiment(quick).run()
+    res = experiment(quick, trace_backend).run()
     info = res.info
 
     rows = []

@@ -27,9 +27,11 @@ T = 16_000
 SIZES_KB = (256, 512, 1024, 2048)
 
 
-def experiment(quick: bool = True) -> Experiment:
+def experiment(quick: bool = True,
+               trace_backend: str = "device") -> Experiment:
     return Experiment(
         name="fig16_cachesize", T=T, base=FamConfig(), nodes=4,
+        trace_backend=trace_backend,
         axes=(config_axis("cache", [kb << 10 for kb in SIZES_KB],
                           param="dram_cache_bytes",
                           labels=[str(kb) for kb in SIZES_KB]),
@@ -37,9 +39,9 @@ def experiment(quick: bool = True) -> Experiment:
               flag_axis("variant", {"base": BASELINE, "wfq2": WFQ(2)})))
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, trace_backend: str = "device"):
     wls = workloads(quick)
-    res = experiment(quick).run(cross_check_shard=True)
+    res = experiment(quick, trace_backend).run(cross_check_shard=True)
     info = res.info
     assert info.planned_groups == 1, info.groups  # dynamic geometry: 1 compile
 

@@ -10,6 +10,7 @@ Select figures positionally and pass ``--full`` through to each figure's
     python -m benchmarks.run fig08 fig16      # just these two
     python -m benchmarks.run --full fig14     # fig14 over all 19 workloads
     python -m benchmarks.run --plan           # print compile groups, run nothing
+    python -m benchmarks.run --trace-backend numpy fig14   # host ref traces
 """
 from __future__ import annotations
 
@@ -36,6 +37,13 @@ def main(argv=None) -> None:
                     help="dry-run: print each figure's resolved compile "
                          "groups (key, point count, pad overhead) without "
                          "executing anything")
+    ap.add_argument("--trace-backend", choices=("device", "numpy"),
+                    default="device",
+                    help="trace synthesis backend: 'device' generates "
+                         "traces in-graph on device (default; zero "
+                         "host-side generation), 'numpy' stages the host "
+                         "reference generators (never changes compile "
+                         "groups, only the trace source)")
     ap.add_argument("--only", default=None,
                     help="deprecated comma-list alternative to positional "
                          "figure names (fig08,fig10,...)")
@@ -65,7 +73,8 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     for key, mod in figures.items():
         t0 = time.time()
-        rows = mod.run(quick=not args.full)
+        rows = mod.run(quick=not args.full,
+                       trace_backend=args.trace_backend)
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.3f},\"{r['derived']}\"",
                   flush=True)

@@ -5,7 +5,8 @@ Declared through the first-class ``repro.experiments`` API: the five
 configurations are one flag axis, all differing only in dynamic parameters,
 so ``plan()`` resolves them into ONE compile group — one AOT compile, one
 vmapped (and, with multiple devices, S-sharded) call over 5 simulated
-systems, with trace generation overlapped against device simulation.
+systems, with every node trace synthesized in-graph on device
+(``repro.traces``, zero host-side generation).
 
 Run:  PYTHONPATH=src python examples/multinode_fam.py
 """

@@ -431,7 +431,8 @@ def _make_run(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2,
 
 def _make_run_masked(cfg: FamConfig, num_nodes: int,
                      pad_sets: Optional[int] = None,
-                     pad_ways: Optional[int] = None):
+                     pad_ways: Optional[int] = None,
+                     trace_gen=None):
     """Dynamic-T runner for bucketed (padded) traces.
 
     run(params, addrs (N, T_pad), gaps (N, T_pad), t_true, warm_start)
@@ -446,10 +447,18 @@ def _make_run_masked(cfg: FamConfig, num_nodes: int,
     host as ``int(t_true * warmup_frac)`` so it matches ``_make_run``'s
     static arithmetic exactly. Both scalars are traced: one executable
     serves every true length that pads to the same bucket.
+
+    ``trace_gen`` (a per-node :func:`repro.traces.device.node_generator`)
+    switches the signature to run(params, trace_params, t_true,
+    warm_start): the node traces are generated IN GRAPH — vmapped over
+    the node axis right here — instead of being staged from the host.
+    The generated arrays feed the exact same simulation body, so in-graph
+    generation is bit-identical to pre-staging
+    ``repro.traces.device.system_traces`` arrays at the same T_pad.
     """
     step = _make_step(cfg, num_nodes)
 
-    def run(p: FamParams, addrs, gaps, t_true, warm_start):
+    def _sim(p: FamParams, addrs, gaps, t_true, warm_start):
         N, T_pad = addrs.shape
         assert N == num_nodes
         gaps = gaps.astype(jnp.float32) / p.cores_per_node
@@ -463,7 +472,14 @@ def _make_run_masked(cfg: FamConfig, num_nodes: int,
             (addrs.T.astype(jnp.int32), gaps.T, warm, valid))
         return _metrics(nodes, p)
 
-    return run
+    if trace_gen is None:
+        return _sim
+
+    def run_gen(p: FamParams, trace_params, t_true, warm_start):
+        addrs, gaps = jax.vmap(trace_gen)(trace_params)   # (N, T_pad)
+        return _sim(p, addrs, gaps, t_true, warm_start)
+
+    return run_gen
 
 
 def build_sim(cfg: FamConfig, flags: SimFlags, num_nodes: int):
@@ -514,7 +530,8 @@ _MASKED_CACHE: Dict = {}
 
 def build_masked_vmap(cfg: FamConfig, num_nodes: int,
                       pad_sets: Optional[int] = None,
-                      pad_ways: Optional[int] = None):
+                      pad_ways: Optional[int] = None,
+                      trace_gen=None, trace_key=None):
     """Unjitted vmapped dynamic-T runner:
     fn(params_batch, addrs (S, N, T_pad), gaps, t_true (S,), warm_start (S,))
     -> metrics dict of (S, N) arrays.
@@ -526,12 +543,19 @@ def build_masked_vmap(cfg: FamConfig, num_nodes: int,
     either a plain ``jax.jit`` (single device) or a ``shard_map`` over the S
     axis (multi-device) and AOT-compiles the result. One entry per
     (geometry-free shape, padded allocation), like :func:`build_sweep`.
+
+    ``trace_gen``/``trace_key``: in-graph trace generation (see
+    :func:`_make_run_masked`) — the signature becomes fn(params_batch,
+    trace_params (S, N, ...), t_true, warm_start). ``trace_key`` (e.g.
+    ``("device", T_pad)``) keys the cache alongside the shapes, since the
+    generator bakes in its trace length.
     """
     key = (cfg.geometry_free_shape(), num_nodes,
-           pad_sets or cfg.num_sets, pad_ways or cfg.cache_ways)
+           pad_sets or cfg.num_sets, pad_ways or cfg.cache_ways, trace_key)
     if key not in _MASKED_CACHE:
         _MASKED_CACHE[key] = jax.vmap(
-            _make_run_masked(cfg, num_nodes, pad_sets, pad_ways))
+            _make_run_masked(cfg, num_nodes, pad_sets, pad_ways,
+                             trace_gen=trace_gen))
     return _MASKED_CACHE[key]
 
 
@@ -570,14 +594,22 @@ def sweep(cfg: FamConfig, params_batch: FamParams, flags: Optional[SimFlags],
 
 
 def simulate(cfg: FamConfig, flags: SimFlags, workload_names, T: int = 60_000,
-             seed: int = 0) -> Dict[str, np.ndarray]:
-    """Convenience wrapper: generate traces for the node list and run."""
-    from repro.core.traces import generate, node_seed
+             seed: int = 0, trace_backend: str = "numpy"
+             ) -> Dict[str, np.ndarray]:
+    """Convenience wrapper: generate traces for the node list and run.
+
+    NOTE the default backend here is ``"numpy"`` — the classic reference
+    path — while ``repro.experiments.Experiment`` defaults to
+    ``"device"``: comparing this wrapper against an executor run for the
+    same point mixes backends (statistically, not bit-, equivalent)
+    unless you pass ``trace_backend="device"``, which pre-stages the
+    device-generated traces (:mod:`repro.traces.device`) through the same
+    classic simulation path — bit-identical to the executor's in-graph
+    generation at the same T."""
+    from repro.traces import system_traces
     N = len(workload_names)
-    traces = [generate(w, T, node_seed(seed, i))
-              for i, w in enumerate(workload_names)]
-    addrs = np.stack([a for a, _ in traces])
-    gaps = np.stack([g for _, g in traces])
+    addrs, gaps = system_traces(workload_names, T, seed,
+                                backend=trace_backend)
     run = build_sim(cfg, flags, N)
     out = run(jnp.asarray(addrs), jnp.asarray(gaps))
     return {k: np.asarray(v) for k, v in out.items()}

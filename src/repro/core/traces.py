@@ -1,175 +1,31 @@
-"""Synthetic LLC-miss trace generators for the 19 evaluated workloads
-(paper Table III). We cannot execute SPEC/PARSEC/GAP under a pin-tool here,
-so each workload is modeled by its dominant access pattern class + footprint
-+ miss intensity; EXPERIMENTS.md therefore validates *trends/magnitudes*
-against the paper, not per-benchmark numbers (see DESIGN.md §8).
+"""Compatibility shim — trace synthesis moved to :mod:`repro.traces`.
 
-A trace is (addr_bytes int64 (T,), gap_cycles float32 (T,)): LLC-miss byte
-addresses and compute gaps between consecutive misses.
+The original module grew into a subsystem: workload specs and seed
+derivation live in ``repro.traces.specs``, the numpy generators (the
+``numpy`` reference backend) in ``repro.traces.host``, the device-native
+JAX generators in ``repro.traces.device``, and backend selection in
+``repro.traces.backend``. Every public name this module ever exposed is
+re-exported here unchanged (including the private pattern helpers some
+tests poke), so ``from repro.core.traces import generate`` keeps working.
 """
-from __future__ import annotations
-
-import zlib
-from dataclasses import dataclass
-from typing import Dict, Tuple
-
-import numpy as np
-
-LINE = 64
-
-
-@dataclass(frozen=True)
-class WorkloadSpec:
-    name: str
-    suite: str
-    footprint_mb: float   # paper Table III
-    mpki: float           # miss intensity (model parameter)
-    pattern: str
-    zipf_a: float = 1.2
-    streams: int = 4
-    stride: int = 1       # in lines
-    tile_kb: int = 256
-    seq_frac: float = 0.8
-
-
-WORKLOADS: Dict[str, WorkloadSpec] = {s.name: s for s in [
-    # SPEC17 (memory-intensive fp mostly streaming/stencil)
-    WorkloadSpec("603.bwaves_s", "SPEC17", 824, 22, "stream", streams=3),
-    WorkloadSpec("607.cactuBSSN_s", "SPEC17", 257, 15, "strided", streams=6, stride=4),
-    WorkloadSpec("619.lbm_s", "SPEC17", 1550, 28, "stream", streams=2),
-    WorkloadSpec("628.pop2_s", "SPEC17", 590, 12, "tiled", tile_kb=512),
-    WorkloadSpec("649.fotonik3d_s", "SPEC17", 587, 20, "strided", streams=8, stride=8),
-    WorkloadSpec("654.roms_s", "SPEC17", 245, 18, "stream", streams=4),
-    WorkloadSpec("657.xz_s", "SPEC17", 561, 9, "zipf", zipf_a=1.1),
-    # Splash3
-    WorkloadSpec("LU", "Splash3", 515, 14, "tiled", tile_kb=128),
-    WorkloadSpec("FFT", "Splash3", 625, 16, "strided", streams=2, stride=16),
-    # GAP (graph: power-law destinations + frontier streaming)
-    WorkloadSpec("bfs", "GAP", 864, 25, "graph", zipf_a=1.3, seq_frac=0.35),
-    WorkloadSpec("cc", "GAP", 802, 27, "graph", zipf_a=1.2, seq_frac=0.25),
-    WorkloadSpec("bc", "GAP", 593, 24, "graph", zipf_a=1.4, seq_frac=0.3),
-    WorkloadSpec("sssp", "GAP", 545, 23, "graph", zipf_a=1.3, seq_frac=0.3),
-    # PARSEC
-    WorkloadSpec("dedup", "PARSEC", 868, 11, "mixed", zipf_a=1.0, seq_frac=0.6),
-    WorkloadSpec("facesim", "PARSEC", 188, 8, "tiled", tile_kb=64),
-    WorkloadSpec("canneal", "PARSEC", 849, 30, "zipf", zipf_a=0.9),
-    # NPB
-    WorkloadSpec("mg", "NPB", 431, 19, "strided", streams=4, stride=2),
-    WorkloadSpec("is", "NPB", 1000, 26, "mixed", zipf_a=0.8, seq_frac=0.5),
-    # XSBench
-    WorkloadSpec("XSBench", "XSBench", 611, 21, "zipf", zipf_a=1.05),
-]}
-
-WORKLOAD_NAMES = tuple(WORKLOADS)
-
-
-def _lines(spec: WorkloadSpec) -> int:
-    return max(int(spec.footprint_mb * (1 << 20) // LINE), 1 << 12)
-
-
-def _per_stream_occurrence(pick: np.ndarray, streams: int) -> np.ndarray:
-    """occ[i] = how many earlier events chose the same stream as event i.
-
-    Vectorized replacement for the per-event python loop: each stream's
-    events get 0,1,2,... in order, so position_i = start_i + occ_i * stride."""
-    occ = np.empty(pick.shape[0], np.int64)
-    for s in range(streams):
-        m = pick == s
-        occ[m] = np.arange(int(m.sum()), dtype=np.int64)
-    return occ
-
-
-def _stream(spec, rng, T):
-    n = _lines(spec)
-    starts = rng.integers(0, n, spec.streams).astype(np.int64)
-    pick = rng.integers(0, spec.streams, T)
-    occ = _per_stream_occurrence(pick, spec.streams)
-    return (starts[pick] + occ) % n
-
-
-def _strided(spec, rng, T):
-    n = _lines(spec)
-    starts = rng.integers(0, n, spec.streams).astype(np.int64)
-    pick = rng.integers(0, spec.streams, T)
-    occ = _per_stream_occurrence(pick, spec.streams)
-    return (starts[pick] + occ * spec.stride) % n
-
-
-def _tiled(spec, rng, T):
-    n = _lines(spec)
-    tile = max(spec.tile_kb * 1024 // LINE, 64)
-    out = np.empty(T, np.int64)
-    i = 0
-    while i < T:
-        base = rng.integers(0, max(n - tile, 1))
-        span = min(int(rng.integers(tile // 2, tile)), T - i)
-        # row-major sweep of the tile with small jitter (stencil reuse)
-        idx = base + (np.arange(span) % tile)
-        jitter = rng.integers(-2, 3, span)
-        out[i:i + span] = np.clip(idx + jitter, 0, n - 1)
-        i += span
-    return out
-
-
-def _zipf(spec, rng, T):
-    n = _lines(spec)
-    if spec.zipf_a > 1.0:
-        ranks = rng.zipf(spec.zipf_a, T).astype(np.int64)
-    else:
-        # a <= 1: weak skew — mixture of uniform and a hot region
-        hot = rng.integers(0, max(n // 20, 1), T)
-        cold = rng.integers(0, n, T)
-        ranks = np.where(rng.random(T) < spec.zipf_a * 0.5, hot, cold)
-    # hash ranks over the footprint so hot lines are scattered
-    return (ranks * 2654435761) % n
-
-
-def _graph(spec, rng, T):
-    n = _lines(spec)
-    seq = _stream(spec, rng, T)
-    rnd = _zipf(spec, rng, T)
-    take_seq = rng.random(T) < spec.seq_frac
-    return np.where(take_seq, seq, rnd)
-
-
-def _mixed(spec, rng, T):
-    seq = _stream(spec, rng, T)
-    rnd = _zipf(spec, rng, T)
-    take_seq = rng.random(T) < spec.seq_frac
-    return np.where(take_seq, seq, rnd)
-
-
-_PATTERNS = {"stream": _stream, "strided": _strided, "tiled": _tiled,
-             "zipf": _zipf, "graph": _graph, "mixed": _mixed}
-
-
-def trace_seed(name: str, seed: int) -> int:
-    """Stable RNG seed for (workload, seed) — NOT the salted builtin
-    ``hash()``, which changes per process with PYTHONHASHSEED and made no
-    two runs reproduce the same trace."""
-    return zlib.crc32(f"{name}:{seed}".encode())
-
-
-def node_seed(seed: int, node_index: int) -> int:
-    """Per-node trace seed derivation, shared by ``famsim.simulate`` and the
-    benchmark harness so both generate identical node traces. The large odd
-    multiplier decorrelates node streams even for adjacent base seeds."""
-    return seed + 1_000_003 * node_index
-
-
-def generate(name: str, T: int, seed: int = 0, base_ipc: float = 2.0
-             ) -> Tuple[np.ndarray, np.ndarray]:
-    """-> (addr_bytes (T,) int64, gap_cycles (T,) float32)."""
-    spec = WORKLOADS[name]
-    rng = np.random.default_rng(trace_seed(name, seed))
-    lines = _PATTERNS[spec.pattern](spec, rng, T)
-    addrs = lines * LINE
-    # compute gap between misses: 1000/mpki instructions at base_ipc,
-    # log-normal jitter (bursty miss clusters)
-    mean_gap = (1000.0 / spec.mpki) / base_ipc
-    gaps = rng.lognormal(mean=0.0, sigma=0.6, size=T) * mean_gap
-    return addrs.astype(np.int64), gaps.astype(np.float32)
-
-
-def footprint_bytes(name: str) -> int:
-    return _lines(WORKLOADS[name]) * LINE
+from repro.traces.host import (  # noqa: F401
+    _PATTERNS,
+    _graph,
+    _mixed,
+    _per_stream_occurrence,
+    _stream,
+    _strided,
+    _tiled,
+    _zipf,
+    generate,
+)
+from repro.traces.specs import (  # noqa: F401
+    LINE,
+    WORKLOAD_NAMES,
+    WORKLOADS,
+    WorkloadSpec,
+    _lines,
+    footprint_bytes,
+    node_seed,
+    trace_seed,
+)

@@ -8,10 +8,14 @@
   cache allocation padded to each group's max swept geometry and the
   system axis padded to canonical widths (``s_bucket``).
 * ``execute`` (``repro.experiments.executor``) — one AOT compile + one
-  (optionally device-sharded) vmapped call per group, with host trace
-  generation overlapped against device simulation.
+  (optionally device-sharded) vmapped call per group. Traces come from
+  the plan's ``repro.traces`` backend: ``device`` (default) synthesizes
+  them in graph inside the group executable (zero host-side generation);
+  ``numpy`` stages the host reference generators, overlapped against
+  device simulation.
 
-See docs/experiments.md for the compile-key model and migration notes.
+See docs/experiments.md for the compile-key model, the trace-backend
+guarantees (§4), and migration notes.
 """
 from repro.experiments.executor import (  # noqa: F401
     ExperimentResult,

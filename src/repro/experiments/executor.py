@@ -1,4 +1,4 @@
-"""Plan executor: device sharding + async trace/sim overlap.
+"""Plan executor: device sharding, in-graph trace synthesis, async overlap.
 
 One :class:`~repro.experiments.plan.CompileGroup` is one AOT compile and
 one device call: the group's S systems are vmapped together — the cache
@@ -13,15 +13,28 @@ visible, the S axis is sharded across devices with
 ``jax.jit`` of the same vmapped program, so the two paths execute
 identical per-system code and are cross-checked bit-exact).
 
-Host-side trace generation for group i+1 overlaps device simulation of
-group i (double-buffered through a one-worker thread pool); trace arrays
-are memoized per ``(workload, T, node_seed)`` so repeated points are free.
-``ResolvedPoint.seed`` threads into ``traces.node_seed(seed, node_index)``
-— repeated points that differ only in seed simulate different traces.
+Trace synthesis is a pluggable backend (``plan.trace_backend``, see
+:mod:`repro.traces.backend`):
+
+* ``device`` (default) — the NO-HOST fast path: each group's compiled
+  program takes the numeric :class:`~repro.traces.device.TraceParams`
+  encoding (a handful of scalars per node) and generates every node
+  trace *in graph*, vmapped over (system, node), fused with the
+  simulation. Zero host-side trace generation on the steady-state path
+  (``RunInfo.host_trace_events == 0``) and nothing to overlap.
+* ``numpy`` — the reference oracle: host-side generation for group i+1
+  overlaps device simulation of group i (double-buffered through a
+  one-worker thread pool); trace arrays are memoized per
+  ``(workload, T, node_seed)`` so repeated points are free.
+
+Either way ``ResolvedPoint.seed`` threads into
+``traces.node_seed(seed, node_index)`` — repeated points that differ only
+in seed simulate different traces.
 
 Compile time is measured separately from steady-state run time
 (``jit(...).lower(...).compile()`` + ``block_until_ready``) and recorded
-per group, so ``us_per_event`` reflects simulation only.
+per group, so ``us_per_event`` reflects simulation only;
+``RunInfo.trace_gen_s`` records the host-side trace/param staging time.
 """
 from __future__ import annotations
 
@@ -34,9 +47,10 @@ import numpy as np
 
 from repro.core.fam_params import FamParams, stack_params
 from repro.core.famsim import build_masked_vmap
-from repro.core.traces import generate, node_seed
 from repro.experiments.plan import CompileGroup, Plan, s_bucket
 from repro.experiments.spec import ResolvedPoint
+from repro.traces import generate, node_seed
+from repro.traces.backend import DEFAULT_BACKEND
 
 
 @dataclass
@@ -52,6 +66,11 @@ class RunInfo:
     padded_events: int = 0         # extra events paid to T/S padding
     padded_systems: int = 0        # inert systems added for canonical S
     devices: int = 1
+    trace_backend: str = DEFAULT_BACKEND
+    #: events actually GENERATED host-side (memoized trace-cache reuse is
+    #: free, padded lanes repeat real systems): 0 = the no-host fast path
+    host_trace_events: int = 0
+    trace_gen_s: float = 0.0       # host trace/param staging wall-clock
     groups: List[dict] = field(default_factory=list)
     shard_check: Optional[dict] = None
 
@@ -67,6 +86,9 @@ class RunInfo:
              "padded_events": self.padded_events,
              "padded_systems": self.padded_systems,
              "devices": self.devices,
+             "trace_backend": self.trace_backend,
+             "host_trace_events": self.host_trace_events,
+             "trace_gen_s": round(self.trace_gen_s, 4),
              "us_per_event": self.us_per_call(), "groups": self.groups}
         if self.shard_check is not None:
             d["shard_check"] = self.shard_check
@@ -77,16 +99,25 @@ class ExperimentResult:
     """Per-point metrics + accounting, addressable by axis coordinates."""
 
     def __init__(self, points: Sequence[ResolvedPoint],
-                 metrics: Sequence[Dict[str, np.ndarray]], info: RunInfo):
+                 metrics: Sequence[Dict[str, np.ndarray]], info: RunInfo,
+                 t_pads: Optional[Sequence[int]] = None):
         self.points = tuple(points)
         self.metrics = list(metrics)
         self.info = info
+        #: per-point executed trace length (the group's t_pad) — what the
+        #: device backend generated at; == pt.T unless the point rode a
+        #: mixed-T group
+        self.t_pads = tuple(t_pads) if t_pads is not None \
+            else tuple(p.T for p in self.points)
         self._by_coords = {frozenset(p.coords): i
                            for i, p in enumerate(self.points)}
         self._by_point = {p: i for i, p in enumerate(self.points)}
 
     def metrics_for(self, pt: ResolvedPoint) -> Dict[str, np.ndarray]:
         return self.metrics[self._by_point[pt]]
+
+    def t_pad_for(self, pt: ResolvedPoint) -> int:
+        return self.t_pads[self._by_point[pt]]
 
     def get(self, **coords) -> Dict[str, np.ndarray]:
         """Metrics for the point at the given axis coordinates, e.g.
@@ -126,32 +157,56 @@ def trace_arrays(workloads: Sequence[str], T: int, seed: int
 
 @dataclass
 class _GroupData:
-    """Device-ready inputs for one compile group (S systems, padded)."""
+    """Device-ready inputs for one compile group (S systems, padded).
+
+    ``inputs`` is the backend-dependent middle of the executable's
+    signature: ``(addrs (S, N, T_pad) i32, gaps (S, N, T_pad) f32)`` for
+    host-staged traces, or a single stacked
+    :class:`~repro.traces.device.TraceParams` (leaves ``(S, N, ...)``)
+    for in-graph generation."""
 
     params: FamParams
-    addrs: np.ndarray          # (S, N, T_pad) int32
-    gaps: np.ndarray           # (S, N, T_pad) float32
+    inputs: Tuple
     t_true: np.ndarray         # (S,) int32
     warm_start: np.ndarray     # (S,) int32
+    host_trace_events: int = 0
+    prep_s: float = 0.0
 
 
 def _prepare(points: Sequence[ResolvedPoint], idxs: Sequence[int],
-             t_pad: int, warmup_frac: float) -> _GroupData:
+             t_pad: int, warmup_frac: float,
+             trace_backend: str = "numpy") -> _GroupData:
+    t0 = time.perf_counter()
     pts = [points[i] for i in idxs]
     N = len(pts[0].workloads)
     S = len(pts)
-    addrs = np.zeros((S, N, t_pad), np.int32)
-    gaps = np.zeros((S, N, t_pad), np.float32)
-    for j, pt in enumerate(pts):
-        a, g = trace_arrays(pt.workloads, pt.T, pt.seed)
-        addrs[j, :, :pt.T] = a
-        gaps[j, :, :pt.T] = g
+    host_events = 0
+    if trace_backend == "device":
+        from repro.traces.device import stack_system_params, system_params
+        tp = stack_system_params(
+            [system_params(pt.workloads, pt.seed) for pt in pts])
+        inputs = (tp,)
+    else:
+        addrs = np.zeros((S, N, t_pad), np.int32)
+        gaps = np.zeros((S, N, t_pad), np.float32)
+        for j, pt in enumerate(pts):
+            # count events actually GENERATED host-side (memoized reuse
+            # is free — repeated points and inert padded lanes cost 0)
+            host_events += sum(
+                pt.T for i, w in enumerate(pt.workloads)
+                if (w, pt.T, node_seed(pt.seed, i)) not in _TRACE_CACHE)
+            a, g = trace_arrays(pt.workloads, pt.T, pt.seed)
+            addrs[j, :, :pt.T] = a
+            gaps[j, :, :pt.T] = g
+        inputs = (addrs, gaps)
     params = stack_params([FamParams.of(pt.cfg, pt.flags) for pt in pts])
     t_true = np.array([pt.T for pt in pts], np.int32)
     # host-side int arithmetic, matching famsim._make_run's static
     # ``int(T * warmup_frac)`` exactly
     warm_start = np.array([int(pt.T * warmup_frac) for pt in pts], np.int32)
-    return _GroupData(params, addrs, gaps, t_true, warm_start)
+    return _GroupData(params, inputs, t_true, warm_start,
+                      host_trace_events=host_events,
+                      prep_s=time.perf_counter() - t0)
 
 
 # ---------------------------------------------------------------------------
@@ -163,20 +218,35 @@ _EXEC_CACHE: Dict = {}
 
 def _compiled(cfg, S: int, N: int, t_pad: int, mode,
               info: Optional[RunInfo] = None, *,
-              pad_sets: Optional[int] = None, pad_ways: Optional[int] = None):
+              pad_sets: Optional[int] = None, pad_ways: Optional[int] = None,
+              trace_backend: str = "numpy"):
     """AOT-compiled group runner. ``mode`` is ``"vmap"`` or
     ``("shard", D)``; ``pad_sets``/``pad_ways`` size the shared cache
     allocation (default: ``cfg``'s own geometry); compile time lands in
-    ``info`` (zero when cached)."""
+    ``info`` (zero when cached). ``trace_backend="device"`` compiles the
+    in-graph trace generator into the executable (its signature takes
+    TraceParams instead of staged arrays)."""
     import jax
     import jax.numpy as jnp
 
     pad_sets = pad_sets or cfg.num_sets
     pad_ways = pad_ways or cfg.cache_ways
+    in_graph = trace_backend == "device"
     key = (cfg.geometry_free_shape(), pad_sets, pad_ways,
-           S, N, t_pad, mode)
+           S, N, t_pad, mode, in_graph)
     if key not in _EXEC_CACHE:
-        fn = build_masked_vmap(cfg, N, pad_sets, pad_ways)
+        i32 = jnp.int32
+        if in_graph:
+            from repro.traces.device import abstract_params, node_generator
+            fn = build_masked_vmap(cfg, N, pad_sets, pad_ways,
+                                   trace_gen=node_generator(t_pad),
+                                   trace_key=("device", t_pad))
+            input_shapes = (abstract_params(S, N),)
+        else:
+            fn = build_masked_vmap(cfg, N, pad_sets, pad_ways)
+            input_shapes = (
+                jax.ShapeDtypeStruct((S, N, t_pad), i32),
+                jax.ShapeDtypeStruct((S, N, t_pad), jnp.float32))
         if mode != "vmap":
             from jax.sharding import PartitionSpec as P
 
@@ -189,12 +259,9 @@ def _compiled(cfg, S: int, N: int, t_pad: int, mode,
         params_shape = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct((S,) + jnp.shape(x), x.dtype),
             p_proto)
-        i32 = jnp.int32
         t0 = time.perf_counter()
         compiled = jax.jit(fn).lower(
-            params_shape,
-            jax.ShapeDtypeStruct((S, N, t_pad), i32),
-            jax.ShapeDtypeStruct((S, N, t_pad), jnp.float32),
+            params_shape, *input_shapes,
             jax.ShapeDtypeStruct((S,), i32),
             jax.ShapeDtypeStruct((S,), i32)).compile()
         dt = time.perf_counter() - t0
@@ -207,8 +274,7 @@ def _compiled(cfg, S: int, N: int, t_pad: int, mode,
 
 def _run_group(data: _GroupData, compiled) -> Dict[str, np.ndarray]:
     import jax
-    out = compiled(data.params, data.addrs, data.gaps, data.t_true,
-                   data.warm_start)
+    out = compiled(data.params, *data.inputs, data.t_true, data.warm_start)
     out = jax.block_until_ready(out)
     return {k: np.asarray(v) for k, v in out.items()}
 
@@ -242,33 +308,41 @@ def _pad_systems(idxs: Sequence[int], s_pad: int, D: int) -> List[int]:
 
 def execute(plan: Plan, *, devices: Optional[int] = None,
             overlap: bool = True, warmup_frac: float = 0.2,
-            cross_check_shard: bool = False) -> ExperimentResult:
+            cross_check_shard: bool = False,
+            trace_backend: Optional[str] = None) -> ExperimentResult:
     """Run every point of ``plan``; one device call per compile group.
 
     devices: shard each group's S axis over this many devices (default:
         all visible). 1 uses the plain vmapped path.
     overlap: double-buffer host trace generation for group i+1 under the
-        device simulation of group i.
+        device simulation of group i (numpy backend only — the device
+        backend's no-host fast path has nothing to overlap: its per-group
+        host work is stacking a handful of scalars).
     cross_check_shard: re-run the first group through the *other* path
         (shard_map vs vmap) and record whether the metrics are bit-exact
         in ``info.shard_check``.
+    trace_backend: override ``plan.trace_backend`` ("device"/"numpy").
     """
     import jax
 
+    from repro.traces.backend import validate_backend
+
+    backend = validate_backend(trace_backend or plan.trace_backend)
     D = len(jax.devices()) if devices is None else devices
-    info = RunInfo(planned_groups=plan.num_groups, devices=D)
+    info = RunInfo(planned_groups=plan.num_groups, devices=D,
+                   trace_backend=backend)
 
     exec_idxs = [_pad_systems(g.indices, g.s_pad, D) for g in plan.groups]
     mode = ("shard", D) if D > 1 else "vmap"
 
     results: List[Optional[Dict[str, np.ndarray]]] = [None] * plan.num_points
     pool = ThreadPoolExecutor(max_workers=1) if overlap and \
-        len(plan.groups) > 1 else None
+        backend == "numpy" and len(plan.groups) > 1 else None
     try:
         pending: Optional[Future] = None
         if pool is not None:
             pending = pool.submit(_prepare, plan.points, exec_idxs[0],
-                                  plan.groups[0].t_pad, warmup_frac)
+                                  plan.groups[0].t_pad, warmup_frac, backend)
         group0_data = group0_out = None
         for gi, g in enumerate(plan.groups):
             if pool is not None:
@@ -277,10 +351,10 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
                     nxt = plan.groups[gi + 1]
                     pending = pool.submit(_prepare, plan.points,
                                           exec_idxs[gi + 1],
-                                          nxt.t_pad, warmup_frac)
+                                          nxt.t_pad, warmup_frac, backend)
             else:
                 data = _prepare(plan.points, exec_idxs[gi],
-                                g.t_pad, warmup_frac)
+                                g.t_pad, warmup_frac, backend)
             keep_group0 = gi == 0 and cross_check_shard
 
             S_exec = len(exec_idxs[gi])
@@ -289,7 +363,8 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
             before_s = info.compile_s
             compiled = _compiled(plan.points[g.indices[0]].cfg, S_exec, N,
                                  t_pad, mode, info,
-                                 pad_sets=g.pad_sets, pad_ways=g.pad_ways)
+                                 pad_sets=g.pad_sets, pad_ways=g.pad_ways,
+                                 trace_backend=backend)
             compile_s = info.compile_s - before_s
             t0 = time.perf_counter()
             out = _run_group(data, compiled)
@@ -304,6 +379,8 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
             info.events += true_events
             info.padded_events += S_exec * N * t_pad - true_events
             info.padded_systems += S_exec - g.size
+            info.host_trace_events += data.host_trace_events
+            info.trace_gen_s += data.prep_s
             info.groups.append({
                 "static_shape": str(g.key.static_shape),
                 "S": g.size, "S_exec": S_exec, "N": N, "T_pad": t_pad,
@@ -318,13 +395,19 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
 
     if cross_check_shard and plan.groups:
         info.shard_check = _shard_cross_check(plan, group0_data, group0_out,
-                                              exec_idxs[0], mode)
-    return ExperimentResult(plan.points, results, info)  # type: ignore[arg-type]
+                                              exec_idxs[0], mode, backend)
+    t_pads = [0] * plan.num_points
+    for g in plan.groups:
+        for i in g.indices:
+            t_pads[i] = g.t_pad
+    return ExperimentResult(plan.points, results, info,  # type: ignore[arg-type]
+                            t_pads=t_pads)
 
 
 def _shard_cross_check(plan: Plan, data: _GroupData,
                        primary_out: Dict[str, np.ndarray],
-                       idxs: Sequence[int], primary_mode) -> dict:
+                       idxs: Sequence[int], primary_mode,
+                       trace_backend: str) -> dict:
     """Compare the first group's (already computed) primary-path output
     against a run through the *other* path — shard_map vs vmap — bit-exact
     (the ROADMAP-mandated scale path must not change a single bit of any
@@ -335,7 +418,8 @@ def _shard_cross_check(plan: Plan, data: _GroupData,
     alt_mode = "vmap" if primary_mode != "vmap" else ("shard", 1)
     alt = _run_group(data, _compiled(cfg, S_exec, N, t_pad, alt_mode,
                                      pad_sets=g.pad_sets,
-                                     pad_ways=g.pad_ways))
+                                     pad_ways=g.pad_ways,
+                                     trace_backend=trace_backend))
     bit_exact = all(np.array_equal(primary_out[k], alt[k])
                     for k in primary_out)
     return {"group": 0, "primary": str(primary_mode), "alt": str(alt_mode),

@@ -39,6 +39,7 @@ from dataclasses import dataclass
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 from repro.experiments.spec import ResolvedPoint
+from repro.traces.backend import DEFAULT_BACKEND, validate_backend
 
 
 class CompileKey(NamedTuple):
@@ -124,11 +125,20 @@ class CompileGroup:
 
 @dataclass(frozen=True)
 class Plan:
-    """A resolved execution plan: points + their compile grouping."""
+    """A resolved execution plan: points + their compile grouping.
+
+    ``trace_backend`` (``"device"`` or ``"numpy"``, see
+    :mod:`repro.traces.backend`) is carried on the plan — an *execution*
+    choice the spec selects — but deliberately NOT part of any
+    :class:`CompileKey`: group membership, order, and padding are
+    identical for both backends, so switching backend never changes the
+    plan shape (only which generator feeds the group executable).
+    """
 
     points: Tuple[ResolvedPoint, ...]
     groups: Tuple[CompileGroup, ...]
     name: str = ""
+    trace_backend: str = DEFAULT_BACKEND
 
     @property
     def num_points(self) -> int:
@@ -184,7 +194,8 @@ def point_key(pt: ResolvedPoint,
 
 def plan_points(points: Sequence[ResolvedPoint], *, name: str = "",
                 bucket: Optional[object] = t_bucket,
-                s_bucket: Optional[object] = s_bucket) -> Plan:
+                s_bucket: Optional[object] = s_bucket,
+                trace_backend: str = DEFAULT_BACKEND) -> Plan:
     """Group ``points`` by membership key, preserving first-appearance
     order, then pad each group's cache allocation to its max effective
     geometry and its system axis to the canonical width.
@@ -192,6 +203,8 @@ def plan_points(points: Sequence[ResolvedPoint], *, name: str = "",
     ``bucket=None`` disables T-bucketing (each true T keys its own group);
     ``s_bucket=None`` disables S-padding (groups execute at their exact
     size) — both useful for exactness tests and tiny one-off runs.
+    ``trace_backend`` rides on the plan (never in a compile key — see
+    :class:`Plan`).
     """
     bucket_fn = bucket if bucket is not None else (lambda T: T)
     s_fn = s_bucket if s_bucket is not None else (lambda S: S)
@@ -219,4 +232,5 @@ def plan_points(points: Sequence[ResolvedPoint], *, name: str = "",
             t_pad=max(points[i].T for i in idxs),
             s_pad=s_fn(len(idxs)),
             pad_sets=pad_sets, pad_ways=pad_ways))
-    return Plan(points=tuple(points), groups=tuple(built), name=name)
+    return Plan(points=tuple(points), groups=tuple(built), name=name,
+                trace_backend=validate_backend(trace_backend))

@@ -22,6 +22,7 @@ from typing import Any, Mapping, Optional, Sequence, Tuple
 
 from repro.configs.base import FamConfig, fam_replace
 from repro.core.famsim import SimFlags
+from repro.traces.backend import DEFAULT_BACKEND
 
 
 @dataclass(frozen=True)
@@ -130,6 +131,11 @@ class Experiment:
     nodes: int = 1
     T: int = 10_000
     seed: int = 0
+    #: Trace synthesis backend (see repro.traces.backend): "device"
+    #: generates traces in-graph on device (the default — zero host-side
+    #: generation on the steady-state path); "numpy" stages the host
+    #: reference generators. An execution choice, never a compile key.
+    trace_backend: str = DEFAULT_BACKEND
 
     def __post_init__(self):
         names = [a.name for a in self.axes]
@@ -181,6 +187,7 @@ class Experiment:
 
     def plan(self, **kw):
         from repro.experiments.plan import plan_points
+        kw.setdefault("trace_backend", self.trace_backend)
         return plan_points(self.points(), name=self.name, **kw)
 
     def run(self, *, plan_kw: Optional[dict] = None, **execute_kw):

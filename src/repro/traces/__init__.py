@@ -1,0 +1,39 @@
+"""repro.traces — workload-trace synthesis as a first-class subsystem.
+
+Layout:
+
+* :mod:`repro.traces.specs` — the 19 workload specs (paper Table III),
+  footprint arithmetic, and the ``trace_seed``/``node_seed`` derivation
+  scheme (backend-neutral, numpy-only imports).
+* :mod:`repro.traces.host` — the original numpy generators, kept as the
+  reference oracle (``numpy`` backend).
+* :mod:`repro.traces.device` — the same six pattern classes as
+  fixed-shape, ``jit``/``vmap``-able JAX over threefry keys (``device``
+  backend): the experiments executor generates a whole compile group's
+  traces *inside* the group executable, so the steady-state path does
+  zero host-side trace generation.
+* :mod:`repro.traces.backend` — the :class:`TraceBackend` protocol, the
+  backend registry, and the numpy-vs-device generation benchmark.
+
+``repro.core.traces`` remains as a compatibility shim over this package.
+"""
+from repro.traces.backend import (  # noqa: F401
+    BACKEND_NAMES,
+    DEFAULT_BACKEND,
+    DeviceBackend,
+    NumpyBackend,
+    TraceBackend,
+    get_backend,
+    system_traces,
+)
+from repro.traces.host import generate  # noqa: F401
+from repro.traces.specs import (  # noqa: F401
+    LINE,
+    PATTERN_IDS,
+    WORKLOAD_NAMES,
+    WORKLOADS,
+    WorkloadSpec,
+    footprint_bytes,
+    node_seed,
+    trace_seed,
+)

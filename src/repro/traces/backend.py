@@ -1,0 +1,102 @@
+"""Trace backends: ``numpy`` (reference oracle) vs ``device`` (JAX).
+
+A :class:`TraceBackend` turns (workload, T, seed) into node traces. Two
+implementations ship:
+
+* ``numpy`` — the original host generators (:mod:`repro.traces.host`),
+  kept as the reference oracle. Traces are generated per node on the
+  host and staged to device by the caller.
+* ``device`` — the JAX kernel (:mod:`repro.traces.device`). The
+  experiments executor never materializes these on the host at all: it
+  passes the numeric :class:`~repro.traces.device.TraceParams` encoding
+  into the compiled group program and the traces are generated *in
+  graph*, vmapped over (system, node), right next to the simulation.
+  ``system_traces`` here pulls the identical bits to host for
+  reference/cross-check paths.
+
+The two backends are statistically equivalent, not bit-equal — see
+``tests/test_trace_backends.py`` for the equivalence suite and
+docs/experiments.md for the tolerance policy.
+"""
+from __future__ import annotations
+
+from typing import Dict, Protocol, Sequence, Tuple
+
+import numpy as np
+
+from repro.traces import host
+from repro.traces.specs import node_seed
+
+BACKEND_NAMES = ("device", "numpy")
+DEFAULT_BACKEND = "device"
+
+
+class TraceBackend(Protocol):
+    """Minimal protocol every trace backend implements."""
+
+    name: str
+
+    def generate(self, workload: str, T: int, seed: int,
+                 base_ipc: float = 2.0) -> Tuple[np.ndarray, np.ndarray]:
+        """One node trace -> (addr_bytes (T,) int64, gap_cycles (T,) f32)."""
+
+    def system_traces(self, workloads: Sequence[str], T: int, seed: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """(N, T) traces for one system; per-node seeds via node_seed."""
+
+
+class NumpyBackend:
+    name = "numpy"
+
+    def generate(self, workload, T, seed, base_ipc=2.0):
+        return host.generate(workload, T, seed, base_ipc)
+
+    def system_traces(self, workloads, T, seed):
+        pairs = [self.generate(w, T, node_seed(seed, i))
+                 for i, w in enumerate(workloads)]
+        return (np.stack([a for a, _ in pairs]),
+                np.stack([g for _, g in pairs]))
+
+
+class DeviceBackend:
+    name = "device"
+
+    def generate(self, workload, T, seed, base_ipc=2.0):
+        from repro.traces import device
+        return device.generate_device(workload, T, seed, base_ipc)
+
+    def system_traces(self, workloads, T, seed):
+        from repro.traces import device
+        return device.system_traces(workloads, T, seed)
+
+
+_BACKENDS: Dict[str, TraceBackend] = {}
+
+
+def validate_backend(name: str) -> str:
+    """The single home of backend-name validation (planner, executor, and
+    registry all call this, so the check and its message cannot drift)."""
+    if name not in BACKEND_NAMES:
+        raise ValueError(f"unknown trace backend {name!r}; "
+                         f"choose from {BACKEND_NAMES}")
+    return name
+
+
+def get_backend(name: str) -> TraceBackend:
+    validate_backend(name)
+    if name not in _BACKENDS:
+        _BACKENDS[name] = DeviceBackend() if name == "device" \
+            else NumpyBackend()
+    return _BACKENDS[name]
+
+
+def system_traces(workloads: Sequence[str], T: int, seed: int,
+                  backend: str = "numpy") -> Tuple[np.ndarray, np.ndarray]:
+    """Convenience dispatch used by ``famsim.simulate`` and the benchmark
+    reference path."""
+    return get_backend(backend).system_traces(workloads, T, seed)
+
+
+# The device-vs-numpy generation wall-clock comparison lives in
+# ``benchmarks.common.trace_gen_compare`` (it times the *executor's*
+# staging path, which belongs to that layer).

@@ -1,0 +1,266 @@
+"""Device-native trace synthesis — the host generators as fixed-shape JAX.
+
+One :class:`TraceParams` numerically encodes a (workload, seed) pair; the
+kernel returned by :func:`node_generator` turns it into the
+``(addr_bytes, gap_cycles)`` trace of one node, entirely on device, with
+``jax.random`` threefry keys derived from the existing
+``trace_seed``/``node_seed`` scheme. It is pure ``jit``/``vmap``-able JAX:
+the experiments executor vmaps it over the (system, node) axes *inside*
+the compiled group program, so a whole compile group's traces materialize
+in the same kernel as the simulation and the steady-state path does zero
+host-side trace generation.
+
+Reformulations of the host algorithms (statistically equivalent, not
+bit-equal — threefry is not PCG64):
+
+* per-stream occurrence counts — the host's boolean-mask loop becomes a
+  one-hot cumulative sum over a static ``STREAMS_MAX`` width;
+* the tiled generator's data-dependent ``while`` loop becomes a
+  *segmented* formulation: segment spans are drawn up front (a static
+  bound ``K = T // (MIN_TILE_LINES // 2) + 2`` covers any T because spans
+  are at least ``MIN_TILE_LINES // 2`` lines), positions map to segments
+  with ``searchsorted`` over the span prefix sum — no scan, no carry;
+* Zipf ranks — inverse-CDF sampling: an exact per-``a`` head table
+  (:data:`ZIPF_HEAD`, host-precomputed from the zeta-normalized pmf)
+  resolves the head by ``searchsorted``, and the tail inverts the
+  continuous power-law ``P(X >= k | tail) ~ (k / H)^{-(a-1)}`` in log
+  space (ranks that would overflow int32 fall back to a uniform line —
+  they are hash-scattered noise either way).
+
+Determinism: the key is built host-side as the raw uint32 pair
+``[0, trace_seed(name, node_seed(seed, node))]`` — exactly
+``jax.random.PRNGKey(trace_seed(...))`` — so device traces are
+reproducible across processes and machines for a fixed trace length.
+(Unlike the numpy backend, the generated prefix depends on the padded
+group length T: threefry draws are shaped.)
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Dict, NamedTuple, Sequence, Tuple
+
+import numpy as np
+
+from repro.traces.specs import (ADDR_HASH, GAP_SIGMA, HOT_REGION_DIV, LINE,
+                                MIN_TILE_LINES, STREAMS_MAX, TILE_JITTER,
+                                WORKLOADS, _lines, mean_gap_cycles, node_seed,
+                                trace_seed)
+
+#: Ranks resolved exactly from the zeta-normalized head CDF; beyond this
+#: the tail is sampled by continuous power-law inversion.
+ZIPF_HEAD = 32
+
+_INT32_MAX = np.float32(2.0 ** 31 - 1)
+
+
+class TraceParams(NamedTuple):
+    """Numeric encoding of one node's (workload, seed) — every leaf is a
+    scalar (or a tiny fixed-width table) so the whole struct vmaps over
+    the (system, node) axes and rides ``shard_map`` like ``FamParams``."""
+
+    pattern: np.ndarray        # i32 PATTERN_IDS value
+    n_lines: np.ndarray        # i32 footprint in cache lines
+    streams: np.ndarray        # i32 concurrent streams (<= STREAMS_MAX)
+    stride: np.ndarray         # i32 stream stride in lines
+    tile: np.ndarray           # i32 tile size in lines (>= MIN_TILE_LINES)
+    zipf_a: np.ndarray         # f32 skew exponent
+    hot_p: np.ndarray          # f32 weak-skew hot probability (spec.hot_fraction)
+    seq_frac: np.ndarray       # f32 sequential fraction (graph/mixed)
+    mean_gap: np.ndarray       # f32 mean compute gap, cycles
+    zipf_head_cdf: np.ndarray  # f32 (ZIPF_HEAD,) exact head CDF (a > 1)
+    key: np.ndarray            # u32 (2,) raw threefry key [0, trace_seed]
+
+
+def _zeta(a: float, n_terms: int = 100_000) -> float:
+    """Riemann zeta via partial sum + integral tail (plenty for a CDF)."""
+    k = np.arange(1, n_terms + 1, dtype=np.float64)
+    return float(np.sum(k ** -a) + n_terms ** (1.0 - a) / (a - 1.0))
+
+
+@lru_cache(maxsize=None)
+def _head_cdf(a: float) -> Tuple[float, ...]:
+    """Exact CDF of the first ZIPF_HEAD zipf(a) ranks (a > 1)."""
+    k = np.arange(1, ZIPF_HEAD + 1, dtype=np.float64)
+    return tuple(np.cumsum(k ** -a) / _zeta(a))
+
+
+@lru_cache(maxsize=None)
+def trace_params(name: str, seed: int, base_ipc: float = 2.0) -> TraceParams:
+    """Host-side numeric encoding of one node trace (cheap: no events are
+    generated here — this is the ONLY host work the device backend does)."""
+    spec = WORKLOADS[name]
+    head = _head_cdf(spec.zipf_a) if spec.zipf_a > 1.0 \
+        else (1.0,) * ZIPF_HEAD
+    return TraceParams(
+        pattern=np.int32(spec.pattern_id),
+        n_lines=np.int32(_lines(spec)),
+        streams=np.int32(spec.streams),
+        stride=np.int32(spec.stride),
+        tile=np.int32(spec.tile_lines),
+        zipf_a=np.float32(spec.zipf_a),
+        hot_p=np.float32(spec.hot_fraction),
+        seq_frac=np.float32(spec.seq_frac),
+        mean_gap=np.float32(mean_gap_cycles(spec, base_ipc)),
+        zipf_head_cdf=np.asarray(head, np.float32),
+        key=np.array([0, trace_seed(name, seed)], np.uint32))
+
+
+def system_params(workloads: Sequence[str], seed: int,
+                  base_ipc: float = 2.0) -> TraceParams:
+    """Stack one system's N node encodings (leading axis N); per-node
+    seeds derive through ``node_seed`` exactly like the numpy backend."""
+    pts = [trace_params(w, node_seed(seed, i), base_ipc)
+           for i, w in enumerate(workloads)]
+    return TraceParams(*(np.stack([getattr(p, f) for p in pts])
+                         for f in TraceParams._fields))
+
+
+def stack_system_params(systems: Sequence[TraceParams]) -> TraceParams:
+    """Stack S system encodings into the (S, N, ...) batch the executor
+    feeds one compile group."""
+    return TraceParams(*(np.stack([getattr(s, f) for s in systems])
+                         for f in TraceParams._fields))
+
+
+def abstract_params(S: int, N: int):
+    """ShapeDtypeStructs for one group's (S, N) TraceParams batch (AOT
+    lowering)."""
+    import jax
+
+    proto = trace_params(next(iter(WORKLOADS)), 0)
+    return TraceParams(*(jax.ShapeDtypeStruct((S, N) + np.shape(x),
+                                              np.asarray(x).dtype)
+                         for x in proto))
+
+
+# ---------------------------------------------------------------------------
+# The kernel
+# ---------------------------------------------------------------------------
+
+_GEN_CACHE: Dict[int, object] = {}
+
+
+def node_generator(T: int):
+    """fn(tp: TraceParams) -> (addr_bytes (T,) i32, gap_cycles (T,) f32)
+    for one node — unjitted on purpose (the executor fuses it into the
+    group executable; :func:`generate_device` jits it standalone).
+    Memoized per T so executor cache keys can use identity."""
+    if T in _GEN_CACHE:
+        return _GEN_CACHE[T]
+
+    import jax
+    import jax.numpy as jnp
+
+    # static segment bound for the tiled pattern: spans are at least
+    # MIN_TILE_LINES // 2 lines, so K segments always cover T positions
+    K = T // (MIN_TILE_LINES // 2) + 2
+
+    def gen(tp: TraceParams):
+        # Threefry is the wall-clock cost on CPU, so T-sized draws are
+        # budgeted: ``raw`` feeds the stream pick, the tile jitter, and
+        # the seq/random mixture choice (consumers of *disjoint bits*,
+        # used by mutually exclusive pattern classes), and ``uni`` doubles
+        # as the weak-skew hot offset (the hot/cold selector picks exactly
+        # one of the two). Four T-sized draws total: raw, u, uni, normal.
+        sub = lambda i: jax.random.fold_in(tp.key, i)
+        n = tp.n_lines
+        raw = jax.random.randint(sub(0), (T,), 0, 1 << 30)
+        u = jax.random.uniform(sub(1), (T,))
+        uni = jax.random.randint(sub(2), (T,), 0, n)
+
+        # -- stream / strided (also the sequential half of graph/mixed,
+        #    whose specs use stride 1): one-hot cumsum occurrence counts
+        starts = jax.random.randint(sub(3), (STREAMS_MAX,), 0, n)
+        pick = raw % tp.streams
+        oh = (pick[:, None] == jnp.arange(STREAMS_MAX)[None, :])
+        cum = jnp.cumsum(oh.astype(jnp.int32), axis=0) - oh.astype(jnp.int32)
+        occ = jnp.sum(jnp.where(oh, cum, 0), axis=1)
+        s_lines = (starts[pick] + occ * tp.stride) % n
+
+        # -- tiled: segmented row-major sweeps with stencil jitter
+        tile = tp.tile
+        bases = jax.random.randint(sub(4), (K,), 0,
+                                   jnp.maximum(n - tile, 1))
+        spans = jax.random.randint(sub(5), (K,), tile // 2, tile)
+        seg_start = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(spans)[:-1]])
+        pos = jnp.arange(T, dtype=jnp.int32)
+        seg = jnp.searchsorted(seg_start, pos, side="right") - 1
+        off = pos - seg_start[seg]
+        jitter = (raw >> 3) % (2 * TILE_JITTER + 1) - TILE_JITTER
+        t_lines = jnp.clip(bases[seg] + off % tile + jitter, 0, n - 1)
+
+        # -- zipf: exact head CDF + continuous power-law tail (a > 1),
+        #    hot/cold mixture (weak skew, a <= 1; the selector reuses u,
+        #    which weak lanes never consume as a CDF draw)
+        head_rank = jnp.searchsorted(tp.zipf_head_cdf, u, side="right") + 1
+        head_mass = tp.zipf_head_cdf[-1]
+        a1 = jnp.maximum(tp.zipf_a, 1.01) - 1.0
+        v = jnp.clip((u - head_mass) / jnp.maximum(1.0 - head_mass, 1e-9),
+                     1e-9, 1.0)
+        log_tail = jnp.log(ZIPF_HEAD + 0.5) - jnp.log(v) / a1
+        tail_rank = jnp.exp(jnp.minimum(log_tail, jnp.log(_INT32_MAX)))
+        in_head = u <= head_mass
+        overflow = ~in_head & (log_tail >= jnp.log(_INT32_MAX))
+        strong = jnp.where(in_head, head_rank,
+                           jnp.floor(tail_rank).astype(jnp.int32))
+        hot = uni % jnp.maximum(n // HOT_REGION_DIV, 1)
+        weak = jnp.where(u < tp.hot_p, hot, uni)
+        is_strong = tp.zipf_a > 1.0
+        rank = jnp.where(is_strong, strong, weak) % n
+        hashed = (rank.astype(jnp.uint32) * jnp.uint32(ADDR_HASH)
+                  % n.astype(jnp.uint32)).astype(jnp.int32)
+        z_lines = jnp.where(is_strong & overflow, uni, hashed)
+
+        # -- graph / mixed: sequential-vs-random mixture
+        take_seq = ((raw >> 6) & 1023).astype(jnp.float32) * \
+            jnp.float32(1.0 / 1024.0) < tp.seq_frac
+        m_lines = jnp.where(take_seq, s_lines, z_lines)
+
+        pat = tp.pattern
+        lines = jnp.select([pat <= 1, pat == 2, pat == 3, pat >= 4],
+                           [s_lines, t_lines, z_lines, m_lines])
+        addrs = lines * LINE                      # < 2**31 for every spec
+
+        gaps = jnp.exp(jax.random.normal(sub(6), (T,)) * GAP_SIGMA) * \
+            tp.mean_gap
+        return addrs.astype(jnp.int32), gaps.astype(jnp.float32)
+
+    _GEN_CACHE[T] = gen
+    return gen
+
+
+_JIT_CACHE: Dict[int, object] = {}
+
+
+def _jitted_system(T: int):
+    """Jitted (N-node vmapped) standalone generator, cached per T."""
+    if T not in _JIT_CACHE:
+        import jax
+        _JIT_CACHE[T] = jax.jit(jax.vmap(node_generator(T)))
+    return _JIT_CACHE[T]
+
+
+def generate_device(name: str, T: int, seed: int = 0, base_ipc: float = 2.0
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Standalone single-trace convenience, API-compatible with
+    ``host.generate`` (returns int64/float32 numpy arrays). Bit-identical
+    to what the in-graph path generates for the same (key, T) — vmap and
+    jit do not change threefry draws. ``node_seed(seed, 0) == seed``, so
+    node 0 of a one-node system carries exactly ``host.generate``'s
+    seeding."""
+    a, g = system_traces([name], T, seed, base_ipc=base_ipc)
+    return a[0], g[0]
+
+
+def system_traces(workloads: Sequence[str], T: int, seed: int,
+                  base_ipc: float = 2.0) -> Tuple[np.ndarray, np.ndarray]:
+    """(N, T) node traces for one system, generated on device and pulled
+    to host — the pre-staging entry point (and the reference the
+    executor's in-graph generation is bit-identical to)."""
+    import jax
+
+    tp = system_params(tuple(workloads), seed, base_ipc)
+    addrs, gaps = _jitted_system(T)(tp)
+    addrs, gaps = jax.block_until_ready((addrs, gaps))
+    return np.asarray(addrs).astype(np.int64), np.asarray(gaps)

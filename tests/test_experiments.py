@@ -77,6 +77,23 @@ def test_geometry_axes_merge_into_one_padded_group():
     assert plan_points(pts).num_groups == 2
 
 
+def test_trace_backend_on_plan_not_in_compile_key():
+    """The trace backend is an execution choice carried on the Plan —
+    switching it must not change group keys, membership, order, or
+    padding (the planner is backend-blind)."""
+    exp_d = _small_experiment()
+    exp_n = Experiment(name="small", T=T, trace_backend="numpy",
+                       axes=exp_d.axes)
+    plan_d, plan_n = exp_d.plan(), exp_n.plan()
+    assert plan_d.trace_backend == "device"
+    assert plan_n.trace_backend == "numpy"
+    assert [g.key for g in plan_d.groups] == [g.key for g in plan_n.groups]
+    assert [g.indices for g in plan_d.groups] == \
+        [g.indices for g in plan_n.groups]
+    with pytest.raises(ValueError, match="trace backend"):
+        exp_d.plan(trace_backend="cuda")
+
+
 def test_t_bucketing_merges_and_never_truncates():
     pts = []
     for T_true in (700, 900, 1100):
@@ -196,40 +213,62 @@ def test_padded_executor_matches_unpadded_per_point(small_result):
     """The masked executor must reproduce the classic build_sim run
     bit-exactly — both for a uniform-T group (executed at exact T) and for
     a genuinely padded point in a mixed-T group. Padding may cost compute,
-    never metrics."""
+    never metrics. (The fixture runs the default DEVICE trace backend, so
+    the reference pre-stages ``repro.traces.device.system_traces`` arrays
+    — bit-identical to the in-graph generation at the same T.)"""
     import jax.numpy as jnp
 
+    from repro.traces.device import system_traces as dev_traces
+
     # uniform-T fixture group (t_pad == T)
-    a, g = generate("LU", T, node_seed(0, 0))
+    a, g = dev_traces(["LU"], T, 0)
     run = build_sim(FamConfig(), DRAM, 1)
-    ref = run(jnp.asarray(a[None]), jnp.asarray(g[None]))
+    ref = run(jnp.asarray(a), jnp.asarray(g))
     got = small_result.get(workload="LU", variant="dram")
     for k, v in ref.items():
         np.testing.assert_array_equal(np.asarray(v), got[k], err_msg=k)
 
     # mixed-T group: T=700 and T=900 share one executable at t_pad=900,
-    # so the T=700 point simulates 200 masked tail steps
+    # so the T=700 point simulates 200 masked tail steps — and the device
+    # backend generates at t_pad, so the T=700 reference is the first 700
+    # events of the T=900 device trace
     exp = Experiment(name="mixed_t", workloads=("LU",),
                      axes=(Axis("t", (AxisValue("700", T=700),
                                       AxisValue("900", T=900))),))
     plan = exp.plan()
     assert plan.num_groups == 1 and plan.groups[0].t_pad == 900
     res = execute(plan)
+    a, g = dev_traces(["LU"], 900, 0)
     for T_true in (700, 900):
-        a, g = generate("LU", T_true, node_seed(0, 0))
-        ref = run(jnp.asarray(a[None]), jnp.asarray(g[None]))
+        ref = run(jnp.asarray(a[:, :T_true]), jnp.asarray(g[:, :T_true]))
         got = res.get(t=T_true)
         for k, v in ref.items():
             np.testing.assert_array_equal(np.asarray(v), got[k],
                                           err_msg=f"T={T_true} {k}")
+
+    # the NUMPY backend still reproduces the classic numpy-trace run
+    # bit-exactly, including the masked 700-event tail
+    res_np = execute(plan, trace_backend="numpy")
+    assert res_np.info.trace_backend == "numpy"
+    for T_true in (700, 900):
+        a2, g2 = generate("LU", T_true, node_seed(0, 0))
+        ref = run(jnp.asarray(a2[None]), jnp.asarray(g2[None]))
+        got = res_np.get(t=T_true)
+        for k, v in ref.items():
+            np.testing.assert_array_equal(np.asarray(v), got[k],
+                                          err_msg=f"numpy T={T_true} {k}")
 
 
 def test_padded_geometry_executor_matches_exact_reference():
     """The tentpole guarantee: a geometry sweep (block size AND cache
     capacity) executed as ONE padded group must reproduce every point's
     exact-geometry ``build_sim`` reference bit-for-bit — cache occupancy
-    (a geometry-normalized metric) included."""
+    (a geometry-normalized metric) included. References pre-stage the
+    device backend's traces (the executor generates the same bits in
+    graph)."""
     import jax.numpy as jnp
+
+    from repro.traces.device import system_traces as dev_traces
 
     exp = Experiment(
         name="geom", T=700,
@@ -243,10 +282,11 @@ def test_padded_geometry_executor_matches_exact_reference():
     assert plan.num_groups == 1
     assert plan.groups[0].pad_sets == (16 << 20) // 64 // 16
     res = execute(plan)
+    assert res.info.host_trace_events == 0
     for pt in res.points:
-        a, g = generate(pt.workloads[0], pt.T, node_seed(0, 0))
-        ref = build_sim(pt.cfg, pt.flags, 1)(jnp.asarray(a[None]),
-                                             jnp.asarray(g[None]))
+        a, g = dev_traces([pt.workloads[0]], pt.T, 0)
+        ref = build_sim(pt.cfg, pt.flags, 1)(jnp.asarray(a),
+                                             jnp.asarray(g))
         got = res.metrics_for(pt)
         for k, v in ref.items():
             np.testing.assert_array_equal(np.asarray(v), got[k],
@@ -320,15 +360,20 @@ print("BITEXACT", ok)
 def test_overlap_matches_serial():
     """Async double-buffered trace prep must not change any metric — on a
     plan with MULTIPLE groups, so the thread-pool path actually runs (a
-    1-group plan disables the pool). Geometry no longer splits groups, so
-    split on the prefetch queue size (a genuinely un-paddable shape)."""
+    1-group plan disables the pool; so does the DEVICE backend, whose
+    no-host fast path has nothing to overlap — hence numpy here).
+    Geometry no longer splits groups, so split on the prefetch queue size
+    (a genuinely un-paddable shape)."""
     exp = Experiment(
-        name="overlap", T=600,
+        name="overlap", T=600, trace_backend="numpy",
         axes=(config_axis("queue", [64, 128], param="prefetch_queue"),
               workload_axis(["LU", "bfs"])))
     plan = exp.plan()
-    assert plan.num_groups == 2
+    assert plan.num_groups == 2 and plan.trace_backend == "numpy"
+    from repro.experiments import executor as _ex
+    _ex._TRACE_CACHE.clear()   # the counter records GENERATED events
     overlapped = execute(plan, overlap=True)
+    assert overlapped.info.host_trace_events > 0
     serial = execute(plan, overlap=False)
     for i in range(plan.num_points):
         for k, v in overlapped.metrics[i].items():
@@ -382,9 +427,11 @@ def test_seed_threads_to_node_traces():
 
 def test_point_seed_regression_through_shim():
     """The deprecated run_points path must thread Point.seed too."""
+    import benchmarks.common as common
     from benchmarks.common import Point, run_points
     pts = [Point(FamConfig(), DRAM, ("LU",), seed=0),
            Point(FamConfig(), DRAM, ("LU",), seed=3)]
+    common._SHIM_WARNED = False          # re-arm the once-per-process warn
     with pytest.warns(DeprecationWarning):
         results, info = run_points(pts, T)
     assert not np.array_equal(results[0]["ipc"], results[1]["ipc"])
@@ -396,10 +443,12 @@ def test_point_seed_regression_through_shim():
 
 def test_run_points_deprecated_but_equivalent(small_result):
     """run_points warns, and returns exactly what the Experiment path
-    produced for the same grid."""
+    produced for the same grid (same default trace backend included)."""
+    import benchmarks.common as common
     from benchmarks.common import Point, run_points
     pts = [Point(FamConfig(), fl, (w,))
            for w in ("LU", "bfs") for fl in (BASE, DRAM)]
+    common._SHIM_WARNED = False          # re-arm the once-per-process warn
     with pytest.warns(DeprecationWarning, match="Experiment"):
         results, info = run_points(pts, T)
     assert info.planned_groups == 1
@@ -409,3 +458,21 @@ def test_run_points_deprecated_but_equivalent(small_result):
         ref = small_result.get(workload=pt.workloads[0], variant=label)
         for k, v in ref.items():
             np.testing.assert_array_equal(v, got[k])
+
+
+def test_shim_warns_exactly_once_per_process():
+    """The Point/run_points DeprecationWarning fires on the first shim
+    call only — repeated calls (from any call site) stay silent."""
+    import warnings
+
+    import benchmarks.common as common
+    from benchmarks.common import Point, run_points
+    pts = [Point(FamConfig(), DRAM, ("LU",))]
+    common._SHIM_WARNED = False
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        run_points(pts, 600)
+        run_points(pts, 600)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "run_points" in str(w.message)]
+    assert len(dep) == 1, [str(w.message) for w in rec]

@@ -1,0 +1,277 @@
+"""The repro.traces subsystem: the device (JAX threefry) backend must be
+STATISTICALLY equivalent to the numpy reference oracle — same footprint
+coverage, stride/stream structure, Zipf head/tail mass, gap-distribution
+moments — for all 19 workloads; deterministic across processes for
+threefry-derived seeds; and the executor's in-graph generation must be
+bit-identical to pre-staged device traces, with ZERO host-side trace
+generation on the steady-state path.
+
+Tolerance policy (documented in docs/experiments.md): the backends share
+model parameters but not RNG bit-streams, so per-trace statistics are
+compared at T=4000 with the bounds asserted here, and end-to-end
+*derived* figure metrics (IPC gains, relative latencies) must agree
+within |log ratio| <= 0.10; raw second-order metrics (hit fractions,
+prefetch counts) may move more and are not part of the policy.
+"""
+import hashlib
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.traces import (LINE, WORKLOAD_NAMES, WORKLOADS, footprint_bytes,
+                          generate, get_backend, node_seed)
+from repro.traces.device import generate_device, system_traces
+from repro.traces.specs import PATTERN_IDS
+
+T_STAT = 4000
+
+
+def _pair(name, T=T_STAT, seed=0):
+    return generate(name, T, seed), generate_device(name, T, seed)
+
+
+# ---------------------------------------------------------------------------
+# invariants shared by both backends (all 19 workloads)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", WORKLOAD_NAMES)
+def test_bounds_alignment_and_dtypes(name):
+    (ah, gh), (ad, gd) = _pair(name)
+    for a, g in ((ah, gh), (ad, gd)):
+        assert a.shape == (T_STAT,) and g.shape == (T_STAT,)
+        assert a.dtype == np.int64 and g.dtype == np.float32
+        assert (a >= 0).all() and (a < footprint_bytes(name)).all()
+        assert (a % LINE == 0).all()
+        assert (g > 0).all() and np.isfinite(g).all()
+
+
+def test_footprint_coverage_parity():
+    """Unique-line counts (footprint coverage at T events) must agree
+    within 25 % for every workload — the patterns revisit lines at the
+    same order of magnitude."""
+    for name in WORKLOAD_NAMES:
+        (ah, _), (ad, _) = _pair(name)
+        uh, ud = len(np.unique(ah)), len(np.unique(ad))
+        ratio = ud / max(uh, 1)
+        assert 0.8 < ratio < 1.25, (name, uh, ud)
+
+
+def test_gap_moments_parity():
+    """Mean and std of the log-normal compute gaps within 10 / 20 %."""
+    for name in WORKLOAD_NAMES:
+        (_, gh), (_, gd) = _pair(name)
+        assert 0.9 < gd.mean() / gh.mean() < 1.1, name
+        assert 0.8 < gd.std() / gh.std() < 1.25, name
+
+
+def test_stream_strided_structure():
+    """Stream/strided traces touch nearly T distinct lines (each event
+    advances one of a handful of streams) on both backends."""
+    for name in WORKLOAD_NAMES:
+        if WORKLOADS[name].pattern not in ("stream", "strided"):
+            continue
+        (ah, _), (ad, _) = _pair(name)
+        for a in (ah, ad):
+            assert len(np.unique(a)) > 0.95 * T_STAT, name
+
+
+def test_tiled_locality():
+    """Tiled traces stay inside a tile between consecutive events: the
+    median line delta is far below the tile size on both backends."""
+    for name in WORKLOAD_NAMES:
+        spec = WORKLOADS[name]
+        if spec.pattern != "tiled":
+            continue
+        (ah, _), (ad, _) = _pair(name)
+        for a in (ah, ad):
+            lines = a // LINE
+            med = np.median(np.abs(np.diff(lines)))
+            assert med <= spec.tile_lines, (name, med)
+
+
+def test_zipf_head_and_tail_mass_parity():
+    """For the skewed patterns (zipf + the random half of graph/mixed):
+    the hottest-line shares — head mass — agree within 5 % absolute, and
+    the singleton fraction — tail mass — within 10 % absolute."""
+    for name in WORKLOAD_NAMES:
+        if WORKLOADS[name].pattern not in ("zipf", "graph", "mixed"):
+            continue
+        (ah, _), (ad, _) = _pair(name)
+        shares = []
+        tails = []
+        for a in (ah, ad):
+            _, counts = np.unique(a, return_counts=True)
+            counts = np.sort(counts)[::-1]
+            shares.append(counts[:32].sum() / T_STAT)
+            tails.append((counts == 1).sum() / T_STAT)
+        assert abs(shares[0] - shares[1]) < 0.05, (name, shares)
+        assert abs(tails[0] - tails[1]) < 0.10, (name, tails)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis / shim)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(name=st.sampled_from(WORKLOAD_NAMES), seed=st.integers(0, 5),
+       backend=st.sampled_from(["numpy", "device"]))
+def test_property_bounds_alignment_determinism(name, seed, backend):
+    """Both backends, any workload/seed: footprint bounds, line alignment,
+    positive finite gaps, and call-to-call determinism (T fixed at 512 so
+    the device path reuses one compiled kernel)."""
+    b = get_backend(backend)
+    a1, g1 = b.generate(name, 512, seed)
+    a2, g2 = b.generate(name, 512, seed)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(g1, g2)
+    assert (a1 >= 0).all() and (a1 < footprint_bytes(name)).all()
+    assert (a1 % LINE == 0).all()
+    assert (g1 > 0).all() and np.isfinite(g1).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(name=st.sampled_from(WORKLOAD_NAMES), seed=st.integers(0, 3))
+def test_property_seeds_decorrelate(name, seed):
+    """Different seeds produce different traces on both backends (the
+    threefry key derivation must actually consume the seed)."""
+    for b in (get_backend("numpy"), get_backend("device")):
+        a1, _ = b.generate(name, 512, seed)
+        a2, _ = b.generate(name, 512, seed + 1)
+        assert not np.array_equal(a1, a2), (b.name, name)
+
+
+# ---------------------------------------------------------------------------
+# determinism across processes (threefry-derived seeds)
+# ---------------------------------------------------------------------------
+
+_DIGEST_SNIPPET = """
+import hashlib, sys
+sys.path.insert(0, {src!r})
+from repro.traces.device import system_traces
+a, g = system_traces(["bfs", "LU"], 1000, 3)
+print(hashlib.sha256(a.tobytes() + g.tobytes()).hexdigest())
+"""
+
+
+def test_device_traces_identical_across_processes():
+    """Device generation must be byte-identical across interpreters
+    regardless of PYTHONHASHSEED (crc32 seeds + threefry keys — mirrors
+    test_traces_repro.py for the numpy backend)."""
+    a, g = system_traces(["bfs", "LU"], 1000, 3)
+    here = hashlib.sha256(a.tobytes() + g.tobytes()).hexdigest()
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    digests = []
+    for hashseed in ("0", "98765"):
+        env = dict(os.environ, PYTHONHASHSEED=hashseed)
+        out = subprocess.run(
+            [sys.executable, "-c", _DIGEST_SNIPPET.format(src=src)],
+            env=env, capture_output=True, text=True, check=True)
+        digests.append(out.stdout.strip())
+    assert digests[0] == digests[1] == here
+
+
+# ---------------------------------------------------------------------------
+# executor integration: no-host fast path + end-to-end tolerance
+# ---------------------------------------------------------------------------
+
+def test_executor_device_backend_zero_host_generation():
+    """The device backend's steady-state path must generate no trace
+    events on the host (the RunInfo counter the fig14 acceptance gate
+    reads), record its backend, and skip the overlap pool entirely."""
+    from repro.experiments import Experiment, workload_axis
+    from repro.experiments import executor as _ex
+    res = Experiment(name="nohost", T=600,
+                     axes=(workload_axis(["LU", "bfs"]),)).run()
+    assert res.info.trace_backend == "device"
+    assert res.info.host_trace_events == 0
+    d = res.info.as_dict()
+    assert d["trace_backend"] == "device" and d["host_trace_events"] == 0
+    # numpy comparison run on the same plan: the counter records events
+    # actually GENERATED host-side (cold memo: 2 unique traces x 600;
+    # a warm rerun generates nothing new)
+    exp_np = Experiment(name="nohost", T=600, trace_backend="numpy",
+                        axes=(workload_axis(["LU", "bfs"]),))
+    _ex._TRACE_CACHE.clear()
+    res_np = exp_np.run()
+    assert res_np.info.host_trace_events == 2 * 600
+    assert exp_np.run().info.host_trace_events == 0      # memoized reuse
+
+
+def test_end_to_end_derived_metrics_within_tolerance():
+    """The documented equivalence bar: per-figure DERIVED metrics (IPC
+    gain and relative FAM latency of dram-prefetch over baseline) from
+    the two backends agree within |log ratio| <= 0.10 at T=4000, per
+    workload across the pattern classes."""
+    from repro.core.famsim import SimFlags
+    from repro.experiments import Experiment, execute, flag_axis, \
+        workload_axis
+
+    exp = Experiment(
+        name="tol", T=T_STAT,
+        axes=(workload_axis(["LU", "bfs", "mg", "canneal"]),
+              flag_axis("variant", {
+                  "base": SimFlags(core_prefetch=False, dram_prefetch=False),
+                  "dram": SimFlags()})))
+    plan = exp.plan()
+    dev = execute(plan)
+    ref = execute(plan, trace_backend="numpy")
+    for w in ("LU", "bfs", "mg", "canneal"):
+        for metric in ("ipc", "fam_latency"):
+            rd = (np.mean(dev.get(workload=w, variant="dram")[metric]) /
+                  np.mean(dev.get(workload=w, variant="base")[metric]))
+            rn = (np.mean(ref.get(workload=w, variant="dram")[metric]) /
+                  np.mean(ref.get(workload=w, variant="base")[metric]))
+            assert abs(np.log(rd / rn)) <= 0.10, (w, metric, rd, rn)
+
+
+def test_trace_gen_compare_record():
+    """The fig14 engine-row acceptance record has the right shape. The
+    ``device_not_slower`` VALUE is asserted only to be a bool: at this
+    tiny T=1000 scale both host costs are single-digit milliseconds and
+    the race is timing noise — the meaningful comparison is the fig14
+    quick-scale record the CI artifact carries."""
+    from benchmarks.common import trace_gen_compare
+    from repro.experiments import Experiment, workload_axis
+    plan = Experiment(name="cmp", T=1000,
+                      axes=(workload_axis(["LU", "bfs"]),)).plan()
+    rec = trace_gen_compare(plan)
+    for field in ("numpy_host_gen_s", "device_host_stage_s",
+                  "device_kernel_gen_s", "device_kernel_compile_s",
+                  "host_speedup", "device_not_slower", "events_staged"):
+        assert field in rec
+    assert rec["events_staged"] == 2 * 1 * 1000   # S=2 is already canonical
+    assert isinstance(rec["device_not_slower"], bool)
+    assert rec["numpy_host_gen_s"] > 0 and rec["device_host_stage_s"] > 0
+
+
+def test_pattern_ids_cover_all_workloads():
+    """Every spec's pattern has a numeric id the device kernel selects
+    on; the select groups (stream/strided), tiled, zipf, (graph/mixed)
+    must partition the id space the kernel assumes."""
+    assert PATTERN_IDS == {"stream": 0, "strided": 1, "tiled": 2,
+                           "zipf": 3, "graph": 4, "mixed": 5}
+    for spec in WORKLOADS.values():
+        assert spec.pattern in PATTERN_IDS
+        assert spec.tile_lines >= 64       # the device segment bound floor
+        assert 1 <= spec.streams <= 8      # STREAMS_MAX one-hot width
+
+
+def test_backend_registry():
+    from repro.traces import BACKEND_NAMES, DEFAULT_BACKEND
+    assert DEFAULT_BACKEND == "device" and set(BACKEND_NAMES) == \
+        {"device", "numpy"}
+    assert get_backend("numpy").name == "numpy"
+    assert get_backend("device").name == "device"
+    with pytest.raises(ValueError, match="unknown trace backend"):
+        get_backend("cuda")
+    # numpy backend's system_traces == the seed-derived generate calls
+    a, _ = get_backend("numpy").system_traces(["LU", "bfs"], 400, 7)
+    for i, w in enumerate(("LU", "bfs")):
+        np.testing.assert_array_equal(a[i], generate(w, 400,
+                                                     node_seed(7, i))[0])

@@ -79,3 +79,70 @@ def test_all_patterns_generate():
         assert a.shape == (600,) and g.shape == (600,)
         assert a.dtype == np.int64 and (a >= 0).all()
         assert (g > 0).all()
+
+
+def test_compat_shim_reexports_subsystem():
+    """repro.core.traces must stay import-compatible with the pre-split
+    module — same objects as the repro.traces subsystem."""
+    import repro.core.traces as shim
+    import repro.traces as pkg
+    from repro.traces import host, specs
+    assert shim.generate is host.generate is pkg.generate
+    assert shim.WORKLOADS is specs.WORKLOADS
+    assert shim.trace_seed is specs.trace_seed
+    assert shim.node_seed is specs.node_seed
+    assert shim.footprint_bytes is specs.footprint_bytes
+
+
+# ---------------------------------------------------------------------------
+# zipf weak-skew normalization + rank-overflow guard
+# ---------------------------------------------------------------------------
+
+def test_zipf_rank_guard_matches_explicit_modulo():
+    """rng.zipf's heavy tails (a close to 1) return int64 ranks big enough
+    that ``ranks * ADDR_HASH`` would silently wrap int64; the generator
+    must reduce ranks mod n FIRST — mathematically identical for in-range
+    ranks ((r % n) * M % n == r * M % n), exact (no wrap) for the rest."""
+    from repro.core.traces import WorkloadSpec, _lines, _zipf
+    from repro.traces.specs import ADDR_HASH, trace_seed
+
+    spec = WorkloadSpec("tiny-zipf", "synthetic", footprint_mb=0.1,
+                        mpki=10, pattern="zipf", zipf_a=1.05)
+    n = _lines(spec)
+    assert n == 1 << 12                    # the small-footprint floor
+    rng = np.random.default_rng(trace_seed(spec.name, 0))
+    lines = _zipf(spec, rng, 20_000)
+    # replay the same draws: the guard must equal the exact modulo formula
+    rng2 = np.random.default_rng(trace_seed(spec.name, 0))
+    ranks = rng2.zipf(spec.zipf_a, 20_000).astype(np.int64)
+    np.testing.assert_array_equal(lines, ((ranks % n) * ADDR_HASH) % n)
+    assert (lines >= 0).all() and (lines < n).all()
+    # the guard must have actually mattered: a=1.05 draws ranks past the
+    # int64 wrap point for the unguarded multiply
+    assert (ranks > (2 ** 63 - 1) // ADDR_HASH).any()
+
+
+def test_weak_skew_hot_probability_normalized():
+    """For a <= 1 the spec's zipf_a doubles as a probability: hot-region
+    traffic lands with probability hot_fraction == zipf_a / 2 (documented
+    on WorkloadSpec, clamped to [0, 1]) — measured on a footprint small
+    enough for the hot set to be identifiable after hashing."""
+    from repro.core.traces import WorkloadSpec, _lines, _zipf
+    from repro.traces.specs import ADDR_HASH, trace_seed
+
+    spec = WorkloadSpec("tiny-weak", "synthetic", footprint_mb=0.1,
+                        mpki=10, pattern="zipf", zipf_a=1.0)
+    assert spec.hot_fraction == 0.5
+    assert WorkloadSpec("w", "s", 1, 1, "zipf", zipf_a=0.8).hot_fraction \
+        == pytest.approx(0.4)
+    assert WorkloadSpec("w", "s", 1, 1, "zipf", zipf_a=3.0).hot_fraction \
+        == 1.0                              # clamped: it is a probability
+    n = _lines(spec)
+    rng = np.random.default_rng(trace_seed(spec.name, 0))
+    lines = _zipf(spec, rng, 20_000)
+    hot_set = np.unique((np.arange(max(n // 20, 1), dtype=np.int64)
+                         * ADDR_HASH) % n)
+    share = np.isin(lines, hot_set).mean()
+    # hot_fraction + cold traffic that happens to land on hot lines
+    expect = spec.hot_fraction + (1 - spec.hot_fraction) * len(hot_set) / n
+    assert abs(share - expect) < 0.03, (share, expect)
