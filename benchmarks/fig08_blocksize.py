@@ -9,6 +9,8 @@ blocks -> 16384 sets) and every block size's effective geometry rides
 along as traced ``FamParams`` scalars, so the WHOLE figure — every block
 size x workload x variant — plans into ONE compile group and one vmapped
 device call (bit-exact vs the per-point exact-geometry runs). The
+variants are dynamic feature gates over the default ``PolicySet`` (spp +
+fifo chain + lru + token_bucket), so they share the group too. The
 per-point cross-check + wall-clock comparison for the acceptance gate
 lands in the ``fig08_engine`` row.
 """

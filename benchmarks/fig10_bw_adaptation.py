@@ -5,11 +5,13 @@ Paper claims (geomeans): core-pf IPC gain 1.20/1.18/1.10 for 1/2/4 nodes;
 +DRAM prefetch -> 1.26/1.24/1.11; BW adaptation adds +4%/+8% at 2/4 nodes;
 FAM latency -29%/-34% (1/2 nodes); prefetches issued -18%/-21% (2/4 nodes).
 
-All four prefetch configs are dynamic flags, so the planner keys ONE
-compile group per node count (the node count sets the per-system
-arbitration width N, which cannot be padded away); the vmapped system
-axis S pads to canonical widths (and left the compile key), so workload
-subsets within ~25 % of each other land on shared executables.
+All four prefetch configs are dynamic feature gates over the default
+``PolicySet`` (the token-bucket adaptation policy's knobs are its traced
+numeric params), so the planner keys ONE compile group per node count
+(the node count sets the per-system arbitration width N, which cannot be
+padded away); the vmapped system axis S pads to canonical widths (and
+left the compile key), so workload subsets within ~25 % of each other
+land on shared executables.
 """
 from __future__ import annotations
 

@@ -5,23 +5,50 @@ Paper claims: weights 1/2/3 improve mean IPC by ~8/9/9% (4-node) and
 ~3/4/4% (2-node) over FIFO; FAM latency -24% (4n) / -10% (2n); DRAM
 prefetches issued fall 17/31/37% with weight.
 
-FIFO vs WFQ and the WFQ weight are dynamic parameters, so the whole grid
-plans into ONE compile group per node count; the system axis S pads to
-canonical widths (and left the compile key), so workload subsets within
-~25 % of each other land on shared executables.
+FIFO vs WFQ and the WFQ weight are dynamic parameters — the scheduler
+policies share the fused ``scheduler:chain`` program and the weight is a
+scheduler-policy numeric param — so the whole grid plans into ONE compile
+group per node count; the system axis S pads to canonical widths (and
+left the compile key), so workload subsets within ~25 % of each other
+land on shared executables.
+
+fig12 is also the policy-matrix driver: ``run(policies=...)`` (exposed as
+``benchmarks.run --policies``) sweeps full ``PolicySet`` combinations via
+a ``policy_axis`` — e.g. {fifo, wfq, strict} x {spp, nextline} — with
+each row measured against the ``spp+fifo`` baseline combo. The
+``spp+wfq`` rows of a policy-matrix run are byte-identical to the plain
+run's ``w2`` rows (same traces, same traced program, default weight 2) —
+CI asserts exactly that.
 """
 from __future__ import annotations
+
+from typing import Mapping, Optional
 
 import numpy as np
 
 from benchmarks.common import (DRAM, WFQ, FamConfig, geomean, info_row,
                                save_rows, workloads)
-from repro.experiments import Experiment, flag_axis, nodes_axis, workload_axis
+from repro.experiments import (Experiment, PolicySet, flag_axis, nodes_axis,
+                               policy_axis, workload_axis)
 
 T = 10_000
 WEIGHTS = (1, 2, 3)
 NODE_COUNTS = (2, 4)
 VARIANTS = {"fifo": DRAM, **{f"w{w}": WFQ(w) for w in WEIGHTS}}
+
+def _baseline_label(policies: Mapping[str, PolicySet]) -> str:
+    """The matrix's baseline combo: the all-default PolicySet (spp + fifo +
+    lru + token_bucket, no numeric-param overrides) — the same
+    configuration the plain fig12 run's ``fifo`` variant executes.
+    Full-dataclass equality, so an overridden look-alike is never
+    silently picked as the baseline."""
+    default = PolicySet()
+    for label, ps in policies.items():
+        if ps == default:
+            return label
+    raise ValueError(
+        "policy matrix needs the all-default baseline combo "
+        f"({default.describe()}, no overrides); got {sorted(policies)}")
 
 
 def experiment(quick: bool = True,
@@ -34,38 +61,83 @@ def experiment(quick: bool = True,
               flag_axis("variant", VARIANTS)))
 
 
-def run(quick: bool = True, trace_backend: str = "device"):
-    wls = workloads(quick)
-    res = experiment(quick, trace_backend).run()
-    info = res.info
+def policy_experiment(policies: Mapping[str, PolicySet], quick: bool = True,
+                      trace_backend: str = "device") -> Experiment:
+    """The fig12 grid with the flag-variant axis replaced by a policy
+    axis: nodes x workloads x PolicySet combos, prefetching enabled
+    (flags=DRAM). Same-tag combos (spp+fifo, spp+wfq, any weight) share a
+    compile group per node count; combos with a different traced program
+    (strict, nextline) plan into their own groups."""
+    return Experiment(
+        name="fig12_wfq_policies", T=T, base=FamConfig(), flags=DRAM,
+        trace_backend=trace_backend,
+        axes=(nodes_axis(NODE_COUNTS),
+              workload_axis(workloads(quick)),
+              policy_axis(dict(policies))))
 
+
+def _rows_for(res, wls, variants, name_of, info):
+    """Shared row builder: each variant vs its baseline, per node count.
+
+    ``variants`` maps row-label -> (lookup kwargs, baseline kwargs)."""
     rows = []
     for n in NODE_COUNTS:
-        for w_ in WEIGHTS:
+        for label, (kw, base_kw) in variants.items():
             gains, lat, pf, dh, ch = [], [], [], [], []
             for w in wls:
-                fifo = res.get(nodes=n, workload=w, variant="fifo")
-                wfq = res.get(nodes=n, workload=w, variant=f"w{w_}")
-                gains.append(wfq["ipc"].mean() / max(fifo["ipc"].mean(), 1e-9))
-                lat.append(wfq["fam_latency"].mean() /
+                fifo = res.get(nodes=n, workload=w, **base_kw)
+                var = res.get(nodes=n, workload=w, **kw)
+                gains.append(var["ipc"].mean() / max(fifo["ipc"].mean(), 1e-9))
+                lat.append(var["fam_latency"].mean() /
                            max(fifo["fam_latency"].mean(), 1e-9))
-                pf.append(wfq["prefetches_issued"].sum() /
+                pf.append(var["prefetches_issued"].sum() /
                           max(fifo["prefetches_issued"].sum(), 1.0))
-                dh.append(wfq["demand_hit_fraction"].mean())
-                ch.append(wfq["corepf_hit_fraction"].mean())
+                dh.append(var["demand_hit_fraction"].mean())
+                ch.append(var["corepf_hit_fraction"].mean())
             rows.append({
-                "name": f"fig12_nodes{n}_w{w_}",
+                "name": name_of(n, label),
                 "us_per_call": info.us_per_call(),
                 "derived": (f"ipc_vs_fifo={geomean(gains):.3f};"
                             f"rel_lat={geomean(lat):.3f};"
                             f"rel_pf={np.mean(pf):.3f}"),
-                "nodes": n, "weight": w_,
+                "nodes": n, "variant": label,
                 "ipc_gain_vs_fifo": geomean(gains),
                 "rel_fam_latency_vs_fifo": geomean(lat),
                 "rel_prefetches": float(np.mean(pf)),
                 "demand_hit_fraction": float(np.mean(dh)),
                 "corepf_hit_fraction": float(np.mean(ch)),
             })
+    return rows
+
+
+def run(quick: bool = True, trace_backend: str = "device",
+        policies: Optional[Mapping[str, PolicySet]] = None):
+    wls = workloads(quick)
+    if policies is not None:
+        return _run_policies(policies, wls, quick, trace_backend)
+    res = experiment(quick, trace_backend).run()
+    info = res.info
+    variants = {f"w{w_}": ({"variant": f"w{w_}"}, {"variant": "fifo"})
+                for w_ in WEIGHTS}
+    rows = _rows_for(res, wls, variants,
+                     lambda n, label: f"fig12_nodes{n}_{label}", info)
+    for row in rows:
+        row["weight"] = int(row.pop("variant")[1:])
     rows.append(info_row("fig12_engine", info))
     save_rows("fig12_wfq", rows)
+    return rows
+
+
+def _run_policies(policies: Mapping[str, PolicySet], wls, quick: bool,
+                  trace_backend: str):
+    baseline = _baseline_label(policies)
+    res = policy_experiment(policies, quick, trace_backend).run()
+    info = res.info
+    variants = {label: ({"policy": label}, {"policy": baseline})
+                for label in policies if label != baseline}
+    rows = _rows_for(res, wls, variants,
+                     lambda n, label: f"fig12_nodes{n}_{label}", info)
+    rows.append(info_row("fig12_policies_engine", info,
+                         policy_matrix=sorted(policies)))
+    save_rows("fig12_wfq_policies", rows)
     return rows

@@ -4,11 +4,13 @@ Paper claims: across 7 mixes, BW adaptation and WFQ give ~+10% and ~+9%
 IPC over the non-adaptive (FIFO) prefetcher on average; the winner
 depends on the co-running mix.
 
-All six configs (baseline + 5 prefetch variants) are dynamic flags, so the
-whole figure plans into ONE compile group (mixes x configs vmapped
-together); the system axis S pads to canonical widths (and left the
-compile key), so mix subsets within ~25 % of each other land on shared
-executables.
+All six configs (baseline + 5 prefetch variants) are dynamic feature
+gates and scheduler-policy numeric params over the default fused
+``PolicySet`` (FIFO and WFQ share the chain scheduler's traced program),
+so the whole figure plans into ONE compile group (mixes x configs
+vmapped together); the system axis S pads to canonical widths (and left
+the compile key), so mix subsets within ~25 % of each other land on
+shared executables.
 
 fig14 is also the trace-backend acceptance figure: with the default
 ``device`` backend the run asserts ZERO host-side trace generation on the

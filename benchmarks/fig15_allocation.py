@@ -5,10 +5,12 @@ Paper claims: with core-pf only, IPC decrement grows from ~10% (ratio 1) to
 ~28% (ratio 8); DRAM prefetch recovers ~5-6% across ratios; the adaptive
 variants matter most at high ratios.
 
-The allocation ratio is a dynamic parameter, so the ENTIRE figure — every
-ratio x config x workload — plans into a single compile group; the system
-axis S pads to canonical widths (and left the compile key), so workload
-subsets within ~25 % of each other land on shared executables.
+The allocation ratio is a dynamic parameter and every variant (WFQ
+weight included — a scheduler-policy numeric param since the policy
+layer) only moves traced scalars, so the ENTIRE figure — every ratio x
+config x workload — plans into a single compile group; the system axis S
+pads to canonical widths (and left the compile key), so workload subsets
+within ~25 % of each other land on shared executables.
 """
 from __future__ import annotations
 

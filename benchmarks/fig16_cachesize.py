@@ -10,8 +10,10 @@ planner pads the cache allocation to the largest swept capacity (512
 sets at 2048 KB) and each capacity's effective set count masks it down,
 so the WHOLE figure — every size x workload x variant — plans into ONE
 compile group and one vmapped device call (bit-exact vs the per-point
-exact-geometry runs). The per-point cross-check + wall-clock comparison
-lands in the ``fig16_engine`` row.
+exact-geometry runs). The base-vs-WFQ variants share it too: both ride
+the fused chain scheduler policy (``use_wfq``/``weight`` are traced
+numeric params, never compile keys). The per-point cross-check +
+wall-clock comparison lands in the ``fig16_engine`` row.
 """
 from __future__ import annotations
 

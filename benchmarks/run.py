@@ -11,10 +11,17 @@ Select figures positionally and pass ``--full`` through to each figure's
     python -m benchmarks.run --full fig14     # fig14 over all 19 workloads
     python -m benchmarks.run --plan           # print compile groups, run nothing
     python -m benchmarks.run --trace-backend numpy fig14   # host ref traces
+
+``--policies`` sweeps the repro.policies zoo as a policy matrix on the
+figures that support it (fig12)::
+
+    python -m benchmarks.run --policies scheduler=fifo,wfq,strict \\
+        --policies prefetch=spp,nextline fig12
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import os
 import sys
 import time
@@ -44,6 +51,14 @@ def main(argv=None) -> None:
                          "host-side generation), 'numpy' stages the host "
                          "reference generators (never changes compile "
                          "groups, only the trace source)")
+    ap.add_argument("--policies", action="append", default=None,
+                    metavar="KIND=NAME[,NAME...]",
+                    help="policy-matrix mode (repeatable): sweep the named "
+                         "repro.policies per kind (prefetch / scheduler / "
+                         "replacement / adaptation) as the cross-product of "
+                         "PolicySet combos, on figures that support it "
+                         "(fig12). Unlisted kinds keep their defaults; the "
+                         "all-default combo is the required baseline")
     ap.add_argument("--only", default=None,
                     help="deprecated comma-list alternative to positional "
                          "figure names (fig08,fig10,...)")
@@ -66,29 +81,76 @@ def main(argv=None) -> None:
                      f"(choose from {list(figures)})")
         figures = {k: v for k, v in figures.items() if k in keep}
 
+    combos = None
+    if args.policies:
+        combos = policy_combos(args.policies, ap.error)
+        unsupported = [k for k, mod in figures.items()
+                       if "policies" not in
+                       inspect.signature(mod.run).parameters]
+        if unsupported:
+            ap.error(f"--policies is not supported by {unsupported} "
+                     "(supported: fig12); select supported figures "
+                     "explicitly")
+
     if args.plan:
-        print_plans(figures, quick=not args.full)
+        print_plans(figures, quick=not args.full, policies=combos)
         return
 
     print("name,us_per_call,derived")
     for key, mod in figures.items():
         t0 = time.time()
+        kw = {} if combos is None else {"policies": combos}
         rows = mod.run(quick=not args.full,
-                       trace_backend=args.trace_backend)
+                       trace_backend=args.trace_backend, **kw)
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.3f},\"{r['derived']}\"",
                   flush=True)
         print(f"# {key} wall={time.time() - t0:.1f}s", file=sys.stderr)
 
 
-def print_plans(figures, quick: bool) -> None:
+def policy_combos(specs, error):
+    """Parse repeated ``KIND=NAME[,NAME...]`` args into the cross-product
+    of labelled PolicySets. Labels join the swept kinds' policy names in
+    canonical kind order (``spp+fifo``), so the all-default combo — the
+    baseline the drivers measure against — is labelled by its default
+    names."""
+    import itertools
+
+    from repro.policies import POLICY_KINDS, PolicySet, available
+
+    swept = {}
+    for spec in specs:
+        kind, eq, names = spec.partition("=")
+        if not eq or not names:
+            error(f"--policies expects KIND=NAME[,NAME...], got {spec!r}")
+        if kind not in POLICY_KINDS:
+            error(f"unknown policy kind {kind!r} (kinds: {POLICY_KINDS})")
+        for n in names.split(","):
+            if n not in available(kind):
+                error(f"unknown {kind} policy {n!r} "
+                      f"(available: {available(kind)})")
+        swept[kind] = names.split(",")
+    kinds = [k for k in POLICY_KINDS if k in swept]
+    combos = {}
+    for values in itertools.product(*(swept[k] for k in kinds)):
+        label = "+".join(values)
+        combos[label] = PolicySet(**dict(zip(kinds, values)))
+    return combos
+
+
+def print_plans(figures, quick: bool, policies=None) -> None:
     """``--plan``: resolve and print every figure's compile groups without
     generating a trace or compiling anything. One summary line per figure
     (``<name>: G group(s), P points, E events (+X padded, O% overhead)``)
     plus one indented line per group — deterministic, so tests assert the
-    one-group-per-figure ceilings on this exact output."""
+    one-group-per-figure ceilings on this exact output. With ``policies``
+    (the --policies matrix) the figure's policy experiment is planned
+    instead."""
     for key, mod in figures.items():
-        plan = mod.experiment(quick=quick).plan()
+        if policies is not None:
+            plan = mod.policy_experiment(policies, quick=quick).plan()
+        else:
+            plan = mod.experiment(quick=quick).plan()
         events = plan.events()
         padded = plan.padded_events()
         print(f"{plan.name}: {plan.num_groups} group(s), "

@@ -313,6 +313,12 @@ class FamConfig:
     prefetch_degree: int = 4
     prefetch_queue: int = 64           # per-node, scaled with the stream
                                        # (Table II: 256 at full scale)
+    # core-side prefetch / fill micro-architecture (hoisted from famsim
+    # module constants — defaults unchanged; all three are static SHAPE
+    # parameters and participate in the compile key)
+    core_pf_degree: int = 2            # stride-prefetch lines per trigger
+    completions_per_step: int = 8      # prefetch fills retired per event
+    core_fill_entries: int = 64        # LLC fill-buffer entries (core pf)
     spp_signature_bits: int = 12
     spp_pattern_entries: int = 4096
     spp_signature_entries: int = 1024
@@ -359,7 +365,9 @@ class FamConfig:
         """
         return (self.prefetch_queue, self.prefetch_degree,
                 self.spp_signature_bits, self.spp_pattern_entries,
-                self.spp_signature_entries, self.spp_max_lookahead)
+                self.spp_signature_entries, self.spp_max_lookahead,
+                self.core_pf_degree, self.completions_per_step,
+                self.core_fill_entries)
 
     def static_shape(self) -> Tuple:
         """The allocation-deciding subset of this config: this config's own

@@ -1,4 +1,5 @@
 from repro.core.fam_params import FamParams, stack_params  # noqa: F401
 from repro.core.famsim import (SimFlags, build_sim, build_sweep,  # noqa: F401
                                simulate, sweep)
+from repro.policies import DEFAULT_POLICY_SET, PolicySet  # noqa: F401
 from repro.core.tiering import TieredBlockPool, TierState  # noqa: F401

@@ -71,28 +71,39 @@ def lookup(state: CacheState, block_addr, num_sets=None, ways=None
     return hit, si, way
 
 
-def touch(state: CacheState, set_idx, way, enable=True) -> CacheState:
+def touch(state: CacheState, set_idx, way, enable=True,
+          policy=None) -> CacheState:
     """LRU update on a hit (paper: 'the corresponding LRU field is updated').
 
     ``enable`` masks the write *value* (not the op) so XLA keeps the update
-    in place inside loops — no whole-table copies."""
+    in place inside loops — no whole-table copies. ``policy`` is a *bound*
+    replacement policy (see ``repro.policies.replacement``) supplying the
+    hit-time recency value; ``None`` is the classic LRU stamp."""
     en = jnp.asarray(enable)
     stamp = state.stamp + en.astype(jnp.int32)
-    new_lru = jnp.where(en, stamp, state.lru[set_idx, way])
+    old = state.lru[set_idx, way]
+    hit_val = stamp if policy is None else policy.on_hit(old, stamp)
+    new_lru = jnp.where(en, hit_val, old)
     return state._replace(lru=state.lru.at[set_idx, way].set(new_lru),
                           stamp=stamp)
 
 
 def insert(state: CacheState, block_addr, enable=True,
-           num_sets=None, ways=None
+           num_sets=None, ways=None, policy=None
            ) -> Tuple[CacheState, jax.Array, jax.Array]:
-    """Fill one block: evict set-LRU victim if no vacancy.
+    """Fill one block: evict the replacement policy's victim if no vacancy.
 
     Returns (state, evicted_tag-1 or -1, slot) where slot = set*W_pad + way
     identifies the cache data location (used as HBM pool slot in tiering).
     ``enable`` masks the written values (in-place-friendly, see touch).
     ``num_sets``/``ways`` give the effective geometry of a padded state:
-    vacancy and LRU victim selection never consider a padded way.
+    vacancy and victim selection never consider a padded way.
+
+    ``policy=None`` keeps the classic single-element in-place set-LRU path
+    (the pre-policy program, bit for bit). A bound replacement policy
+    (``repro.policies.replacement``) switches to the generalized path:
+    the policy may age the whole recency row on eviction (SRRIP) and
+    chooses the victim way; hit/vacancy handling is shared.
     """
     en = jnp.asarray(enable)
     si = _set_index(block_addr,
@@ -103,6 +114,7 @@ def insert(state: CacheState, block_addr, enable=True,
     already = row_tags == tag
     vacant = row_tags == 0
     victim_lru = row_lru
+    wmask = None
     if ways is not None:
         wmask = _way_mask(state, ways)
         already = already & wmask
@@ -110,16 +122,41 @@ def insert(state: CacheState, block_addr, enable=True,
         victim_lru = jnp.where(wmask, row_lru, jnp.iinfo(jnp.int32).max)
     has = jnp.any(already)
     has_vacant = jnp.any(vacant)
+    stamp = state.stamp + en.astype(jnp.int32)
+    w_pad = state.tags.shape[1]
+    if policy is None:
+        way = jnp.where(has, jnp.argmax(already),
+                        jnp.where(has_vacant, jnp.argmax(vacant),
+                                  jnp.argmin(victim_lru))).astype(jnp.int32)
+        evicted = jnp.where(en & ~(has | has_vacant), row_tags[way] - 1, -1)
+        new = CacheState(
+            tags=state.tags.at[si, way].set(jnp.where(en, tag,
+                                                      row_tags[way])),
+            lru=state.lru.at[si, way].set(jnp.where(en, stamp,
+                                                    row_lru[way])),
+            stamp=stamp)
+        return new, evicted, si * w_pad + way
+
+    if wmask is None:
+        wmask = jnp.ones((w_pad,), jnp.bool_)
+    eff_ways = jnp.asarray(w_pad if ways is None else ways, jnp.int32)
+    aged_row, evict_way = policy.evict(row_lru, wmask, stamp, si, eff_ways)
     way = jnp.where(has, jnp.argmax(already),
                     jnp.where(has_vacant, jnp.argmax(vacant),
-                              jnp.argmin(victim_lru))).astype(jnp.int32)
+                              evict_way)).astype(jnp.int32)
     evicted = jnp.where(en & ~(has | has_vacant), row_tags[way] - 1, -1)
-    stamp = state.stamp + en.astype(jnp.int32)
+    # aging applies only on the eviction path; hit/vacancy keep the row.
+    # A redundant fill of an already-present block is a re-reference —
+    # the policy's hit update (promote), never a fresh-insert value
+    # (which would DEMOTE a hot line under SRRIP).
+    base_row = jnp.where(has | has_vacant, row_lru, aged_row)
+    fill_val = jnp.where(has, policy.on_hit(row_lru[way], stamp),
+                         policy.insert_value(stamp))
+    new_row = base_row.at[way].set(fill_val)
     new = CacheState(
         tags=state.tags.at[si, way].set(jnp.where(en, tag, row_tags[way])),
-        lru=state.lru.at[si, way].set(jnp.where(en, stamp, row_lru[way])),
+        lru=state.lru.at[si].set(jnp.where(en, new_row, row_lru)),
         stamp=stamp)
-    w_pad = state.tags.shape[1]
     return new, evicted, si * w_pad + way
 
 

@@ -6,8 +6,8 @@ The simulator's configuration splits into two kinds of parameter:
   geometry, table entries, queue sizes, prefetch degrees — anything that
   decides an array allocation. Changing one forces a recompile.
 * **dynamic parameters** (:class:`FamParams`): latencies, bandwidths,
-  thresholds, weights, the allocation ratio, the feature flags — and,
-  since the dynamic-geometry refactor, the *effective* cache geometry
+  the allocation ratio, the feature flags — and, since the
+  dynamic-geometry refactor, the *effective* cache geometry
   (``num_sets``, ``cache_ways``, ``block_bits``/``block_bytes``). These
   are plain scalars threaded through the simulator as traced values, so a
   whole sweep over them (plus its baseline!) runs under ONE jit compile,
@@ -16,6 +16,15 @@ The simulator's configuration splits into two kinds of parameter:
   operation masks down to the effective geometry (see
   ``repro.core.dram_cache``) — bit-exactly equivalent to the unpadded run.
 
+Since the policy-layer redesign there is a third axis: **policy choice vs
+policy parameters** (see :mod:`repro.policies`). Which prefetcher /
+scheduler / replacement / adaptation policy runs is *static* — the
+:class:`~repro.policies.PolicySet`'s compile tags join the planner's
+compile key — while each policy's numeric knobs (WFQ weight, SPP
+confidence threshold, adaptation rates, ...) ride here on
+:attr:`FamParams.policy` as a ``{kind: {param: scalar}}`` pytree of traced
+values, sweepable under one compile like any other dynamic parameter.
+
 ``FamParams`` deliberately mirrors the ``FamConfig`` attribute names it
 replaces (``fam_mem_latency``, ``cxl_min_latency_cycles``,
 ``fam_service_cycles(nbytes)``, ...) so downstream modules (throttle,
@@ -23,13 +32,14 @@ fam_controller) accept either object unchanged.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence
+from typing import Any, Dict, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FamConfig
 from repro.core.addresses import block_bits
+from repro.policies import PolicySet, SimFlags
 
 
 class FamParams(NamedTuple):
@@ -52,34 +62,39 @@ class FamParams(NamedTuple):
     num_sets: jax.Array                # i32 effective set count
     cache_ways: jax.Array              # i32 effective associativity
     block_bits: jax.Array              # i32 log2(block_bytes): traced shift
-    # prefetcher / throttle
-    spp_confidence_threshold: jax.Array
-    sample_interval: jax.Array
-    latency_noise_threshold: jax.Array
-    mimd_increase: jax.Array
-    ema_alpha: jax.Array
-    min_issue_rate: jax.Array
-    # WFQ
-    wfq_backlog_cap: jax.Array
-    wfq_weight: jax.Array
     # placement
     allocation_ratio: jax.Array
     # feature flags (dynamic: baseline + variants share one compile)
     core_prefetch: jax.Array
     dram_prefetch: jax.Array
     bw_adapt: jax.Array
-    wfq: jax.Array
     all_local: jax.Array
+    #: per-policy numeric params: {kind: {param: scalar}} —
+    #: schema from the PolicySet (see repro.policies), values traced. The
+    #: SPP confidence threshold, WFQ weight/backlog cap, and the
+    #: adaptation tuning knobs live here now, not as loose fields.
+    policy: Dict[str, Dict[str, jax.Array]]
 
     @classmethod
-    def of(cls, cfg: FamConfig, flags=None) -> "FamParams":
-        """Build concrete params from a config (+ optional SimFlags)."""
+    def of(cls, cfg: FamConfig, flags: Optional[SimFlags] = None,
+           policies: Optional[PolicySet] = None) -> "FamParams":
+        """Build concrete params from a config (+ optional SimFlags and
+        :class:`~repro.policies.PolicySet`).
+
+        ``policies=None`` derives the set from the flags
+        (:meth:`PolicySet.from_flags`: ``wfq=True`` selects the ``wfq``
+        scheduler with the flag weight). An *explicit* ``policies`` is
+        authoritative for policy choice and numeric params — the legacy
+        ``flags.wfq``/``flags.wfq_weight`` are ignored then — while the
+        remaining flag booleans always populate the dynamic feature gates.
+        """
         f32 = lambda v: jnp.float32(v)
         i32 = lambda v: jnp.int32(v)
         b = lambda v: jnp.bool_(v)
         if flags is None:
-            from repro.core.famsim import SimFlags
             flags = SimFlags()
+        if policies is None:
+            policies = PolicySet.from_flags(flags)
         return cls(
             base_ipc=f32(cfg.base_ipc), mlp=f32(cfg.mlp),
             cores_per_node=f32(cfg.cores_per_node),
@@ -93,38 +108,46 @@ class FamParams(NamedTuple):
             num_sets=i32(cfg.num_sets),
             cache_ways=i32(cfg.cache_ways),
             block_bits=i32(block_bits(cfg.block_bytes)),
-            spp_confidence_threshold=f32(cfg.spp_confidence_threshold),
-            sample_interval=i32(cfg.sample_interval),
-            latency_noise_threshold=f32(cfg.latency_noise_threshold),
-            mimd_increase=f32(cfg.mimd_increase),
-            ema_alpha=f32(cfg.ema_alpha),
-            min_issue_rate=f32(cfg.min_issue_rate),
-            wfq_backlog_cap=f32(cfg.wfq_backlog_cap),
-            wfq_weight=f32(flags.wfq_weight),
             allocation_ratio=i32(cfg.allocation_ratio),
             core_prefetch=b(flags.core_prefetch),
             dram_prefetch=b(flags.dram_prefetch),
             bw_adapt=b(flags.bw_adapt),
-            wfq=b(flags.wfq),
-            all_local=b(flags.all_local))
+            all_local=b(flags.all_local),
+            policy=policies.numeric_params(cfg))
 
     # -- FamConfig-compatible helpers (duck-typed by throttle/controller) --
     def fam_service_cycles(self, nbytes) -> jax.Array:
         return self.fam_cycles_per_byte * nbytes
 
-    def with_flags(self, flags) -> "FamParams":
-        """Replace the flag fields (broadcast over any sweep axis)."""
+    def with_flags(self, flags: SimFlags) -> "FamParams":
+        """Replace the flag fields (broadcast over any sweep axis).
+
+        The legacy ``wfq``/``wfq_weight`` flags map onto the scheduler
+        policy's numeric params when its schema carries them (the fused
+        ``fifo``/``wfq`` chain policies do); under a scheduler without
+        those params (e.g. ``strict``) they are ignored.
+        """
         shape = jnp.shape(self.base_ipc)
         full = lambda v, dt: jnp.full(shape, v, dt)
+        pol: Dict[str, Dict[str, Any]] = \
+            {k: dict(v) for k, v in self.policy.items()}
+        sched = pol.get("scheduler", {})
+        if "use_wfq" in sched:
+            sched["use_wfq"] = full(flags.wfq, jnp.bool_)
+        if "weight" in sched:
+            sched["weight"] = full(flags.wfq_weight, jnp.float32)
         return self._replace(
             core_prefetch=full(flags.core_prefetch, jnp.bool_),
             dram_prefetch=full(flags.dram_prefetch, jnp.bool_),
             bw_adapt=full(flags.bw_adapt, jnp.bool_),
-            wfq=full(flags.wfq, jnp.bool_),
             all_local=full(flags.all_local, jnp.bool_),
-            wfq_weight=full(flags.wfq_weight, jnp.float32))
+            policy=pol)
 
 
 def stack_params(params: Sequence[FamParams]) -> FamParams:
-    """Stack S per-system FamParams into one batch with leading axis S."""
+    """Stack S per-system FamParams into one batch with leading axis S.
+
+    Every member must share the policy-param schema — i.e. come from
+    PolicySets with equal compile tags (the planner's group invariant).
+    """
     return jax.tree.map(lambda *xs: jnp.stack(xs), *params)

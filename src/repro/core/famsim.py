@@ -3,25 +3,31 @@
 Vectorized discrete-event model: one LLC-miss event per node per scan step.
 Each step:
   A. (per node, vmapped) advance clock, retire completed prefetches into the
-     DRAM cache, probe cache/prefetch-queue for the demand, train SPP and
-     generate DRAM-cache prefetch candidates, run the core (stride)
-     prefetcher, apply BW-adaptation tokens;
-  B. (global) the FAM controller orders the step's demand+prefetch arrivals
-     (FIFO or DWRR/WFQ) and times them through the DDR service chain;
+     DRAM cache, probe cache/prefetch-queue for the demand, train the
+     DRAM-cache prefetch policy and generate prefetch candidates, run the
+     core (stride) prefetcher, apply the adaptation policy's issue tokens;
+  B. (global) the scheduler policy orders the step's demand+prefetch
+     arrivals at the FAM controller and times them through the DDR service
+     chain;
   C. (per node) demand stall accounting (IPC model), prefetch-queue fills,
-     throttle observation, metric accumulation.
+     adaptation-policy observation, metric accumulation.
 
 Figures of merit follow the paper's §V-A definitions: IPC gain, relative
 FAM latency, relative DRAM prefetches issued, demand / core-prefetch hit
 fractions. The core model is analytic: cycles = sum(gap) + sum(stall/MLP).
 
-Configuration is split two ways (see ``repro.core.fam_params``):
+Configuration splits THREE ways (see ``repro.core.fam_params`` and
+``repro.policies``):
 
 * ``FamConfig`` supplies the **static shape parameters** (the *padded*
   cache allocation, table sizes, degrees) that are baked into the
   compiled program;
-* ``FamParams`` carries every **dynamic scalar** (latencies, bandwidths,
-  thresholds, the allocation ratio, the feature flags — and the
+* a ``PolicySet`` names the **policy implementations** — prefetcher,
+  scheduler, replacement, adaptation — whose compile tags are static too
+  (a different traced program per tag), while each policy's numeric
+  params ride on ``FamParams.policy`` as traced scalars;
+* ``FamParams`` carries every remaining **dynamic scalar** (latencies,
+  bandwidths, the allocation ratio, the feature flags — and the
   *effective* cache geometry ``num_sets``/``cache_ways``/``block_bits``)
   as traced values.
 
@@ -35,10 +41,12 @@ equivalent to the unpadded run.
 constants).  ``sweep``/``build_sweep`` vmap the same step function over a
 batch of independent simulated systems — sweep points x workloads — so a
 whole paper figure costs ONE jit compile, geometry sweeps included.
+Every builder takes an optional ``policies: PolicySet``; the default set
+(spp + fifo/wfq chain + lru + token_bucket) executes the same traced
+program the pre-policy simulator did.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -48,38 +56,37 @@ import numpy as np
 from repro.configs.base import FamConfig
 from repro.core import dram_cache as dc
 from repro.core import prefetch_queue as pq
-from repro.core import spp as spp_lib
 from repro.core.addresses import (PAGE_BITS, dyn_block_addr,
                                   dyn_blocks_per_page, dyn_split)
-from repro.core.fam_controller import arbitrate
 from repro.core.fam_params import FamParams, stack_params
-from repro.core.throttle import (ThrottleState, init_throttle, maybe_adapt,
-                                 observe, take_tokens)
+from repro.core.throttle import ThrottleState  # noqa: F401 (compat)
+from repro.policies import DEFAULT_POLICY_SET, PolicySet, SimFlags
 
+__all__ = ["SimFlags", "PolicySet", "NodeState", "build_sim", "build_sweep",
+           "build_masked_vmap", "sweep", "simulate"]
+
+# Legacy aliases of the now-config-carried core-prefetch shape parameters
+# (``FamConfig.core_pf_degree`` / ``completions_per_step`` /
+# ``core_fill_entries``); kept only for external references — the
+# simulator reads the config fields.
 CORE_PF_DEGREE = 2
 COMPLETIONS_PER_STEP = 8
-CORE_FILL_ENTRIES = 64   # LLC fill-buffer model for core prefetches
+CORE_FILL_ENTRIES = 64
 
 
-@dataclass(frozen=True)
-class SimFlags:
-    core_prefetch: bool = True
-    dram_prefetch: bool = True
-    bw_adapt: bool = False
-    wfq: bool = False
-    wfq_weight: int = 2
-    all_local: bool = False
+def _resolve(policies: Optional[PolicySet]) -> PolicySet:
+    return DEFAULT_POLICY_SET if policies is None else policies
 
 
 class NodeState(NamedTuple):
     clock: jax.Array
-    spp: spp_lib.SppState
+    pf: jax.Array              # prefetch-policy state pytree (SPP: SppState)
     cache: dc.CacheState
     queue: pq.PrefetchQueue
-    throttle: ThrottleState
+    throttle: jax.Array        # adaptation-policy state (ThrottleState)
     core_last: jax.Array       # last demand line addr (for stride detect)
     core_stride: jax.Array
-    core_buf_line: jax.Array   # (CORE_FILL_ENTRIES,) line addr +1; 0 empty
+    core_buf_line: jax.Array   # (core_fill_entries,) line addr +1; 0 empty
     core_buf_fin: jax.Array    # fill completion times
     core_buf_ptr: jax.Array
     # accumulators
@@ -96,19 +103,21 @@ class NodeState(NamedTuple):
 
 def _init_node(cfg: FamConfig, p: FamParams,
                pad_sets: Optional[int] = None,
-               pad_ways: Optional[int] = None) -> NodeState:
+               pad_ways: Optional[int] = None,
+               policies: Optional[PolicySet] = None) -> NodeState:
     """``pad_sets``/``pad_ways`` size the cache *allocation* (>= every
     effective geometry in the batch); default: ``cfg``'s own geometry."""
+    impls = _resolve(policies).impls()
     f0 = jnp.float32(0.0)
     return NodeState(
-        clock=f0, spp=spp_lib.init_spp(cfg),
+        clock=f0, pf=impls.prefetch.init(cfg),
         cache=dc.init_cache(pad_sets or cfg.num_sets,
                             pad_ways or cfg.cache_ways),
         queue=pq.init_queue(cfg.prefetch_queue),
-        throttle=init_throttle(p),
+        throttle=impls.adaptation.init(p, p.policy["adaptation"]),
         core_last=jnp.int32(-1), core_stride=jnp.int32(0),
-        core_buf_line=jnp.zeros((CORE_FILL_ENTRIES,), jnp.int32),
-        core_buf_fin=jnp.zeros((CORE_FILL_ENTRIES,), jnp.float32),
+        core_buf_line=jnp.zeros((cfg.core_fill_entries,), jnp.int32),
+        core_buf_fin=jnp.zeros((cfg.core_fill_entries,), jnp.float32),
         core_buf_ptr=jnp.int32(0),
         instr=f0, cycles=f0, fam_lat_sum=f0, fam_cnt=f0,
         demand_fam=f0, demand_hit=f0, corepf_fam=f0, corepf_hit=f0,
@@ -123,7 +132,7 @@ def _is_fam_page(allocation_ratio, page):
 
 
 def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
-             live=True):
+             live=True, policies: Optional[PolicySet] = None):
     """Per-node pre-arbitration work. Returns (ns, req) where req carries
     this node's demand + prefetch candidates.
 
@@ -133,6 +142,10 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
     the whole-state carry-select (and its full-array copies) the masked
     runner used to pay per step. ``live=True`` folds to the classic step.
     """
+    impls = _resolve(policies).impls()
+    pf_pol = p.policy["prefetch"]
+    ad_pol = p.policy["adaptation"]
+    repl = impls.replacement.bind(p.policy["replacement"])
     # effective geometry: traced scalars masking the padded cache state
     bb = jnp.asarray(p.block_bits, jnp.int32)
     eff_sets, eff_ways = p.num_sets, p.cache_ways
@@ -142,7 +155,7 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
     # retire completed prefetches into the cache (bounded per step)
     done = (ns.queue.block > 0) & (ns.queue.finish <= clock) & live
     score = jnp.where(done, -ns.queue.finish, -jnp.inf)
-    _, idxs = jax.lax.top_k(score, COMPLETIONS_PER_STEP)
+    _, idxs = jax.lax.top_k(score, cfg.completions_per_step)
     cache = ns.cache
     queue_block = ns.queue.block
 
@@ -152,12 +165,13 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
         ok = done[slot] & (queue_block[slot] > 0)
         blk = queue_block[slot] - 1
         cache, _, _ = dc.insert(cache, blk, enable=ok,
-                                num_sets=eff_sets, ways=eff_ways)
+                                num_sets=eff_sets, ways=eff_ways,
+                                policy=repl)
         queue_block = queue_block.at[slot].set(
             jnp.where(ok, 0, queue_block[slot]))
         return cache, queue_block
 
-    cache, queue_block = jax.lax.fori_loop(0, COMPLETIONS_PER_STEP, fill,
+    cache, queue_block = jax.lax.fori_loop(0, cfg.completions_per_step, fill,
                                            (cache, queue_block))
     queue = ns.queue._replace(block=queue_block)
 
@@ -177,21 +191,22 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
     # demand probe (masked out entirely when DRAM-cache prefetch is off)
     hit, si, way = dc.lookup(cache, gblock, num_sets=eff_sets, ways=eff_ways)
     hit = hit & is_fam & p.dram_prefetch
-    cache = dc.touch(cache, si, way, enable=hit)
+    cache = dc.touch(cache, si, way, enable=hit, policy=repl)
     inflight, inflight_fin = pq.contains(queue, gblock)
     inflight = inflight & is_fam & ~hit & p.dram_prefetch
     hit = hit & ~cpb_hit
     inflight = inflight & ~cpb_hit
     demand_to_fam = is_fam & ~hit & ~inflight & ~cpb_hit
 
-    # SPP train + predict (FAM-bound LLC misses only, incl. core prefetch
-    # misses per paper §III; here the demand stream trains)
-    spp, sig = spp_lib.update(cfg, ns.spp, page, block_in_page,
-                              enable=is_fam & p.dram_prefetch)
+    # prefetch-policy train + predict (FAM-bound LLC misses only, incl.
+    # core prefetch misses per paper §III; here the demand stream trains)
+    pf_state, ctx = impls.prefetch.train(cfg, pf_pol, ns.pf, page,
+                                         block_in_page,
+                                         enable=is_fam & p.dram_prefetch)
     bpp = dyn_blocks_per_page(bb)
-    cand_gblock, cand_valid = spp_lib.predict(
-        cfg, spp, page, block_in_page, sig, cfg.prefetch_degree, bpp=bpp,
-        threshold=p.spp_confidence_threshold)
+    cand_gblock, cand_valid = impls.prefetch.predict(
+        cfg, pf_pol, pf_state, page, block_in_page, ctx,
+        cfg.prefetch_degree, bpp)
 
     def not_redundant(b):
         h, _, _ = dc.lookup(cache, b, num_sets=eff_sets, ways=eff_ways)
@@ -201,10 +216,13 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
     fresh = jax.vmap(not_redundant)(cand_gblock)
     pf_valid = cand_valid & fresh & is_fam & p.dram_prefetch
     pf_blocks = cand_gblock
-    # throttle: grant tokens for the surviving candidates (the token
-    # bucket must not drift on non-live steps)
+    # adaptation: grant tokens for the surviving candidates (the rate
+    # controller must not drift on non-live steps). The policy owns its
+    # activation gate: token_bucket keeps the legacy bw_adapt flag,
+    # static is active whenever chosen.
     want = jnp.sum(pf_valid.astype(jnp.int32))
-    thr, grant = take_tokens(ns.throttle, want, p.bw_adapt & live)
+    thr, grant = impls.adaptation.take(p, ad_pol, ns.throttle, want,
+                                       impls.adaptation.gate(p) & live)
     rank = jnp.cumsum(pf_valid.astype(jnp.int32))
     pf_valid = pf_valid & (rank <= grant)
     # queue-space gate (§III-A2: drop when the queue is full/threshold)
@@ -216,7 +234,8 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
     stride = line - ns.core_last
     stride_ok = (stride == ns.core_stride) & (stride != 0) & \
         (jnp.abs(stride) < 32)
-    cpf_lines = line + stride * (1 + jnp.arange(CORE_PF_DEGREE, dtype=jnp.int32))
+    cpf_lines = line + stride * (1 + jnp.arange(cfg.core_pf_degree,
+                                                dtype=jnp.int32))
     cpf_pages = (cpf_lines >> (PAGE_BITS - 6)).astype(jnp.int32)
     cpf_fam = jax.vmap(lambda pg: _is_fam_page(p.allocation_ratio, pg))(
         cpf_pages) & ~p.all_local
@@ -227,7 +246,7 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
     )(cpf_gblock) & p.dram_prefetch
     cpf_to_fam = cpf_valid & ~cpf_hits
 
-    ns = ns._replace(clock=clock, spp=spp, cache=cache, queue=queue,
+    ns = ns._replace(clock=clock, pf=pf_state, cache=cache, queue=queue,
                      throttle=thr,
                      core_last=jnp.where(live, line, ns.core_last),
                      core_stride=jnp.where(live & (stride != 0), stride,
@@ -246,8 +265,10 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
 
 
 def _phase_c(cfg: FamConfig, p: FamParams, ns: NodeState, req,
-             d_fin, pf_fin, cpf_fin):
+             d_fin, pf_fin, cpf_fin, policies: Optional[PolicySet] = None):
     """Per-node post-arbitration accounting + queue fills."""
+    impls = _resolve(policies).impls()
+    ad_pol = p.policy["adaptation"]
     clock = ns.clock
     warm = req["warm"]
     local_lat = jnp.asarray(p.local_mem_latency, jnp.float32)
@@ -286,16 +307,17 @@ def _phase_c(cfg: FamConfig, p: FamParams, ns: NodeState, req,
         ok = req["cpf_valid"][i]
         bl = bl.at[ptr_].set(jnp.where(ok, cpf_lines[i] + 1, bl[ptr_]))
         bf = bf.at[ptr_].set(jnp.where(ok, fin[i], bf[ptr_]))
-        return bl, bf, (ptr_ + ok.astype(jnp.int32)) % CORE_FILL_ENTRIES
+        return bl, bf, (ptr_ + ok.astype(jnp.int32)) % cfg.core_fill_entries
 
     buf_line, buf_fin, ptr = jax.lax.fori_loop(
-        0, CORE_PF_DEGREE, put, (buf_line, buf_fin, ptr))
+        0, cfg.core_pf_degree, put, (buf_line, buf_fin, ptr))
 
     live = req["live"]
-    thr = observe(ns.throttle, lat, fam_miss, req["hit"],
-                  jnp.sum(req["pf_valid"].astype(jnp.int32)),
-                  enable=live)
-    thr = maybe_adapt(p, thr, enabled=p.bw_adapt & live)
+    thr = impls.adaptation.observe(
+        p, ad_pol, ns.throttle, lat, fam_miss, req["hit"],
+        jnp.sum(req["pf_valid"].astype(jnp.int32)), enable=live)
+    thr = impls.adaptation.adapt(p, ad_pol, thr,
+                                 enable=impls.adaptation.gate(p) & live)
 
     # node-level accounting: the trace event stream aggregates the node's
     # cores, so per-event compute gaps shrink by 1/cores (higher FAM arrival
@@ -321,7 +343,8 @@ def _phase_c(cfg: FamConfig, p: FamParams, ns: NodeState, req,
     return ns
 
 
-def _make_step(cfg: FamConfig, num_nodes: int):
+def _make_step(cfg: FamConfig, num_nodes: int,
+               policies: Optional[PolicySet] = None):
     """The shared per-event step: step(p, carry, (addr, gap, warm, live)).
 
     Both the classic fixed-T runner (``_make_run``, live always True) and
@@ -332,22 +355,31 @@ def _make_step(cfg: FamConfig, num_nodes: int):
     busy chains are preserved because no request is valid), which is what
     lets the masked runner skip the whole-state carry-select it used to
     pay per step.
+
+    ``policies`` selects the policy implementations statically (one traced
+    program per compile-tag combination); their numeric params arrive
+    traced on ``p.policy``.
     """
+    policies = _resolve(policies)
+    impls = policies.impls()
     D = cfg.prefetch_degree
+    CPF = cfg.core_pf_degree
 
     def step(p, carry, inputs):
+        sp = p.policy["scheduler"]
         nodes, fam_busy = carry
         addr, gap, warm, live = inputs     # addr/gap: (N,)
         nodes, req = jax.vmap(
-            lambda ns, a, g: _phase_a(cfg, p, ns, a, g, warm, live))(
+            lambda ns, a, g: _phase_a(cfg, p, ns, a, g, warm, live,
+                                      policies))(
                 nodes, addr, gap)
 
         # finite prefetch input queue at the FAM controller: when the
         # prefetch-class backlog exceeds the cap, CXL backpressure stops
         # prefetch issue at the nodes (this is what makes WFQ reduce
-        # prefetches-issued in the paper's Fig. 12C). FIFO mode: no gate.
-        backlog_ok = ((fam_busy[1] - nodes.clock) < p.wfq_backlog_cap) | \
-            ~p.wfq
+        # prefetches-issued in the paper's Fig. 12C). The scheduler policy
+        # owns the gate (FIFO mode: none).
+        backlog_ok = impls.scheduler.backlog_ok(p, sp, fam_busy, nodes.clock)
         req["pf_valid"] = req["pf_valid"] & backlog_ok[:, None]
         req["cpf_to_fam"] = req["cpf_to_fam"] & backlog_ok[:, None]
 
@@ -355,22 +387,22 @@ def _make_step(cfg: FamConfig, num_nodes: int):
         d_valid = req["demand_to_fam"]
         d_bytes = jnp.full((num_nodes,), p.demand_bytes, jnp.float32)
         p_arr = jnp.concatenate([
-            jnp.repeat(nodes.clock, D), jnp.repeat(nodes.clock, CORE_PF_DEGREE)])
+            jnp.repeat(nodes.clock, D), jnp.repeat(nodes.clock, CPF)])
         p_valid = jnp.concatenate([req["pf_valid"].reshape(-1),
                                    req["cpf_to_fam"].reshape(-1)])
         p_bytes = jnp.concatenate([
             jnp.full((num_nodes * D,), p.block_bytes, jnp.float32),
-            jnp.full((num_nodes * CORE_PF_DEGREE,), p.demand_bytes,
+            jnp.full((num_nodes * CPF,), p.demand_bytes,
                      jnp.float32)])
-        t = arbitrate(p, fam_busy, d_arr, d_valid, d_bytes,
-                      p_arr, p_valid, p_bytes,
-                      use_wfq=p.wfq, weight=p.wfq_weight)
+        t = impls.scheduler.arbitrate(p, sp, fam_busy, d_arr, d_valid,
+                                      d_bytes, p_arr, p_valid, p_bytes)
         pf_fin = t.prefetch_finish[: num_nodes * D].reshape(num_nodes, D)
         cpf_fin = t.prefetch_finish[num_nodes * D:].reshape(
-            num_nodes, CORE_PF_DEGREE)
+            num_nodes, CPF)
 
         nodes = jax.vmap(
-            lambda ns, r, df, pf, cf: _phase_c(cfg, p, ns, r, df, pf, cf)
+            lambda ns, r, df, pf, cf: _phase_c(cfg, p, ns, r, df, pf, cf,
+                                               policies)
         )(nodes, req, t.demand_finish, pf_fin, cpf_fin)
         return (nodes, t.new_busy), None
 
@@ -379,8 +411,9 @@ def _make_step(cfg: FamConfig, num_nodes: int):
 
 def _init_carry(cfg: FamConfig, p: FamParams, num_nodes: int,
                 pad_sets: Optional[int] = None,
-                pad_ways: Optional[int] = None):
-    one = _init_node(cfg, p, pad_sets, pad_ways)
+                pad_ways: Optional[int] = None,
+                policies: Optional[PolicySet] = None):
+    one = _init_node(cfg, p, pad_sets, pad_ways, policies)
     nodes = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (num_nodes,) + x.shape).copy(), one)
     return nodes, jnp.zeros((2,), jnp.float32)
@@ -405,14 +438,16 @@ def _metrics(nodes: NodeState, p: FamParams) -> Dict[str, jax.Array]:
 
 def _make_run(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2,
               pad_sets: Optional[int] = None,
-              pad_ways: Optional[int] = None):
+              pad_ways: Optional[int] = None,
+              policies: Optional[PolicySet] = None):
     """One-system step loop: run(params, addrs (N,T), gaps (N,T)) -> metrics.
 
     Only the static shape parameters of ``cfg`` (plus the optional padded
-    cache allocation) are read here; every dynamic value — the effective
-    cache geometry included — comes from the traced ``FamParams``.
+    cache allocation and the policy choice) are read here; every dynamic
+    value — the effective cache geometry and the policy numeric params
+    included — comes from the traced ``FamParams``.
     """
-    step = _make_step(cfg, num_nodes)
+    step = _make_step(cfg, num_nodes, policies)
 
     def run(p: FamParams, addrs, gaps):
         N, T = addrs.shape
@@ -422,7 +457,7 @@ def _make_run(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2,
         live = jnp.ones((T,), jnp.bool_)
         (nodes, _), _ = jax.lax.scan(
             lambda c, i: step(p, c, i),
-            _init_carry(cfg, p, N, pad_sets, pad_ways),
+            _init_carry(cfg, p, N, pad_sets, pad_ways, policies),
             (addrs.T.astype(jnp.int32), gaps.T, warm, live))
         return _metrics(nodes, p)
 
@@ -432,7 +467,8 @@ def _make_run(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2,
 def _make_run_masked(cfg: FamConfig, num_nodes: int,
                      pad_sets: Optional[int] = None,
                      pad_ways: Optional[int] = None,
-                     trace_gen=None):
+                     trace_gen=None,
+                     policies: Optional[PolicySet] = None):
     """Dynamic-T runner for bucketed (padded) traces.
 
     run(params, addrs (N, T_pad), gaps (N, T_pad), t_true, warm_start)
@@ -456,7 +492,7 @@ def _make_run_masked(cfg: FamConfig, num_nodes: int,
     generation is bit-identical to pre-staging
     ``repro.traces.device.system_traces`` arrays at the same T_pad.
     """
-    step = _make_step(cfg, num_nodes)
+    step = _make_step(cfg, num_nodes, policies)
 
     def _sim(p: FamParams, addrs, gaps, t_true, warm_start):
         N, T_pad = addrs.shape
@@ -468,7 +504,7 @@ def _make_run_masked(cfg: FamConfig, num_nodes: int,
 
         (nodes, _), _ = jax.lax.scan(
             lambda c, inp: step(p, c, inp),
-            _init_carry(cfg, p, N, pad_sets, pad_ways),
+            _init_carry(cfg, p, N, pad_sets, pad_ways, policies),
             (addrs.T.astype(jnp.int32), gaps.T, warm, valid))
         return _metrics(nodes, p)
 
@@ -482,7 +518,8 @@ def _make_run_masked(cfg: FamConfig, num_nodes: int,
     return run_gen
 
 
-def build_sim(cfg: FamConfig, flags: SimFlags, num_nodes: int):
+def build_sim(cfg: FamConfig, flags: SimFlags, num_nodes: int,
+              policies: Optional[PolicySet] = None):
     """Returns jitted run(addrs (N,T), gaps (N,T)) -> metrics dict.
 
     Classic one-system entry point. The dynamic params are passed as traced
@@ -490,13 +527,13 @@ def build_sim(cfg: FamConfig, flags: SimFlags, num_nodes: int):
     same floating-point program as the batched ``sweep`` — constant-folding
     a latency into the XLA graph would otherwise make long simulations
     drift measurably from the vmapped run."""
-    p = FamParams.of(cfg, flags)
+    p = FamParams.of(cfg, flags, policies)
     jitted: Dict = {}
 
     def run(addrs, gaps, warmup_frac: float = 0.2):
         if warmup_frac not in jitted:
             jitted[warmup_frac] = jax.jit(
-                _make_run(cfg, num_nodes, warmup_frac))
+                _make_run(cfg, num_nodes, warmup_frac, policies=policies))
         return jitted[warmup_frac](p, addrs, gaps)
 
     return run
@@ -509,18 +546,23 @@ def build_sim(cfg: FamConfig, flags: SimFlags, num_nodes: int):
 _SWEEP_CACHE: Dict = {}
 
 
-def build_sweep(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2):
+def build_sweep(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2,
+                policies: Optional[PolicySet] = None):
     """Jitted batched runner: fn(params_batch, addrs (S,N,T), gaps (S,N,T))
     -> metrics dict with arrays of shape (S, N).
 
-    One entry per ``cfg.static_shape()`` — every sweep point that only
-    varies dynamic parameters (feature flags, block size, and any cache
-    geometry fitting the donor's allocation) reuses the same compiled
-    program; jit re-traces only when (S, N, T) change shape.
+    One entry per ``(cfg.static_shape(), policy compile tags)`` — every
+    sweep point that only varies dynamic parameters (feature flags, block
+    size, policy numeric params, and any cache geometry fitting the
+    donor's allocation) reuses the same compiled program; jit re-traces
+    only when (S, N, T) change shape. Same-tag policies (``fifo``/``wfq``)
+    share the entry by construction.
     """
-    key = (cfg.static_shape(), num_nodes, warmup_frac)
+    policies = _resolve(policies)
+    key = (cfg.static_shape(), num_nodes, warmup_frac,
+           policies.compile_tags())
     if key not in _SWEEP_CACHE:
-        run = _make_run(cfg, num_nodes, warmup_frac)
+        run = _make_run(cfg, num_nodes, warmup_frac, policies=policies)
         _SWEEP_CACHE[key] = jax.jit(jax.vmap(run))
     return _SWEEP_CACHE[key]
 
@@ -531,7 +573,8 @@ _MASKED_CACHE: Dict = {}
 def build_masked_vmap(cfg: FamConfig, num_nodes: int,
                       pad_sets: Optional[int] = None,
                       pad_ways: Optional[int] = None,
-                      trace_gen=None, trace_key=None):
+                      trace_gen=None, trace_key=None,
+                      policies: Optional[PolicySet] = None):
     """Unjitted vmapped dynamic-T runner:
     fn(params_batch, addrs (S, N, T_pad), gaps, t_true (S,), warm_start (S,))
     -> metrics dict of (S, N) arrays.
@@ -542,7 +585,8 @@ def build_masked_vmap(cfg: FamConfig, num_nodes: int,
     unjitted on purpose: the ``repro.experiments`` executor wraps it in
     either a plain ``jax.jit`` (single device) or a ``shard_map`` over the S
     axis (multi-device) and AOT-compiles the result. One entry per
-    (geometry-free shape, padded allocation), like :func:`build_sweep`.
+    (geometry-free shape, padded allocation, policy compile tags), like
+    :func:`build_sweep`.
 
     ``trace_gen``/``trace_key``: in-graph trace generation (see
     :func:`_make_run_masked`) — the signature becomes fn(params_batch,
@@ -550,17 +594,20 @@ def build_masked_vmap(cfg: FamConfig, num_nodes: int,
     ``("device", T_pad)``) keys the cache alongside the shapes, since the
     generator bakes in its trace length.
     """
+    policies = _resolve(policies)
     key = (cfg.geometry_free_shape(), num_nodes,
-           pad_sets or cfg.num_sets, pad_ways or cfg.cache_ways, trace_key)
+           pad_sets or cfg.num_sets, pad_ways or cfg.cache_ways, trace_key,
+           policies.compile_tags())
     if key not in _MASKED_CACHE:
         _MASKED_CACHE[key] = jax.vmap(
             _make_run_masked(cfg, num_nodes, pad_sets, pad_ways,
-                             trace_gen=trace_gen))
+                             trace_gen=trace_gen, policies=policies))
     return _MASKED_CACHE[key]
 
 
 def sweep(cfg: FamConfig, params_batch: FamParams, flags: Optional[SimFlags],
-          addrs, gaps, warmup_frac: float = 0.2) -> Dict[str, jax.Array]:
+          addrs, gaps, warmup_frac: float = 0.2,
+          policies: Optional[PolicySet] = None) -> Dict[str, jax.Array]:
     """Run S independent simulated systems in one (cached) compile.
 
     cfg: static shape donor — every system must share
@@ -568,7 +615,9 @@ def sweep(cfg: FamConfig, params_batch: FamParams, flags: Optional[SimFlags],
         must fit inside the donor's allocation (``num_sets``,
         ``cache_ways``). Block size is fully dynamic (traced
         ``block_bits`` address split).
-    params_batch: ``FamParams`` with leading axis S (see ``stack_params``).
+    params_batch: ``FamParams`` with leading axis S (see ``stack_params``);
+        every member must share ``policies``' param schema (equal compile
+        tags).
     flags: optional ``SimFlags`` applied uniformly to all S systems;
         ``None`` keeps the flags already embedded in ``params_batch``.
     addrs/gaps: (S, N, T) per-system node traces.
@@ -589,13 +638,13 @@ def sweep(cfg: FamConfig, params_batch: FamParams, flags: Optional[SimFlags],
                 "geometry (the repro.experiments planner does this "
                 "automatically)")
     S, N, T = addrs.shape
-    fn = build_sweep(cfg, N, warmup_frac)
+    fn = build_sweep(cfg, N, warmup_frac, policies=policies)
     return fn(params_batch, jnp.asarray(addrs), jnp.asarray(gaps))
 
 
 def simulate(cfg: FamConfig, flags: SimFlags, workload_names, T: int = 60_000,
-             seed: int = 0, trace_backend: str = "numpy"
-             ) -> Dict[str, np.ndarray]:
+             seed: int = 0, trace_backend: str = "numpy",
+             policies: Optional[PolicySet] = None) -> Dict[str, np.ndarray]:
     """Convenience wrapper: generate traces for the node list and run.
 
     NOTE the default backend here is ``"numpy"`` — the classic reference
@@ -610,6 +659,6 @@ def simulate(cfg: FamConfig, flags: SimFlags, workload_names, T: int = 60_000,
     N = len(workload_names)
     addrs, gaps = system_traces(workload_names, T, seed,
                                 backend=trace_backend)
-    run = build_sim(cfg, flags, N)
+    run = build_sim(cfg, flags, N, policies=policies)
     out = run(jnp.asarray(addrs), jnp.asarray(gaps))
     return {k: np.asarray(v) for k, v in out.items()}

@@ -41,6 +41,8 @@ from repro.experiments.spec import (  # noqa: F401
     flag_axis,
     mix_axis,
     nodes_axis,
+    policy_axis,
     seed_axis,
     workload_axis,
 )
+from repro.policies import DEFAULT_POLICY_SET, PolicySet  # noqa: F401

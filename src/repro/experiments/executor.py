@@ -199,7 +199,8 @@ def _prepare(points: Sequence[ResolvedPoint], idxs: Sequence[int],
             addrs[j, :, :pt.T] = a
             gaps[j, :, :pt.T] = g
         inputs = (addrs, gaps)
-    params = stack_params([FamParams.of(pt.cfg, pt.flags) for pt in pts])
+    params = stack_params([FamParams.of(pt.cfg, pt.flags, pt.policy_set())
+                           for pt in pts])
     t_true = np.array([pt.T for pt in pts], np.int32)
     # host-side int arithmetic, matching famsim._make_run's static
     # ``int(T * warmup_frac)`` exactly
@@ -219,31 +220,39 @@ _EXEC_CACHE: Dict = {}
 def _compiled(cfg, S: int, N: int, t_pad: int, mode,
               info: Optional[RunInfo] = None, *,
               pad_sets: Optional[int] = None, pad_ways: Optional[int] = None,
-              trace_backend: str = "numpy"):
+              trace_backend: str = "numpy", policies=None):
     """AOT-compiled group runner. ``mode`` is ``"vmap"`` or
     ``("shard", D)``; ``pad_sets``/``pad_ways`` size the shared cache
     allocation (default: ``cfg``'s own geometry); compile time lands in
     ``info`` (zero when cached). ``trace_backend="device"`` compiles the
     in-graph trace generator into the executable (its signature takes
-    TraceParams instead of staged arrays)."""
+    TraceParams instead of staged arrays). ``policies`` is the group's
+    representative :class:`~repro.policies.PolicySet` — the cache keys on
+    its compile tags (group members share them by construction), and it
+    donates the policy numeric-param *schema* for the abstract shapes."""
     import jax
     import jax.numpy as jnp
 
+    from repro.policies import DEFAULT_POLICY_SET
+
+    policies = policies or DEFAULT_POLICY_SET
     pad_sets = pad_sets or cfg.num_sets
     pad_ways = pad_ways or cfg.cache_ways
     in_graph = trace_backend == "device"
     key = (cfg.geometry_free_shape(), pad_sets, pad_ways,
-           S, N, t_pad, mode, in_graph)
+           S, N, t_pad, mode, in_graph, policies.compile_tags())
     if key not in _EXEC_CACHE:
         i32 = jnp.int32
         if in_graph:
             from repro.traces.device import abstract_params, node_generator
             fn = build_masked_vmap(cfg, N, pad_sets, pad_ways,
                                    trace_gen=node_generator(t_pad),
-                                   trace_key=("device", t_pad))
+                                   trace_key=("device", t_pad),
+                                   policies=policies)
             input_shapes = (abstract_params(S, N),)
         else:
-            fn = build_masked_vmap(cfg, N, pad_sets, pad_ways)
+            fn = build_masked_vmap(cfg, N, pad_sets, pad_ways,
+                                   policies=policies)
             input_shapes = (
                 jax.ShapeDtypeStruct((S, N, t_pad), i32),
                 jax.ShapeDtypeStruct((S, N, t_pad), jnp.float32))
@@ -255,7 +264,7 @@ def _compiled(cfg, S: int, N: int, t_pad: int, mode,
             mesh = compat.make_mesh((D,), ("dev",))
             fn = compat.shard_map(fn, mesh=mesh, in_specs=P("dev"),
                                   out_specs=P("dev"))
-        p_proto = FamParams.of(cfg)
+        p_proto = FamParams.of(cfg, policies=policies)
         params_shape = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct((S,) + jnp.shape(x), x.dtype),
             p_proto)
@@ -361,10 +370,12 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
             N, t_pad = g.key.num_nodes, g.t_pad
             before = info.compiles
             before_s = info.compile_s
-            compiled = _compiled(plan.points[g.indices[0]].cfg, S_exec, N,
+            rep = plan.points[g.indices[0]]
+            compiled = _compiled(rep.cfg, S_exec, N,
                                  t_pad, mode, info,
                                  pad_sets=g.pad_sets, pad_ways=g.pad_ways,
-                                 trace_backend=backend)
+                                 trace_backend=backend,
+                                 policies=rep.policy_set())
             compile_s = info.compile_s - before_s
             t0 = time.perf_counter()
             out = _run_group(data, compiled)
@@ -413,13 +424,14 @@ def _shard_cross_check(plan: Plan, data: _GroupData,
     (the ROADMAP-mandated scale path must not change a single bit of any
     metric)."""
     g = plan.groups[0]
-    cfg = plan.points[g.indices[0]].cfg
+    rep = plan.points[g.indices[0]]
     S_exec, N, t_pad = len(idxs), g.key.num_nodes, g.t_pad
     alt_mode = "vmap" if primary_mode != "vmap" else ("shard", 1)
-    alt = _run_group(data, _compiled(cfg, S_exec, N, t_pad, alt_mode,
+    alt = _run_group(data, _compiled(rep.cfg, S_exec, N, t_pad, alt_mode,
                                      pad_sets=g.pad_sets,
                                      pad_ways=g.pad_ways,
-                                     trace_backend=trace_backend))
+                                     trace_backend=trace_backend,
+                                     policies=rep.policy_set()))
     bit_exact = all(np.array_equal(primary_out[k], alt[k])
                     for k in primary_out)
     return {"group": 0, "primary": str(primary_mode), "alt": str(alt_mode),

@@ -10,6 +10,11 @@ equivalent to the unpadded run. Group *membership* therefore keys on
 
 * ``cfg.geometry_free_shape()`` — table/queue sizes and degrees, the part
   no padding can unify;
+* the ``PolicySet`` compile tags (``repro.policies``) — policy *choice*
+  is a different traced program and splits the group, except where
+  policies deliberately fuse (``fifo``/``wfq`` share ``scheduler:chain``);
+  policy *numeric params* (WFQ weight, SPP threshold, rates) are traced
+  ``FamParams.policy`` scalars and never key anything;
 * ``num_nodes`` — the per-system node width (the arbitration shape);
 * ``T_bucket`` — the *canonical T bucket*: true lengths round UP (never
   truncate) to a coarse geometric grid (1024, 1536, 2048, 3072, 4096, ...)
@@ -186,10 +191,21 @@ class Plan:
 def point_key(pt: ResolvedPoint,
               bucket=t_bucket) -> CompileKey:
     """The *membership* key of one point: geometry-free static shape +
-    node count + T bucket. The group's final key re-adds the padded
-    geometry once membership is known (see :func:`plan_points`)."""
-    return CompileKey(pt.cfg.geometry_free_shape(), len(pt.workloads),
-                      bucket(pt.T))
+    the policy compile tags + node count + T bucket. The group's final
+    key re-adds the padded geometry once membership is known (see
+    :func:`plan_points`).
+
+    Policy *choice* is static — a different prefetcher/scheduler/
+    replacement/adaptation program splits the group — but policies
+    engineered to fuse share a compile tag (``fifo``/``wfq`` both tag
+    ``scheduler:chain``), and policy *numeric params* (weights,
+    thresholds, rates) are traced ``FamParams.policy`` scalars that never
+    appear here, so a FIFO baseline plus every WFQ weight still shares
+    one executable.
+    """
+    tags = pt.policy_set().compile_tags()
+    return CompileKey(pt.cfg.geometry_free_shape() + tags,
+                      len(pt.workloads), bucket(pt.T))
 
 
 def plan_points(points: Sequence[ResolvedPoint], *, name: str = "",

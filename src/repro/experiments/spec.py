@@ -22,6 +22,7 @@ from typing import Any, Mapping, Optional, Sequence, Tuple
 
 from repro.configs.base import FamConfig, fam_replace
 from repro.core.famsim import SimFlags
+from repro.policies import PolicySet
 from repro.traces.backend import DEFAULT_BACKEND
 
 
@@ -35,7 +36,10 @@ class AxisValue:
     ``FamParams`` scalar is the *planner's* concern, not the spec's —
     and since the dynamic-geometry refactor even ``block_bytes`` /
     ``dram_cache_bytes`` / ``cache_ways`` sweeps plan into one padded
-    compile group.
+    compile group. ``policies`` selects a full
+    :class:`~repro.policies.PolicySet`; whether a policy combination
+    shares a compile group is likewise the planner's concern (same
+    compile tags share; a different traced program splits).
     """
 
     label: str
@@ -46,6 +50,7 @@ class AxisValue:
     nodes: Optional[int] = None
     T: Optional[int] = None
     seed: Optional[int] = None
+    policies: Optional[PolicySet] = None
 
 
 @dataclass(frozen=True)
@@ -101,11 +106,33 @@ def seed_axis(seeds: Sequence[int], name: str = "seed") -> Axis:
     return Axis(name, tuple(AxisValue(label=str(s), seed=s) for s in seeds))
 
 
+def policy_axis(variants: Mapping[str, PolicySet],
+                name: str = "policy") -> Axis:
+    """Sweep full policy combinations (``repro.policies.PolicySet``).
+
+    Policy *choice* is a compile-key input: combinations whose compile
+    tags differ plan into separate groups (their traced programs differ),
+    while same-tag combinations — ``fifo`` vs ``wfq``, or any
+    numeric-param override — share one compile like a ``flag_axis``. An
+    explicit PolicySet is authoritative for scheduler choice: the legacy
+    ``SimFlags.wfq`` boolean is ignored wherever this axis applies.
+    """
+    return Axis(name, tuple(AxisValue(label=k, policies=v)
+                            for k, v in variants.items()))
+
+
 # -- resolved grid cells ----------------------------------------------------
 
 @dataclass(frozen=True)
 class ResolvedPoint:
-    """One fully-resolved simulated system of an experiment grid."""
+    """One fully-resolved simulated system of an experiment grid.
+
+    ``policies=None`` means "derive the PolicySet from the flags" — the
+    SimFlags deprecation mapping (``wfq=True`` -> the ``wfq`` scheduler
+    policy); an explicit set (from a ``policy_axis``) is authoritative.
+    :meth:`policy_set` resolves either way and is what the planner and
+    executor consume.
+    """
 
     cfg: FamConfig
     flags: SimFlags
@@ -113,10 +140,16 @@ class ResolvedPoint:
     T: int
     seed: int = 0
     coords: Tuple[Tuple[str, str], ...] = ()
+    policies: Optional[PolicySet] = None
 
     @property
     def num_nodes(self) -> int:
         return len(self.workloads)
+
+    def policy_set(self) -> PolicySet:
+        if self.policies is not None:
+            return self.policies
+        return PolicySet.from_flags(self.flags)
 
 
 @dataclass(frozen=True)
@@ -127,6 +160,9 @@ class Experiment:
     axes: Tuple[Axis, ...]
     base: FamConfig = field(default_factory=FamConfig)
     flags: SimFlags = field(default_factory=SimFlags)
+    #: default PolicySet when no policy_axis sets one (None: derive from
+    #: the flags — the SimFlags deprecation mapping)
+    policies: Optional[PolicySet] = None
     workloads: Optional[Tuple[str, ...]] = None   # default when no axis sets one
     nodes: int = 1
     T: int = 10_000
@@ -150,7 +186,7 @@ class Experiment:
         """
         out = []
         for combo in itertools.product(*(a.values for a in self.axes)):
-            cfg, flags = self.base, self.flags
+            cfg, flags, pol = self.base, self.flags, self.policies
             # one workload source, overridden in axis order: ("single", w)
             # replicates over the node count, ("tuple", ws) is explicit
             wl = ("tuple", tuple(self.workloads)) if self.workloads else None
@@ -160,6 +196,8 @@ class Experiment:
                     cfg = fam_replace(cfg, **dict(av.cfg))
                 if av.flags is not None:
                     flags = av.flags
+                if av.policies is not None:
+                    pol = av.policies
                 if av.workload is not None:
                     wl = ("single", av.workload)
                 if av.workloads is not None:
@@ -182,7 +220,7 @@ class Experiment:
                            for ax, av in zip(self.axes, combo))
             out.append(ResolvedPoint(cfg=cfg, flags=flags,
                                      workloads=workloads, T=T, seed=seed,
-                                     coords=coords))
+                                     coords=coords, policies=pol))
         return tuple(out)
 
     def plan(self, **kw):

@@ -1,0 +1,39 @@
+"""Pluggable policy layer for the FAM simulator: prefetch / scheduling /
+replacement / adaptation as drop-in, registry-named modules.
+
+Importing this package registers the built-in policy zoo:
+
+===========  =======================================  ==================
+kind         policies                                 compile tags
+===========  =======================================  ==================
+prefetch     ``spp`` (default), ``nextline``,         one tag per policy
+             ``bestoffset``
+scheduler    ``fifo`` (default), ``wfq``,             fifo+wfq share
+             ``strict``                               ``scheduler:chain``
+replacement  ``lru`` (default), ``random``, ``srrip`` one tag per policy
+adaptation   ``token_bucket`` (default), ``static``   one tag per policy
+===========  =======================================  ==================
+
+Select policies with a :class:`PolicySet` (hashable; policy *choice* is a
+compile-key input, policy *numeric params* are traced scalars), sweep them
+with ``repro.experiments.policy_axis``, and add new ones by registering an
+object implementing the matching Protocol — see docs/experiments.md §5.
+"""
+from repro.policies.base import (  # noqa: F401
+    DEFAULT_POLICY_SET,
+    POLICY_KINDS,
+    AdaptationPolicy,
+    PolicySet,
+    PrefetchPolicy,
+    ReplacementPolicy,
+    ResolvedPolicies,
+    SchedulerPolicy,
+    SimFlags,
+    available,
+    get_policy,
+    register,
+)
+from repro.policies import adaptation  # noqa: F401  (registers the zoo)
+from repro.policies import prefetch  # noqa: F401
+from repro.policies import replacement  # noqa: F401
+from repro.policies import scheduler  # noqa: F401

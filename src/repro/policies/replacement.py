@@ -1,0 +1,116 @@
+"""DRAM-cache replacement policies (victim selection, paper §III-B).
+
+The cache ops in ``repro.core.dram_cache`` take an optional *bound*
+replacement policy: ``bind(pol)`` closes the traced numeric params over a
+small object providing
+
+* ``on_hit(old, stamp)``                      — recency-field value on hit,
+* ``evict(row_lru, wmask, stamp, set_idx, eff_ways) -> (aged_row, way)``
+                                              — victim among the effective
+                                                ways (no vacancy left),
+* ``insert_value(stamp)``                     — recency-field value on fill.
+
+``lru`` binds to ``None``, selecting the classic in-place LRU fast path in
+``dram_cache`` — byte-identical to the pre-policy simulator. ``random``
+picks a threefry-derived victim (deterministic in (stamp, set)); ``srrip``
+reuses the recency field as a 2-bit RRPV (Jaleel et al., ISCA'10): hit ->
+0, insert at long-re-reference 2, victim = the aged max-RRPV way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.policies.base import register
+
+
+class LruReplacement:
+    """Set-LRU (the paper's policy): stamp-per-touch, evict the min stamp.
+
+    Binds to ``None`` — the cache ops keep their classic single-element
+    in-place writes, so the default policy's traced program is literally
+    the pre-policy one.
+    """
+
+    kind = "replacement"
+    name = "lru"
+    compile_tag = "replacement:lru"
+
+    def params_of(self, cfg):
+        return {}
+
+    def bind(self, pol):
+        return None
+
+
+class _RandomBound:
+    _BASE = jax.random.PRNGKey(0x5EED)
+
+    def on_hit(self, old, stamp):
+        return old                      # recency untracked
+
+    def evict(self, row_lru, wmask, stamp, set_idx, eff_ways):
+        key = jax.random.fold_in(jax.random.fold_in(self._BASE, stamp),
+                                 set_idx)
+        way = jax.random.randint(key, (), 0, jnp.maximum(eff_ways, 1))
+        return row_lru, way.astype(jnp.int32)
+
+    def insert_value(self, stamp):
+        return stamp
+
+
+class RandomReplacement:
+    """Uniform-random victim via threefry: deterministic in the cache's
+    monotonic stamp and the set index (replay-exact across runs and
+    bit-identical under vmap/shard_map), uniform over the *effective*
+    ways of a padded state."""
+
+    kind = "replacement"
+    name = "random"
+    compile_tag = "replacement:random"
+
+    def params_of(self, cfg):
+        return {}
+
+    def bind(self, pol):
+        return _RandomBound()
+
+
+class _SrripBound:
+    def __init__(self, max_rrpv):
+        self.max_rrpv = max_rrpv
+
+    def on_hit(self, old, stamp):
+        return jnp.zeros_like(old)      # near-immediate re-reference
+
+    def evict(self, row_lru, wmask, stamp, set_idx, eff_ways):
+        m = jnp.asarray(self.max_rrpv, jnp.int32)
+        eff = jnp.where(wmask, row_lru, 0)
+        bump = jnp.maximum(m - jnp.max(eff), 0)     # age until one hits max
+        aged = jnp.where(wmask, row_lru + bump, row_lru)
+        way = jnp.argmax(jnp.where(wmask, aged, -1)).astype(jnp.int32)
+        return aged, way
+
+    def insert_value(self, stamp):
+        return jnp.asarray(self.max_rrpv - 1, jnp.int32)   # long re-reference
+
+
+class SrripReplacement:
+    """Static RRIP with 2-bit RRPVs stored in the recency field."""
+
+    kind = "replacement"
+    name = "srrip"
+    compile_tag = "replacement:srrip"
+
+    MAX_RRPV = 3
+
+    def params_of(self, cfg):
+        return {}
+
+    def bind(self, pol):
+        return _SrripBound(self.MAX_RRPV)
+
+
+LRU = register(LruReplacement())
+RANDOM = register(RandomReplacement())
+SRRIP = register(SrripReplacement())

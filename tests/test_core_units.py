@@ -183,6 +183,61 @@ def test_wfq_prefetch_only_progress():
     assert served == 100   # work conservation: all slots serve prefetch
 
 
+def test_schedule_batch_empty_demand_queue():
+    """Prefetch-only backlog: work conservation serves every prefetch,
+    never emits a DEMAND, and goes IDLE once the backlog drains."""
+    st_, order = wfq.schedule_batch(wfq.init_wfq(), jnp.int32(0),
+                                    jnp.int32(5), weight=2, max_issues=16)
+    order = np.asarray(order)
+    assert (order != wfq.DEMAND).all()
+    assert (order == wfq.PREFETCH).sum() == 5
+    # backlog exhausted -> IDLE for the rest of the batch
+    last_pf = np.max(np.nonzero(order == wfq.PREFETCH)[0])
+    assert (order[last_pf + 1:] == wfq.IDLE).all()
+
+
+def test_schedule_batch_empty_prefetch_queue():
+    st_, order = wfq.schedule_batch(wfq.init_wfq(), jnp.int32(7),
+                                    jnp.int32(0), weight=3, max_issues=16)
+    order = np.asarray(order)
+    assert (order != wfq.PREFETCH).all()
+    assert (order == wfq.DEMAND).sum() == 7
+    assert (order[7:] == wfq.IDLE).all()
+
+
+def test_schedule_batch_weight1_serves_both_classes():
+    """weight=1: half the rounds prefer prefetches — the drained order
+    must interleave the classes (no starvation window beyond the W+1
+    round cycle x the r-deficit replenish period)."""
+    st_, order = wfq.schedule_batch(wfq.init_wfq(), jnp.int32(64),
+                                    jnp.int32(64), weight=1, max_issues=64)
+    order = np.asarray(order)
+    assert (order != wfq.IDLE).all()             # both backlogged: no idle
+    d = (order == wfq.DEMAND).sum()
+    p = (order == wfq.PREFETCH).sum()
+    assert d + p == 64 and d >= p > 0
+    # demands dominate by at most the byte-cost ratio r under weight=1
+    assert d / p <= 4 + 1
+
+
+def test_schedule_batch_deficit_round_robin_fairness():
+    """Long saturated batch, weight=2: the prefetch deficit replenishes
+    every (W+1)-round window, so the gap between consecutive PREFETCH
+    issues is bounded by 2*(W+1) — deficit exhaustion round-robins, it
+    never starves the prefetch class."""
+    W = 2
+    st_, order = wfq.schedule_batch(wfq.init_wfq(), jnp.int32(64),
+                                    jnp.int32(64), weight=W, max_issues=64)
+    order = np.asarray(order)
+    assert (order != wfq.IDLE).all()
+    pf_slots = np.nonzero(order == wfq.PREFETCH)[0]
+    assert len(pf_slots) >= 64 // (2 * (W + 1)) - 1
+    gaps = np.diff(pf_slots)
+    assert gaps.max() <= 2 * (W + 1), (pf_slots, order.tolist())
+    # consumed counts match the order's accounting
+    assert (order == wfq.DEMAND).sum() + len(pf_slots) == 64
+
+
 # ---------------------------------------------------------------------------
 # throttle (MIMD/RED)
 # ---------------------------------------------------------------------------
