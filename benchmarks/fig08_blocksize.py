@@ -37,7 +37,10 @@ def experiment(quick: bool = True,
 
 def run(quick: bool = True, trace_backend: str = "device"):
     wls = workloads(quick)
-    res = experiment(quick, trace_backend).run(cross_check_shard=True)
+    # assert_compiles: the runtime sanitizer proves the one-executable
+    # promise — actual XLA compiles == accounted groups (== 1 when cold)
+    res = experiment(quick, trace_backend).run(cross_check_shard=True,
+                                               assert_compiles=True)
     info = res.info
     assert info.planned_groups == 1, info.groups  # dynamic geometry: 1 compile
 

@@ -11,6 +11,7 @@ Select figures positionally and pass ``--full`` through to each figure's
     python -m benchmarks.run --full fig14     # fig14 over all 19 workloads
     python -m benchmarks.run --plan           # print compile groups, run nothing
     python -m benchmarks.run --trace-backend numpy fig14   # host ref traces
+    python -m benchmarks.run --check fig08    # static-analysis gate first
 
 ``--policies`` sweeps the repro.policies zoo as a policy matrix on the
 figures that support it (fig12)::
@@ -59,10 +60,25 @@ def main(argv=None) -> None:
                          "PolicySet combos, on figures that support it "
                          "(fig12). Unlisted kinds keep their defaults; the "
                          "all-default combo is the required baseline")
+    ap.add_argument("--check", action="store_true",
+                    help="run the repro.analysis static gate first (src/ + "
+                         "benchmarks/, strict mode) and abort on any "
+                         "non-allowlisted finding — the pre-flight that "
+                         "catches a compile-key leak before paying for the "
+                         "run (see docs/analysis.md)")
     ap.add_argument("--only", default=None,
                     help="deprecated comma-list alternative to positional "
                          "figure names (fig08,fig10,...)")
     args = ap.parse_args(argv)
+
+    if args.check:
+        from repro.analysis import run_analysis
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        code = run_analysis([os.path.join(root, "src"),
+                             os.path.join(root, "benchmarks")], strict=True)
+        if code:
+            sys.exit(code)
+        print("# repro.analysis: clean", file=sys.stderr)
 
     from benchmarks import (fig08_blocksize, fig10_bw_adaptation, fig12_wfq,
                             fig14_mixes, fig15_allocation, fig16_cachesize)

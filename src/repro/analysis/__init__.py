@@ -1,0 +1,47 @@
+"""Trace-safety & compile-key hygiene analyzer (static + runtime).
+
+The whole performance story of this repro rests on one invariant that
+nothing used to check mechanically: *policy choice and geometry-free
+shapes are static compile-key inputs; everything else — ``FamParams``
+leaves, policy numeric params, the effective cache geometry — must stay
+traced.* fig08/fig16 collapse to ONE executable each only because that
+separation holds; a single ``if params.x:`` on a tracer, a ``.item()``
+in the step function, or a new field landing on the wrong side of
+``point_key`` silently multiplies compile groups or drags host syncs
+into the hot loop.
+
+``repro.analysis`` enforces the invariant two ways:
+
+* **statically** — an AST analyzer (``python -m repro.analysis src/
+  benchmarks/``) with four check families (see :mod:`.checks` and
+  ``docs/analysis.md``):
+
+  - ``CK1xx`` compile-key purity (traced fields / unhashables flowing
+    into ``point_key`` / ``compile_tags`` / cache keys),
+  - ``TC2xx`` tracer-unsafe Python control flow inside the jitted call
+    graph (:mod:`.scopes` defines the graph),
+  - ``HS3xx`` host-sync / transfer hazards on traced values,
+  - ``DT4xx`` determinism lints on trace/plan construction;
+
+* **at runtime** — :mod:`.runtime` provides the ``CompileWatcher`` the
+  executor uses to assert *actual XLA compiles == planned compile
+  groups* per figure (``execute(plan, assert_compiles=True)``), plus a
+  transfer-guard context for the hot loop.
+
+The static-vs-traced field registry is **introspected, not
+hand-written**: :mod:`.registry` reads ``FamParams._fields`` /
+``FamConfig`` / ``PolicySet`` so the analyzer tracks the dataclasses as
+they evolve. Legitimate exceptions live in ``allowlist.toml`` next to
+this file — every entry carries a mandatory ``reason``.
+"""
+from __future__ import annotations
+
+from repro.analysis.checks import analyze_source
+from repro.analysis.cli import analyze_paths, main, run_analysis
+from repro.analysis.findings import Allowlist, Finding, load_allowlist
+from repro.analysis.registry import Registry, build_registry
+
+__all__ = [
+    "Allowlist", "Finding", "Registry", "analyze_paths", "analyze_source",
+    "build_registry", "load_allowlist", "main", "run_analysis",
+]

@@ -1,0 +1,26 @@
+"""Source-level annotations the analyzer recognizes.
+
+Dependency-free on purpose: simulator modules import these markers, so
+this module must never import jax or the rest of ``repro.analysis``.
+"""
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+F = TypeVar("F", bound=Callable)
+
+
+def host_metric(fn: F) -> F:
+    """Declare ``fn`` a *host-side metrics* function: it runs on numpy
+    arrays already fetched from device (post ``block_until_ready``),
+    never under ``jax.jit``, so Python control flow and scalar coercion
+    are intentional there.
+
+    The analyzer excludes ``@host_metric`` functions from the TC/HS
+    (tracer-control-flow / host-sync) checks — by *name* at the AST
+    level; the decorator itself is an identity function. Using it on
+    anything reachable from the jitted step graph would be a bug: the
+    annotation is a claim, and the claim is what reviewers check.
+    """
+    fn.__host_metric__ = True
+    return fn

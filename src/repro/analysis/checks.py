@@ -1,0 +1,651 @@
+"""The four AST check families.
+
+* ``CK1xx`` — compile-key purity. Key contexts are: functions named
+  ``point_key`` / ``compile_tags`` (or ``*_key`` / ``*_tags``),
+  assignments to a name literally called ``key`` (the executable-cache
+  idiom ``key = (...); if key not in _CACHE``), and ``CompileKey(...)``
+  constructor calls. Inside a key context, a traced ``FamParams`` field
+  read off a params-like receiver, the policy ``numeric_params`` pytree,
+  or an unhashable display/array is flagged. The traced-field set comes
+  from the introspected :class:`~repro.analysis.registry.Registry` —
+  never a hand-written list.
+
+* ``TC2xx`` / ``HS3xx`` — tracer-unsafe control flow and host syncs,
+  via a forward taint pass over each function the
+  :mod:`~repro.analysis.scopes` table puts inside the jitted call
+  graph. Parameters are traced unless the scope conventions say
+  otherwise (``cfg`` / ``policies`` / static-typed annotations);
+  ``.shape`` / ``len()`` / ``is None`` untaint (static under tracing);
+  assignments propagate. Flow is a single forward pass per function —
+  deliberately simple, tuned for zero false positives on this tree
+  (the fixture corpus in ``tests/fixtures/analysis`` pins both
+  directions).
+
+* ``DT4xx`` — determinism lints on the modules whose outputs must be
+  bit-reproducible (trace/plan construction): wall-clock and stdlib
+  ``random``, global-state or unseeded numpy PRNG, unsorted set
+  iteration.
+
+The analyzer never imports the code it scans (pure ``ast``), so it runs
+on broken/partial trees and in CI without device initialization —
+only the registry import touches live classes.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import Registry
+from repro.analysis.scopes import (STATIC_ANNOTATIONS, STATIC_ATTRS,
+                                   STATIC_PARAM_NAMES, Scope, in_dt_scope,
+                                   is_host_metric, jit_scope_for)
+
+# --------------------------------------------------------------------------
+# shared helpers
+# --------------------------------------------------------------------------
+
+
+def _attr_chain(node: ast.AST) -> List[str]:
+    """``a.b.c`` -> ["a", "b", "c"]; chains broken by calls/subscripts
+    return only the trailing names (root becomes unknowable)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    else:
+        parts.append("?")
+    return list(reversed(parts))
+
+
+def _is_static_annotation(ann: Optional[ast.AST]) -> bool:
+    if ann is None:
+        return False
+    for n in ast.walk(ann):
+        name = None
+        if isinstance(n, ast.Name):
+            name = n.id
+        elif isinstance(n, ast.Attribute):
+            name = n.attr
+        elif isinstance(n, ast.Constant) and isinstance(n.value, str):
+            name = n.value
+        if name in STATIC_ANNOTATIONS:
+            return True
+    return False
+
+
+class _Base:
+    def __init__(self, path: str, registry: Registry,
+                 findings: List[Finding]):
+        self.path = path
+        self.registry = registry
+        self.findings = findings
+        self._symbols: List[str] = []
+
+    @property
+    def symbol(self) -> str:
+        return ".".join(self._symbols) if self._symbols else "<module>"
+
+    def report(self, node: ast.AST, check: str, message: str,
+               hint: str = "") -> None:
+        self.findings.append(Finding(
+            check=check, path=self.path, line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0), symbol=self.symbol,
+            message=message, hint=hint))
+
+
+# --------------------------------------------------------------------------
+# CK1xx — compile-key purity
+# --------------------------------------------------------------------------
+
+_KEY_FUNC_EXACT = {"point_key", "compile_tags"}
+_PARAMS_RECEIVERS = {"params", "p"}
+_KEY_CLASSES = {"FamConfig", "PolicySet", "FamParams", "CompileKey"}
+
+
+class CompileKeyChecker(_Base, ast.NodeVisitor):
+    """Key contexts + what must never appear inside them."""
+
+    def _is_key_func(self, name: str) -> bool:
+        if name in _KEY_FUNC_EXACT:
+            return True
+        return (name.endswith(("_key", "_tags"))
+                and not name.startswith("__"))
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._check_dataclass(node)
+        self._symbols.append(node.name)
+        self.generic_visit(node)
+        self._symbols.pop()
+
+    def _check_dataclass(self, node: ast.ClassDef) -> None:
+        is_dc, frozen = False, False
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            name = _attr_chain(target)[-1]
+            if name == "dataclass":
+                is_dc = True
+                if isinstance(dec, ast.Call):
+                    frozen = any(
+                        kw.arg == "frozen" and
+                        isinstance(kw.value, ast.Constant) and
+                        kw.value.value is True for kw in dec.keywords)
+        if not is_dc or frozen:
+            return
+        methods = {b.name for b in node.body
+                   if isinstance(b, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        if node.name in _KEY_CLASSES or {"compile_tags",
+                                         "point_key"} & methods:
+            self.report(
+                node, "CK103",
+                f"dataclass {node.name} participates in compile keys but "
+                "is not frozen=True",
+                "frozen=True makes instances hashable and immutable — "
+                "mutable key participants silently alias cache entries")
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._symbols.append(node.name)
+        if self._is_key_func(node.name):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Return) and sub.value is not None:
+                    self._check_key_expr(sub.value)
+        self.generic_visit(node)
+        self._symbols.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if (len(node.targets) == 1 and
+                isinstance(node.targets[0], ast.Name) and
+                node.targets[0].id == "key"):
+            self._check_key_expr(node.value)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if _attr_chain(node.func)[-1] == "CompileKey":
+            for a in list(node.args) + [kw.value for kw in node.keywords]:
+                self._check_key_expr(a)
+        self.generic_visit(node)
+
+    def _check_key_expr(self, expr: ast.AST) -> None:
+        traced = self.registry.traced_param_fields
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Attribute):
+                chain = _attr_chain(n)
+                if (chain[-1] in traced and
+                        set(chain[:-1]) & _PARAMS_RECEIVERS):
+                    overlap = chain[-1] in self.registry.overlap_fields
+                    extra = (" (effective geometry is traced; only the "
+                             "padded cfg geometry may key)" if overlap else "")
+                    self.report(
+                        n, "CK101",
+                        f"traced FamParams field '{'.'.join(chain)}' flows "
+                        f"into a compile key{extra}",
+                        "key on static FamConfig fields / "
+                        "geometry_free_shape() / policy compile tags; "
+                        "traced scalars must ride FamParams")
+            elif isinstance(n, ast.Call):
+                chain = _attr_chain(n.func)
+                if chain[-1] == "numeric_params":
+                    self.report(
+                        n, "CK101",
+                        "policy numeric_params (a traced pytree) flows into "
+                        "a compile key",
+                        "key on PolicySet.compile_tags(); numeric params "
+                        "are FamParams.policy leaves")
+                elif chain[0] in {"np", "numpy", "jnp"}:
+                    self.report(
+                        n, "CK102",
+                        f"array value '{'.'.join(chain)}(...)' used inside "
+                        "a compile key (unhashable, and hashing device "
+                        "values defeats tracing)",
+                        "convert to a plain Python scalar/tuple at config "
+                        "time, or keep it traced")
+            elif isinstance(n, (ast.List, ast.Set, ast.Dict)):
+                kind = type(n).__name__.lower()
+                self.report(
+                    n, "CK102",
+                    f"unhashable {kind} display inside a compile key",
+                    "use a tuple (hashable, order-stable)")
+
+
+# --------------------------------------------------------------------------
+# TC2xx / HS3xx — taint pass over the jitted call graph
+# --------------------------------------------------------------------------
+
+_UNTAINTING_CALLS = {"len", "isinstance", "hasattr", "range", "type",
+                     "enumerate_static"}
+_NP_ROOTS = {"np", "numpy"}
+_NP_MATERIALIZE = {"asarray", "array", "asanyarray", "ascontiguousarray",
+                   "copy"}
+
+
+class TaintChecker(_Base):
+    """One forward taint pass per in-scope function."""
+
+    def __init__(self, path: str, registry: Registry,
+                 findings: List[Finding], scope: Scope):
+        super().__init__(path, registry, findings)
+        self.scope = scope
+
+    # -- entry ------------------------------------------------------------
+
+    def run(self, tree: ast.Module) -> None:
+        self._walk_container(tree, prefix=[])
+
+    def _walk_container(self, node: ast.AST, prefix: List[str]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                symbol = ".".join(prefix + [child.name])
+                if self.scope.contains(symbol) and not is_host_metric(child):
+                    self._symbols = symbol.split(".")
+                    self._analyze_function(child, closure=set())
+            elif isinstance(child, ast.ClassDef):
+                self._walk_container(child, prefix + [child.name])
+
+    # -- function analysis ------------------------------------------------
+
+    def _param_env(self, node: ast.AST, closure: Set[str]) -> Set[str]:
+        env = set(closure)
+        a = node.args
+        for arg in list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs):
+            if arg.arg in STATIC_PARAM_NAMES:
+                continue
+            if _is_static_annotation(arg.annotation):
+                continue
+            env.add(arg.arg)
+        for va in (a.vararg, a.kwarg):
+            if va is not None:
+                env.add(va.arg)
+        return env
+
+    def _analyze_function(self, node: ast.AST, closure: Set[str]) -> None:
+        env = self._param_env(node, closure)
+        if isinstance(node, ast.Lambda):
+            self.eval(node.body, env)
+        else:
+            self.exec_block(node.body, env)
+
+    # -- statements -------------------------------------------------------
+
+    def exec_block(self, stmts: Sequence[ast.stmt], env: Set[str]) -> None:
+        for s in stmts:
+            self.exec_stmt(s, env)
+
+    def _bind(self, target: ast.AST, tainted: bool, env: Set[str]) -> None:
+        if isinstance(target, ast.Name):
+            (env.add if tainted else env.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt, tainted, env)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted, env)
+        # attribute/subscript stores: no name to (un)bind
+
+    def exec_stmt(self, s: ast.stmt, env: Set[str]) -> None:
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            saved = list(self._symbols)
+            self._symbols.append(s.name)
+            self._analyze_function(s, closure=set(env))
+            self._symbols = saved
+        elif isinstance(s, ast.Assign):
+            t = self.eval(s.value, env)
+            for tgt in s.targets:
+                self._bind(tgt, t, env)
+        elif isinstance(s, ast.AnnAssign):
+            if s.value is not None:
+                self._bind(s.target, self.eval(s.value, env), env)
+        elif isinstance(s, ast.AugAssign):
+            t = self.eval(s.value, env)
+            if isinstance(s.target, ast.Name) and s.target.id in env:
+                t = True
+            self._bind(s.target, t, env)
+        elif isinstance(s, ast.If):
+            if self.eval(s.test, env):
+                self.report(
+                    s.test, "TC201",
+                    "Python `if` on a traced value inside the jit scope "
+                    "(concretization error at trace time, or a silent "
+                    "recompile per value)",
+                    "use jnp.where / lax.cond / lax.select; static "
+                    "configuration belongs on FamConfig, not FamParams")
+            self.exec_block(s.body, env)
+            self.exec_block(s.orelse, env)
+        elif isinstance(s, ast.While):
+            if self.eval(s.test, env):
+                self.report(
+                    s.test, "TC201",
+                    "Python `while` on a traced value inside the jit scope",
+                    "use lax.while_loop / lax.fori_loop with a traced "
+                    "condition")
+            self.exec_block(s.body, env)
+            self.exec_block(s.orelse, env)
+        elif isinstance(s, ast.For):
+            t = self.eval(s.iter, env)
+            self._bind(s.target, t, env)
+            if t:
+                self.report(
+                    s.iter, "TC201",
+                    "Python `for` over a traced value inside the jit scope",
+                    "use lax.scan / lax.fori_loop")
+            self.exec_block(s.body, env)
+            self.exec_block(s.orelse, env)
+        elif isinstance(s, ast.Assert):
+            if self.eval(s.test, env):
+                self.report(
+                    s.test, "TC202",
+                    "`assert` on a traced value inside the jit scope",
+                    "assert static facts (shapes/dtypes) only; use "
+                    "checkify or debug.check for traced invariants")
+        elif isinstance(s, (ast.Return, ast.Expr)):
+            if s.value is not None:
+                self.eval(s.value, env)
+        elif isinstance(s, ast.With):
+            for item in s.items:
+                self.eval(item.context_expr, env)
+            self.exec_block(s.body, env)
+        elif isinstance(s, ast.Try):
+            self.exec_block(s.body, env)
+            for h in s.handlers:
+                self.exec_block(h.body, env)
+            self.exec_block(s.orelse, env)
+            self.exec_block(s.finalbody, env)
+        elif isinstance(s, ast.Raise):
+            if s.exc is not None:
+                self.eval(s.exc, env)
+        # Import / Pass / Global / Nonlocal / ClassDef (rare in scope): skip
+
+    # -- expressions ------------------------------------------------------
+
+    def eval(self, e: ast.AST, env: Set[str]) -> bool:       # noqa: C901
+        if isinstance(e, ast.Name):
+            return e.id in env
+        if isinstance(e, ast.Constant):
+            return False
+        if isinstance(e, ast.Attribute):
+            base = self.eval(e.value, env)
+            if e.attr in STATIC_ATTRS:
+                return False                    # static under tracing
+            return base
+        if isinstance(e, ast.Subscript):
+            return self.eval(e.value, env) or self.eval(e.slice, env)
+        if isinstance(e, ast.Slice):
+            return any(self.eval(x, env)
+                       for x in (e.lower, e.upper, e.step) if x is not None)
+        if isinstance(e, ast.Call):
+            return self._eval_call(e, env)
+        if isinstance(e, ast.BinOp):
+            return self.eval(e.left, env) or self.eval(e.right, env)
+        if isinstance(e, ast.UnaryOp):
+            t = self.eval(e.operand, env)
+            if t and isinstance(e.op, ast.Not):
+                self.report(
+                    e, "TC202",
+                    "`not` on a traced value inside the jit scope",
+                    "use jnp.logical_not / ~ on boolean arrays")
+            return t
+        if isinstance(e, ast.BoolOp):
+            ts = [self.eval(v, env) for v in e.values]
+            if any(ts):
+                op = "and" if isinstance(e.op, ast.And) else "or"
+                self.report(
+                    e, "TC202",
+                    f"short-circuit `{op}` on a traced value inside the "
+                    "jit scope (forces bool() on a tracer)",
+                    "use & / | (jnp.logical_and / jnp.logical_or)")
+            return any(ts)
+        if isinstance(e, ast.Compare):
+            if (len(e.ops) == 1 and
+                    isinstance(e.ops[0], (ast.Is, ast.IsNot))):
+                self.eval(e.left, env)
+                self.eval(e.comparators[0], env)
+                return False                    # `x is None` is static
+            return (self.eval(e.left, env) or
+                    any(self.eval(c, env) for c in e.comparators))
+        if isinstance(e, ast.IfExp):
+            t = self.eval(e.test, env)
+            if t:
+                self.report(
+                    e.test, "TC201",
+                    "ternary on a traced value inside the jit scope",
+                    "use jnp.where / lax.select")
+            return t or self.eval(e.body, env) or self.eval(e.orelse, env)
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.eval(x, env) for x in e.elts)
+        if isinstance(e, ast.Dict):
+            return any(self.eval(x, env)
+                       for x in list(e.keys) + list(e.values)
+                       if x is not None)
+        if isinstance(e, (ast.JoinedStr,)):
+            return any(self.eval(v.value, env) for v in e.values
+                       if isinstance(v, ast.FormattedValue))
+        if isinstance(e, ast.Lambda):
+            self._analyze_function(e, closure=set(env))
+            return False
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                          ast.DictComp)):
+            t = False
+            for gen in e.generators:
+                it = self.eval(gen.iter, env)
+                self._bind(gen.target, it, env)
+                t = t or it
+                for cond in gen.ifs:
+                    if self.eval(cond, env):
+                        self.report(
+                            cond, "TC201",
+                            "comprehension filter on a traced value inside "
+                            "the jit scope",
+                            "use jnp.where masking")
+            if isinstance(e, ast.DictComp):
+                return (t or self.eval(e.key, env) or
+                        self.eval(e.value, env))
+            return t or self.eval(e.elt, env)
+        if isinstance(e, ast.Starred):
+            return self.eval(e.value, env)
+        if isinstance(e, ast.NamedExpr):
+            t = self.eval(e.value, env)
+            self._bind(e.target, t, env)
+            return t
+        if isinstance(e, ast.Await):
+            return self.eval(e.value, env)
+        return False
+
+    def _eval_call(self, node: ast.Call, env: Set[str]) -> bool:
+        arg_taints = [self.eval(a, env) for a in node.args]
+        arg_taints += [self.eval(kw.value, env) for kw in node.keywords]
+        any_arg = any(arg_taints)
+        func = node.func
+        chain = _attr_chain(func)
+        name, root = chain[-1], chain[0]
+        recv = self.eval(func.value, env) \
+            if isinstance(func, ast.Attribute) else False
+
+        if name == "bool" and len(chain) == 1 and any_arg:
+            self.report(
+                node, "TC202",
+                "bool() on a traced value inside the jit scope",
+                "traced booleans cannot concretize; use jnp ops / "
+                "lax.cond")
+            return any_arg
+        if name in {"float", "int", "complex"} and len(chain) == 1 \
+                and any_arg:
+            self.report(
+                node, "HS301",
+                f"{name}() on a traced value inside the jit scope "
+                "(host-sync: blocks on device and breaks tracing)",
+                "keep the value a traced array (astype), or move the "
+                "reduction to an @host_metric function on fetched arrays")
+            return True
+        if name == "item" and recv:
+            self.report(
+                node, "HS301",
+                ".item() on a traced value inside the jit scope "
+                "(device->host scalar sync)",
+                "return arrays from the jitted graph; sync once after "
+                "block_until_ready")
+            return True
+        if name == "tolist" and recv:
+            self.report(
+                node, "HS302",
+                ".tolist() on a traced value inside the jit scope "
+                "(device->host materialization)",
+                "keep data on device; materialize after execution")
+            return True
+        if root in _NP_ROOTS and name in _NP_MATERIALIZE and any_arg:
+            self.report(
+                node, "HS302",
+                f"{root}.{name}() on a traced value inside the jit scope "
+                "(forces a device->host transfer per call)",
+                "use jnp.* inside the graph; np conversion belongs after "
+                "block_until_ready (executor already does this)")
+            return True
+        if name == "device_get" and any_arg:
+            self.report(
+                node, "HS302",
+                "jax.device_get() inside the jit scope",
+                "fetch results once, outside the compiled graph")
+            return True
+        if name in _UNTAINTING_CALLS and len(chain) == 1:
+            return False
+        return any_arg or recv
+
+
+# --------------------------------------------------------------------------
+# DT4xx — determinism lints
+# --------------------------------------------------------------------------
+
+_TIME_FUNCS = {"time", "time_ns", "perf_counter", "perf_counter_ns",
+               "monotonic", "monotonic_ns", "process_time",
+               "process_time_ns", "clock"}
+_DT_SAFE_NP_RANDOM = {"default_rng", "Generator", "SeedSequence",
+                      "PCG64", "Philox", "BitGenerator"}
+
+
+class DeterminismChecker(_Base, ast.NodeVisitor):
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._symbols.append(node.name)
+        self.generic_visit(node)
+        self._symbols.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._symbols.append(node.name)
+        self.generic_visit(node)
+        self._symbols.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+        root = chain[0]
+        if root == "time" and len(chain) == 2 and chain[1] in _TIME_FUNCS:
+            self.report(
+                node, "DT401",
+                f"wall-clock time.{chain[1]}() in a deterministic module "
+                "(trace/plan construction must be bit-reproducible)",
+                "thread timing through the caller, or move it to the "
+                "executor (out of DT scope by design)")
+        elif root == "random" and len(chain) >= 2:
+            self.report(
+                node, "DT401",
+                f"stdlib random.{chain[1]} in a deterministic module "
+                "(process-global, unseeded state)",
+                "derive from np.random.default_rng(seed) or "
+                "jax.random keys")
+        elif root == "datetime" and chain[-1] in {"now", "utcnow", "today"}:
+            self.report(
+                node, "DT401",
+                f"datetime.{chain[-1]}() in a deterministic module", "")
+        elif root in _NP_ROOTS and len(chain) >= 3 and chain[1] == "random":
+            if chain[2] == "default_rng":
+                if not node.args and not node.keywords:
+                    self.report(
+                        node, "DT402",
+                        "np.random.default_rng() without a seed in a "
+                        "deterministic module (OS-entropy seeded)",
+                        "pass the derived trace/plan seed explicitly")
+            elif chain[2] not in _DT_SAFE_NP_RANDOM:
+                self.report(
+                    node, "DT402",
+                    f"global-state np.random.{chain[2]}() in a "
+                    "deterministic module (shared mutable RNG)",
+                    "use np.random.default_rng(seed) generators")
+        elif chain[-1] == "PRNGKey" and node.args:
+            a = node.args[0]
+            if isinstance(a, ast.Call) and \
+                    _attr_chain(a.func)[0] in {"time", "random"}:
+                self.report(
+                    node, "DT402",
+                    "PRNGKey seeded from wall-clock/random (unseeded key)",
+                    "derive the seed from the workload/plan seed chain")
+        self.generic_visit(node)
+
+    def _is_setish(self, e: ast.AST) -> bool:
+        if isinstance(e, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(e, ast.Call):
+            return _attr_chain(e.func)[-1] in {"set", "frozenset"}
+        return False
+
+    def _check_iter(self, it: ast.AST) -> None:
+        if self._is_setish(it):
+            self.report(
+                it, "DT403",
+                "iteration over an unsorted set feeding trace/plan "
+                "construction (order varies across processes under hash "
+                "randomization)",
+                "wrap in sorted(...) or keep an ordered tuple/dict")
+
+    def visit_For(self, node: ast.For) -> None:
+        self._check_iter(node.iter)
+        self.generic_visit(node)
+
+    def visit_comprehension_gens(self, gens) -> None:
+        for g in gens:
+            self._check_iter(g.iter)
+
+    def visit_ListComp(self, node):
+        self.visit_comprehension_gens(node.generators)
+        self.generic_visit(node)
+
+    def visit_SetComp(self, node):
+        self.visit_comprehension_gens(node.generators)
+        self.generic_visit(node)
+
+    def visit_GeneratorExp(self, node):
+        self.visit_comprehension_gens(node.generators)
+        self.generic_visit(node)
+
+    def visit_DictComp(self, node):
+        self.visit_comprehension_gens(node.generators)
+        self.generic_visit(node)
+
+
+# --------------------------------------------------------------------------
+# per-file driver
+# --------------------------------------------------------------------------
+
+def analyze_source(source: str, path: str, registry: Registry
+                   ) -> List[Finding]:
+    """All four families over one file; scoping decides what applies."""
+    findings: List[Finding] = []
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        findings.append(Finding(
+            check="CK102", path=path, line=e.lineno or 0, col=e.offset or 0,
+            symbol="<module>", message=f"syntax error: {e.msg}", hint=""))
+        return findings
+
+    CompileKeyChecker(path, registry, findings).visit(tree)
+
+    scope = jit_scope_for(path, source)
+    if scope is not None:
+        TaintChecker(path, registry, findings, scope).run(tree)
+
+    if in_dt_scope(path, source):
+        DeterminismChecker(path, registry, findings).visit(tree)
+
+    return findings

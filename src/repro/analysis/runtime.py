@@ -1,0 +1,108 @@
+"""Runtime half of the sanitizer: prove what the static checks promise.
+
+The planner says fig08/fig16 are ONE compile group each; the static
+checks say nothing in the jitted graph can silently split a group. The
+runtime watcher closes the loop: the executor names every group
+executable ``famsim_group`` before jitting it, and
+:class:`CompileWatcher` counts the ``jax.log_compiles`` records for that
+name during ``execute`` — so *actual XLA compiles of group executables*
+can be asserted equal to the planner's accounting
+(``execute(plan, assert_compiles=True)``; the count lands in
+``RunInfo.xla_compiles`` either way). Counting by name filters out the
+incidental tiny dispatches jax compiles on the side
+(``jit(convert_element_type)`` etc.), which are not group executables.
+
+:func:`no_implicit_transfers` wraps the hot loop in
+``jax.transfer_guard_device_to_host("disallow")``. Honesty note: on the
+CPU backend (this repo's CI), device->host "transfers" of committed
+arrays are zero-copy and jax does not guard them — the guard only bites
+on real accelerators. It is still wired so accelerator runs get the
+protection for free; the *load-bearing* runtime checks here are the
+compile count (above) and the explicit ``jax.device_get`` after
+``block_until_ready`` in the executor.
+"""
+from __future__ import annotations
+
+import logging
+from contextlib import contextmanager
+from typing import Iterator
+
+#: the name the executor gives every AOT group runner before jitting it
+GROUP_RUNNER_NAME = "famsim_group"
+
+#: jax logs "Finished XLA compilation of jit(<name>) in <t> sec" here
+_DISPATCH_LOGGER = "jax._src.dispatch"
+_COMPILE_MSG = "Finished XLA compilation of "
+
+
+class _CountingHandler(logging.Handler):
+    def __init__(self, needle: str):
+        super().__init__(level=logging.DEBUG)
+        self.needle = needle
+        self.count = 0
+
+    def emit(self, record: logging.LogRecord) -> None:
+        try:
+            msg = record.getMessage()
+        except Exception:
+            return
+        if _COMPILE_MSG in msg and self.needle in msg:
+            self.count += 1
+
+
+class CompileWatcher:
+    """Count XLA compilations of the named function while active.
+
+    Context manager; ``watcher.count`` is live during and after the
+    block. Enables ``jax_log_compiles`` for the window and restores the
+    previous setting. The compile-log records normally propagate to the
+    stderr handler on the parent ``jax`` logger; the watcher counts them
+    on the emitting loggers directly and turns ``propagate`` off for the
+    window (restored on exit), so a watched run is not drowned in
+    per-prim compile chatter.
+    """
+
+    #: loggers log_compiles makes chatty; the counting handler attaches
+    #: to every one (it filters to the watched name) so no record is ever
+    #: handler-less — otherwise logging.lastResort would still print it
+    _NOISY = (_DISPATCH_LOGGER, "jax._src.interpreters.pxla")
+
+    def __init__(self, name: str = GROUP_RUNNER_NAME):
+        self.name = f"jit({name}"
+        self._handler = _CountingHandler(self.name)
+        self._prev_config = None
+        self._prev_propagate = {}
+
+    @property
+    def count(self) -> int:
+        return self._handler.count
+
+    def __enter__(self) -> "CompileWatcher":
+        import jax
+        self._prev_config = jax.config.jax_log_compiles
+        jax.config.update("jax_log_compiles", True)
+        for name in self._NOISY:
+            logger = logging.getLogger(name)
+            logger.addHandler(self._handler)
+            self._prev_propagate[name] = logger.propagate
+            logger.propagate = False
+        return self
+
+    def __exit__(self, *exc) -> None:
+        import jax
+        for name, prev in self._prev_propagate.items():
+            logger = logging.getLogger(name)
+            logger.propagate = prev
+            logger.removeHandler(self._handler)
+        jax.config.update("jax_log_compiles", bool(self._prev_config))
+
+
+@contextmanager
+def no_implicit_transfers() -> Iterator[None]:
+    """Disallow implicit device->host transfers for the enclosed block
+    (explicit ``jax.device_get`` stays allowed — the executor's fetch is
+    explicit by design). No-op protection on CPU backends; see module
+    docstring."""
+    import jax
+    with jax.transfer_guard_device_to_host("disallow"):
+        yield

@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.analysis.annotations import host_metric
+
 
 def ipc(instr: np.ndarray, cycles: np.ndarray) -> np.ndarray:
     return instr / np.maximum(cycles, 1.0)
@@ -29,6 +31,15 @@ def relative_fam_latency(lat_config: np.ndarray, lat_baseline: np.ndarray
     return lat_config / np.maximum(lat_baseline, 1e-9)
 
 
+@host_metric
 def geomean(x) -> float:
+    """Geometric mean of already-fetched metric values.
+
+    Host-side by declaration: callers hand it numpy arrays / Python
+    lists *after* ``block_until_ready`` (figure row formatting), never
+    tracers — the ``float()``/``np.asarray`` here would be a hard
+    host-sync hazard inside the jitted graph, which is exactly what the
+    ``@host_metric`` claim lets ``repro.analysis`` enforce everywhere
+    else."""
     x = np.asarray(x, np.float64)
     return float(np.exp(np.mean(np.log(np.maximum(x, 1e-12)))))

@@ -59,6 +59,12 @@ class RunInfo:
 
     compiles: int = 0              # fresh compiles (0 if executables cached)
     planned_groups: int = 0        # deterministic, unlike ``compiles``
+    #: actual XLA compilations of group executables observed by the
+    #: ``jax.log_compiles`` watcher (``execute(assert_compiles=True)``);
+    #: -1 = not watched. The runtime proof that the planner's one-
+    #: executable promise held — counted by the ``famsim_group`` name,
+    #: so incidental prim jits don't pollute it.
+    xla_compiles: int = -1
     compile_s: float = 0.0
     run_s: float = 0.0
     systems: int = 0
@@ -90,6 +96,8 @@ class RunInfo:
              "host_trace_events": self.host_trace_events,
              "trace_gen_s": round(self.trace_gen_s, 4),
              "us_per_event": self.us_per_call(), "groups": self.groups}
+        if self.xla_compiles >= 0:
+            d["xla_compiles"] = self.xla_compiles
         if self.shard_check is not None:
             d["shard_check"] = self.shard_check
         return d
@@ -268,8 +276,14 @@ def _compiled(cfg, S: int, N: int, t_pad: int, mode,
         params_shape = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct((S,) + jnp.shape(x), x.dtype),
             p_proto)
+        # every group executable is jitted under the canonical name so
+        # the runtime CompileWatcher (repro.analysis.runtime) can count
+        # real group compiles in jax's log_compiles stream, ignoring
+        # incidental prim jits (convert_element_type & co.)
+        def famsim_group(*call_args):
+            return fn(*call_args)
         t0 = time.perf_counter()
-        compiled = jax.jit(fn).lower(
+        compiled = jax.jit(famsim_group).lower(
             params_shape, *input_shapes,
             jax.ShapeDtypeStruct((S,), i32),
             jax.ShapeDtypeStruct((S,), i32)).compile()
@@ -285,7 +299,11 @@ def _run_group(data: _GroupData, compiled) -> Dict[str, np.ndarray]:
     import jax
     out = compiled(data.params, *data.inputs, data.t_true, data.warm_start)
     out = jax.block_until_ready(out)
-    return {k: np.asarray(v) for k, v in out.items()}
+    # one EXPLICIT fetch after the synchronized call (bit-identical to
+    # np.asarray per leaf, but stays legal under a device-to-host
+    # transfer guard — the runtime sanitizer's "disallow" only targets
+    # implicit transfers)
+    return dict(jax.device_get(out))
 
 
 def _pad_systems(idxs: Sequence[int], s_pad: int, D: int) -> List[int]:
@@ -318,7 +336,8 @@ def _pad_systems(idxs: Sequence[int], s_pad: int, D: int) -> List[int]:
 def execute(plan: Plan, *, devices: Optional[int] = None,
             overlap: bool = True, warmup_frac: float = 0.2,
             cross_check_shard: bool = False,
-            trace_backend: Optional[str] = None) -> ExperimentResult:
+            trace_backend: Optional[str] = None,
+            assert_compiles: bool = False) -> ExperimentResult:
     """Run every point of ``plan``; one device call per compile group.
 
     devices: shard each group's S axis over this many devices (default:
@@ -331,7 +350,18 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
         (shard_map vs vmap) and record whether the metrics are bit-exact
         in ``info.shard_check``.
     trace_backend: override ``plan.trace_backend`` ("device"/"numpy").
+    assert_compiles: run the group loop under the runtime sanitizer
+        (``repro.analysis.runtime``): a ``jax.log_compiles`` watcher
+        counts actual XLA compilations of group executables into
+        ``info.xla_compiles`` and the loop executes under a
+        device-to-host transfer guard; on exit, asserts
+        ``xla_compiles == compiles <= planned_groups`` — i.e. every
+        observed compile is an accounted planned-group compile (the
+        planner's one-executable promise, proven at runtime; with a
+        cold executable cache the chain is an equality).
     """
+    from contextlib import ExitStack
+
     import jax
 
     from repro.traces.backend import validate_backend
@@ -347,6 +377,13 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
     results: List[Optional[Dict[str, np.ndarray]]] = [None] * plan.num_points
     pool = ThreadPoolExecutor(max_workers=1) if overlap and \
         backend == "numpy" and len(plan.groups) > 1 else None
+    sentry = ExitStack()       # closes BEFORE the shard cross-check: its
+    watcher = None             # deliberate extra compile is not a group run
+    if assert_compiles:
+        from repro.analysis.runtime import (CompileWatcher,
+                                            no_implicit_transfers)
+        watcher = sentry.enter_context(CompileWatcher())
+        sentry.enter_context(no_implicit_transfers())
     try:
         pending: Optional[Future] = None
         if pool is not None:
@@ -401,8 +438,19 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
             for j, i in enumerate(g.indices):
                 results[i] = {k: v[j] for k, v in out.items()}
     finally:
+        sentry.close()
         if pool is not None:
             pool.shutdown(wait=False)
+
+    if watcher is not None:
+        info.xla_compiles = watcher.count
+        assert info.xla_compiles == info.compiles <= info.planned_groups, (
+            "runtime compile-count assertion failed: observed "
+            f"{info.xla_compiles} XLA compile(s) of group executables, "
+            f"accounted {info.compiles} fresh AOT compile(s), planned "
+            f"{info.planned_groups} group(s) — an unplanned recompile "
+            "means something traced leaked into a compile key (run "
+            "python -m repro.analysis)", info.groups)
 
     if cross_check_shard and plan.groups:
         info.shard_check = _shard_cross_check(plan, group0_data, group0_out,

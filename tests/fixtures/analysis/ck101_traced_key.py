@@ -1,0 +1,18 @@
+"""Known-bad fixture: CK101 — traced FamParams fields in compile keys."""
+
+
+def point_key(pt):
+    # effective geometry is a traced FamParams leaf; keying on it would
+    # recompile per swept value (the padded cfg geometry is the legal key)
+    return (pt.cfg.geometry_free_shape(), pt.params.num_sets)
+
+
+def exec_cache_key(params, mode: str):
+    # the executable-cache idiom: `key = (...)` is a key context too
+    key = (mode, params.block_bits)
+    return key
+
+
+def compile_tags(pol):
+    # the numeric-param pytree is traced by construction
+    return (pol.prefetch.compile_tag(), pol.prefetch.numeric_params())

@@ -1,0 +1,12 @@
+"""Known-bad fixture: CK102 — unhashable values used as static tags."""
+import numpy as np
+
+
+def point_key(pt):
+    # device/array values can't hash, and hashing them defeats tracing
+    return (pt.cfg.block_bytes, np.float32(pt.cfg.warmup_frac))
+
+
+def compile_tags(policies):
+    # list display: unhashable, order-fragile
+    return [policies.prefetch.compile_tag()]

@@ -1,0 +1,12 @@
+"""Known-bad fixture: CK103 — mutable dataclass participating in keys."""
+from dataclasses import dataclass
+
+
+@dataclass
+class VariantSet:
+    degree: int = 4
+
+    def compile_tags(self):
+        # defines compile_tags but isn't frozen=True: instances mutate
+        # after keying and silently alias cache entries
+        return (f"spp{self.degree}",)

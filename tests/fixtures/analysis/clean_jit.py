@@ -1,0 +1,32 @@
+# analysis-scope: jit
+# analysis-scope: deterministic
+"""Known-GOOD fixture: every idiom here is legal — the analyzer must
+report nothing (the zero-false-positive direction of the contract)."""
+import numpy as np
+
+from repro.analysis.annotations import host_metric
+
+
+def step(cfg, p, carry, inputs):
+    n = inputs.shape[0]                 # .shape is static under tracing
+    assert n > 0                        # static shape fact
+    if p is None:                       # `is None` is a Python-level test
+        return carry
+    if cfg.use_wfq:                     # cfg is static by convention
+        carry = carry * 2
+    for _ in range(n):                  # range() over a static int
+        carry = carry + p.weight
+    total = len(inputs)                 # len() is static
+    names = [w for w in sorted({"a", "b"})]     # sorted set: order-stable
+    return carry, total, names
+
+
+def point_key(pt):
+    # keys on static config only — tuple, hashable, no traced leaves
+    return (pt.cfg.geometry_free_shape(), pt.cfg.num_sets)
+
+
+@host_metric
+def summarize(rows) -> float:
+    # declared host-side: runs on fetched numpy arrays, never tracers
+    return float(np.mean(np.asarray(rows)))

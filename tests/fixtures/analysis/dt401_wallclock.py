@@ -1,0 +1,10 @@
+# analysis-scope: deterministic
+"""Known-bad fixture: DT401 — wall-clock / stdlib random in trace code."""
+import random
+import time
+
+
+def jitter(seed):
+    t = time.time()                     # wall clock in plan construction
+    r = random.random()                 # process-global unseeded state
+    return t + r + seed

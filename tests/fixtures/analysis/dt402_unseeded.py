@@ -1,0 +1,9 @@
+# analysis-scope: deterministic
+"""Known-bad fixture: DT402 — unseeded / global-state numpy PRNG."""
+import numpy as np
+
+
+def draw(n):
+    rng = np.random.default_rng()       # OS-entropy seeded
+    x = np.random.rand(n)               # shared global RNG
+    return rng.normal(size=n) + x

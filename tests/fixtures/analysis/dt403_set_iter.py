@@ -1,0 +1,9 @@
+# analysis-scope: deterministic
+"""Known-bad fixture: DT403 — unsorted set iteration in plan order."""
+
+
+def order(workloads):
+    out = []
+    for w in {"LU", "bfs", "cc"}:       # hash-randomized order
+        out.append(w)
+    return out + [w for w in set(workloads)]    # likewise

@@ -1,0 +1,9 @@
+# analysis-scope: jit
+"""Known-bad fixture: HS301 — scalar host syncs on traced values."""
+
+
+def summarize(p, metric):
+    s = float(metric.mean())            # float() blocks on device
+    n = int(metric.sum())               # int() likewise
+    v = metric.item()                   # .item() scalar sync
+    return s + n + v

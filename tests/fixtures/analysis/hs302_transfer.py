@@ -1,0 +1,11 @@
+# analysis-scope: jit
+"""Known-bad fixture: HS302 — host materialization of traced values."""
+import jax
+import numpy as np
+
+
+def fetch(p, out):
+    a = np.asarray(out)                 # device->host per call
+    b = out.tolist()                    # materializes the whole array
+    c = jax.device_get(out)             # explicit fetch inside the graph
+    return a, b, c

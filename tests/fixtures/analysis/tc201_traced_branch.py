@@ -1,0 +1,14 @@
+# analysis-scope: jit
+"""Known-bad fixture: TC201 — Python control flow on traced values."""
+
+
+def step(p, carry, hits):
+    if p.bw_adapt:                      # traced `if`
+        carry = carry + 1
+    while carry:                        # traced `while`
+        carry = carry - 1
+    for h in hits:                      # traced `for`
+        carry = carry + h
+    mode = 1 if p.use_wfq else 0        # traced ternary
+    kept = [h for h in range(4) if carry]   # traced comprehension filter
+    return carry, mode, kept

@@ -1,0 +1,10 @@
+# analysis-scope: jit
+"""Known-bad fixture: TC202 — boolean coercion of traced values."""
+
+
+def gate(p, mask):
+    flag = bool(mask)                   # bool() on a tracer
+    assert p.enabled                    # traced assert
+    picked = p.gate and mask            # short-circuit on tracers
+    other = mask or flag                # likewise
+    return picked, other, not mask      # `not` on a tracer

@@ -1,0 +1,207 @@
+"""repro.analysis — the static analyzer is pinned from both directions:
+every check ID fires on its known-bad fixture, and the clean fixture +
+the WHOLE real tree (src/ + benchmarks/ under the packaged allowlist)
+produce zero reported findings. That zero-false-positive contract is
+what lets CI run the analyzer as a blocking gate. The runtime half
+(CompileWatcher) is unit-tested against a real named jit compile."""
+import io
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import build_registry, load_allowlist, main, run_analysis
+from repro.analysis.annotations import host_metric
+from repro.analysis.checks import analyze_source
+from repro.analysis.findings import (CHECKS, AllowEntry, Allowlist, Finding,
+                                     _parse_toml_subset)
+
+FIXTURES = Path(__file__).parent / "fixtures" / "analysis"
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def registry():
+    reg, reg_findings = build_registry()
+    # the live classes are frozen/hashable: no runtime CK findings
+    assert reg_findings == []
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# fixture corpus: every check fires, nothing else does
+# ---------------------------------------------------------------------------
+
+FIXTURE_EXPECTED = {
+    "ck101_traced_key.py": "CK101",
+    "ck102_unhashable_tag.py": "CK102",
+    "ck103_nonfrozen.py": "CK103",
+    "tc201_traced_branch.py": "TC201",
+    "tc202_bool_assert.py": "TC202",
+    "hs301_host_sync.py": "HS301",
+    "hs302_transfer.py": "HS302",
+    "dt401_wallclock.py": "DT401",
+    "dt402_unseeded.py": "DT402",
+    "dt403_set_iter.py": "DT403",
+}
+
+
+def test_fixture_corpus_covers_every_check():
+    assert set(FIXTURE_EXPECTED.values()) == set(CHECKS)
+
+
+@pytest.mark.parametrize("fname,check", sorted(FIXTURE_EXPECTED.items()))
+def test_each_check_fires_on_its_fixture(fname, check, registry):
+    path = FIXTURES / fname
+    findings = analyze_source(path.read_text(), str(path), registry)
+    fired = {f.check for f in findings}
+    assert fired == {check}, [f.format() for f in findings]
+    # findings carry a usable location + fix hint
+    for f in findings:
+        assert f.line > 0 and f.symbol != "" and f.message
+
+
+def test_clean_fixture_has_zero_findings(registry):
+    path = FIXTURES / "clean_jit.py"
+    findings = analyze_source(path.read_text(), str(path), registry)
+    assert findings == [], [f.format() for f in findings]
+
+
+def test_syntax_error_becomes_a_finding(registry):
+    (f,) = analyze_source("def broken(:\n", "bad.py", registry)
+    assert f.check == "CK102" and "syntax error" in f.message
+
+
+def test_host_metric_decorator_excludes_function(registry):
+    src = ('# analysis-scope: jit\n'
+           'from repro.analysis.annotations import host_metric\n\n'
+           '@host_metric\n'
+           'def summarize(x):\n'
+           '    return float(x.mean())\n')
+    assert analyze_source(src, "fx.py", registry) == []
+    bad = src.replace("@host_metric\n", "")
+    assert {f.check for f in analyze_source(bad, "fx.py", registry)} \
+        == {"HS301"}
+
+
+def test_host_metric_is_an_identity_decorator():
+    def f():
+        return 3
+    assert host_metric(f) is f and f.__host_metric__ is True
+
+
+# ---------------------------------------------------------------------------
+# the real tree is clean — the CI gate's exact invocation
+# ---------------------------------------------------------------------------
+
+def test_real_tree_clean_under_packaged_allowlist():
+    out = io.StringIO()
+    code = run_analysis([str(REPO / "src"), str(REPO / "benchmarks")],
+                        strict=True, out=out)
+    assert code == 0, out.getvalue()
+    assert ", 0 reported" in out.getvalue()
+
+
+def test_registry_is_introspected_not_handwritten(registry):
+    # effective geometry rides FamParams (the dynamic-geometry invariant)
+    assert {"num_sets", "cache_ways", "block_bits",
+            "policy"} <= registry.traced_param_fields
+    # the deliberate static/traced overlap that makes CK101
+    # receiver-sensitive
+    assert {"block_bytes", "cache_ways"} <= registry.overlap_fields
+    assert registry.overlap_fields <= (registry.traced_param_fields &
+                                       registry.static_config_fields)
+    assert registry.compile_tags and \
+        all(isinstance(t, str) for t in registry.compile_tags)
+
+
+# ---------------------------------------------------------------------------
+# allowlist: parser, matching, strict hygiene
+# ---------------------------------------------------------------------------
+
+def test_toml_subset_parser_roundtrip():
+    text = ('# header comment\n\n'
+            '[[allow]]\n'
+            'check = "DT401"\n'
+            'path = "benchmarks/run.py"  # trailing comment\n'
+            'symbol = "main"\n'
+            'reason = "wall-clock \\"ok\\" here"\n')
+    assert _parse_toml_subset(text) == [{
+        "check": "DT401", "path": "benchmarks/run.py",
+        "symbol": "main", "reason": 'wall-clock "ok" here'}]
+
+
+@pytest.mark.parametrize("bad", [
+    '[allow]\n',                        # not an array-of-tables header
+    'check = "DT401"\n',                # key/value outside a table
+    '[[deny]]\n',                       # unknown table name
+    '[[allow]]\ncheck = [1, 2]\n',      # non-string value
+])
+def test_toml_subset_parser_rejects(bad):
+    with pytest.raises(ValueError):
+        _parse_toml_subset(bad)
+
+
+def test_allowlist_matching_and_hygiene():
+    used = AllowEntry("DT401", "benchmarks/run.py", "main", "timing print")
+    stale = AllowEntry("DT401", "benchmarks/gone.py", "f", "obsolete")
+    bare = AllowEntry("TC201", "x.py", "g", "")
+    al = Allowlist(entries=[used, stale, bare])
+
+    f = Finding(check="DT401", path="benchmarks/run.py", line=9, col=4,
+                symbol="main", message="m")
+    other = Finding(check="TC201", path="benchmarks/run.py", line=9, col=4,
+                    symbol="main", message="m")
+    assert al.allows(f)                 # check+path suffix+symbol match
+    assert not al.allows(other)         # same site, different check
+    assert stale in al.stale_entries() and used not in al.stale_entries()
+    assert al.unjustified_entries() == [bare]
+
+
+def test_packaged_allowlist_loads_and_is_justified():
+    al = load_allowlist()
+    assert al.entries, "packaged allowlist should carry the timing waivers"
+    for e in al.entries:
+        assert e.check in CHECKS and e.reason.strip(), e
+
+
+# ---------------------------------------------------------------------------
+# CLI surface
+# ---------------------------------------------------------------------------
+
+def test_cli_list_checks(capsys):
+    assert main(["--list-checks"]) == 0
+    out = capsys.readouterr().out
+    for cid in CHECKS:
+        assert cid in out
+
+
+def test_cli_reports_bad_file_and_fails():
+    out = io.StringIO()
+    code = run_analysis([str(FIXTURES / "tc201_traced_branch.py")],
+                        allowlist=Allowlist(), out=out)
+    assert code == 1
+    assert "TC201" in out.getvalue() and "hint:" in out.getvalue()
+
+
+# ---------------------------------------------------------------------------
+# runtime half: CompileWatcher counts named XLA compiles
+# ---------------------------------------------------------------------------
+
+def test_compile_watcher_counts_only_group_compiles():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.runtime import CompileWatcher
+
+    prev = bool(jax.config.jax_log_compiles)
+
+    def famsim_group(x):                # the executor's runner name
+        return x * 2.0
+
+    with CompileWatcher() as w:
+        jax.jit(famsim_group).lower(
+            jax.ShapeDtypeStruct((4,), jnp.float32)).compile()
+        jax.jit(lambda x: x + 1.0)(jnp.ones(4))   # differently named jit
+    assert w.count == 1
+    # log_compiles config restored after the window
+    assert bool(jax.config.jax_log_compiles) == prev

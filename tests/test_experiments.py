@@ -476,3 +476,37 @@ def test_shim_warns_exactly_once_per_process():
     dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
            and "run_points" in str(w.message)]
     assert len(dep) == 1, [str(w.message) for w in rec]
+
+
+def test_runtime_compile_count_matches_plan_for_fig08_fig16():
+    """The planner's "exactly ONE group" promise for fig08/fig16, proved
+    at runtime: ``assert_compiles=True`` counts actual XLA compilations
+    of the named group runner via ``jax.log_compiles`` and requires
+    observed == accounted == planned (1 when the executable cache is
+    cold, 0 when warm — an unplanned recompile fails the run)."""
+    import dataclasses
+
+    from benchmarks import fig08_blocksize, fig16_cachesize
+    from repro.experiments import executor as ex
+
+    for mod in (fig08_blocksize, fig16_cachesize):
+        exp = mod.experiment(quick=True)
+        small = dataclasses.replace(
+            exp, T=512,
+            axes=tuple(dataclasses.replace(a, values=a.values[:2])
+                       if a.name == "workload" else a
+                       for a in exp.axes))
+        saved = dict(ex._EXEC_CACHE)
+        ex._EXEC_CACHE.clear()
+        try:
+            cold = small.run(assert_compiles=True).info
+            assert cold.planned_groups == 1, (mod.__name__, cold.groups)
+            assert cold.compiles == cold.xla_compiles == 1, \
+                (mod.__name__, cold.compiles, cold.xla_compiles)
+            assert cold.as_dict()["xla_compiles"] == 1
+            warm = small.run(assert_compiles=True).info
+            assert warm.compiles == warm.xla_compiles == 0, \
+                (mod.__name__, warm.compiles, warm.xla_compiles)
+        finally:
+            ex._EXEC_CACHE.clear()
+            ex._EXEC_CACHE.update(saved)
