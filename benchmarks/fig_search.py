@@ -1,0 +1,209 @@
+"""Design-space search over the fig14 mix suite (``run.py search``).
+
+The search twin of the paper's hand-picked configuration: a
+:class:`repro.search.SearchSpace` over the prefetch/scheduler/adaptation
+knobs, evaluated on the fig14 mixes through the batched sweep engine,
+with the all-default PolicySet (the paper's non-adaptive FIFO prefetcher,
+fig14's ``fifo`` variant) as the baseline row every objective is
+measured against.
+
+The DEFAULT space is deliberately traced-only — scheduler choice
+(``fifo``/``wfq`` share the fused chain kernel's compile tag), WFQ
+weight, backlog cap, SPP confidence, token-bucket knobs, and the
+``bw_adapt`` gate all ride ``FamParams`` — so every generation after the
+first re-lands on the single warm executable compiled by generation 1:
+the run asserts each such generation reports ZERO new XLA compiles
+(``RunInfo.xla_compiles`` under the PR-6 ``assert_compiles`` watcher).
+``--space full`` adds recompiling dimensions (prefetcher choice,
+prefetch degree) to exercise the static/traced split and the
+compile-penalized fitness.
+
+Artifacts: ``results/search/trajectory.jsonl`` (+ ``timings.jsonl``
+sidecar), ``results/search/best.json`` (replayed in-process and byte-
+compared before this driver returns), ``results/benchmarks/
+fig_search.json`` rows, and the winning objective as
+``BENCH_search.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+# allow `python benchmarks/fig_search.py` (script path on sys.path only)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import RESULTS, save_rows
+from benchmarks.fig14_mixes import T, _mixes
+from repro.search import (SearchSpace, categorical, cfg_field, continuous,
+                          integer, load_best, log_continuous, policy_choice,
+                          policy_param, read_trajectory, replay_best,
+                          run_search, split_records)
+
+ROOT = Path(__file__).resolve().parent.parent
+SEARCH_DIR = RESULTS.parent / "search"
+
+
+def default_space() -> SearchSpace:
+    """Traced-only knobs: every dimension rides ``FamParams``, so one
+    compile (generation 1) prices the whole search."""
+    return SearchSpace((
+        categorical("scheduler", policy_choice("scheduler"),
+                    ["fifo", "wfq"]),
+        continuous("wfq_weight", policy_param("scheduler", "weight"),
+                   0.5, 4.0),
+        log_continuous("backlog_cap", policy_param("scheduler",
+                                                   "backlog_cap"),
+                       500.0, 4000.0),
+        categorical("bw_adapt", ("flag", "bw_adapt"), [False, True]),
+        continuous("spp_confidence", policy_param("prefetch",
+                                                  "confidence_threshold"),
+                   0.05, 0.6),
+        continuous("ema_alpha", policy_param("adaptation", "ema_alpha"),
+                   0.05, 0.6),
+        continuous("mimd_increase", policy_param("adaptation",
+                                                 "mimd_increase"),
+                   1.02, 1.4),
+    ))
+
+
+def full_space() -> SearchSpace:
+    """The default space plus RECOMPILING dimensions — prefetcher choice
+    (``spp`` vs ``nextline`` trace different programs) and the prefetch
+    degree (a geometry-free shape field): exercises the static/traced
+    split and the compile-cost-penalized fitness."""
+    return SearchSpace(default_space().dimensions + (
+        categorical("prefetcher", policy_choice("prefetch"),
+                    ["spp", "nextline"]),
+        integer("prefetch_degree", cfg_field("prefetch_degree"), 1, 4),
+    ))
+
+
+SPACES = {"default": default_space, "full": full_space}
+
+
+def run(quick: bool = True, trace_backend: str = "device", *,
+        proposer: str = "evolutionary", generations: int = 3,
+        population: int = 6, seed: int = 0, space: str = "default",
+        T_events: int = T, out_dir=None, resume: bool = False):
+    mixes = _mixes(quick)
+    sp = SPACES[space]()
+    out_dir = Path(out_dir) if out_dir else SEARCH_DIR
+    summary = run_search(
+        sp, mixes, proposer=proposer, generations=generations,
+        population=population, T=T_events, seed=seed, out_dir=out_dir,
+        resume=resume, trace_backend=trace_backend)
+    best = summary["best"]
+
+    # -- acceptance asserts (not eyeballed) --------------------------------
+    warm_gens = [t["gen"] for t in summary["timings"]
+                 if t["new_group_keys"] == 0]
+    for t in summary["timings"]:
+        if t["new_group_keys"] == 0:
+            # a generation whose groups were all warmed earlier in this
+            # process must not trigger a single XLA compile
+            assert t["xla_compiles"] == 0, t
+    if space == "default" and generations >= 2 and proposer != "halving":
+        # traced-only space + constant population => every generation
+        # after the first re-lands on generation 1's executable
+        assert warm_gens, summary["timings"]
+    if proposer == "evolutionary":
+        assert best["objective"] > 1.0, (
+            "evolutionary search failed to beat the all-default baseline",
+            best)
+
+    replay = replay_best(load_best(summary["best_path"]),
+                         trace_backend=trace_backend)
+    assert replay["matches"], replay
+
+    # -- rows / perf-trajectory records ------------------------------------
+    _, cands, _ = split_records(read_trajectory(summary["trajectory"]))
+    rows = []
+    for t in summary["timings"]:
+        gen = t["gen"]
+        gen_best = max(c["objective"] for c in cands if c["gen"] == gen)
+        rows.append({
+            "name": f"search_gen{gen}",
+            "us_per_call": t["us_per_event"],
+            "derived": (f"best={gen_best:.6f};"
+                        f"new_keys={t['new_group_keys']}"),
+            "engine": t,
+        })
+    rows.append({
+        "name": "search_best", "us_per_call": 0.0,
+        "derived": best["derived"],
+        "sample": best["sample"], "gen": best["gen"],
+        "replay_matches": replay["matches"],
+    })
+    rows.append({
+        "name": "search_engine", "us_per_call": 0.0,
+        "derived": (f"generations={summary['generations_run']};"
+                    f"warm_gens={len(warm_gens)}"),
+        "proposer": proposer, "space": space, "seed": seed,
+        "trajectory": summary["trajectory"],
+    })
+    save_rows("fig_search", rows)
+    (ROOT / "BENCH_search.json").write_text(json.dumps({
+        "objective": best["objective"], "derived": best["derived"],
+        "proposer": proposer, "space": space, "seed": seed,
+        "generations": summary["generations_run"],
+        "population": population, "T": T_events,
+        "mixes": sorted(mixes),
+    }, indent=2, sort_keys=True) + "\n")
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Design-space search on the fig14 mix suite "
+                    "(repro.search)")
+    ap.add_argument("--proposer", default="evolutionary",
+                    help="proposer registry name (random / evolutionary / "
+                         "halving)")
+    ap.add_argument("--generations", type=int, default=3)
+    ap.add_argument("--population", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--space", choices=sorted(SPACES), default="default",
+                    help="'default' = traced-only knobs (zero recompiles "
+                         "after generation 1); 'full' adds recompiling "
+                         "prefetcher-choice/degree dimensions")
+    ap.add_argument("--full", action="store_true",
+                    help="all 7 fig14 mixes (default: quick 4-mix subset)")
+    ap.add_argument("--T", type=int, default=T, dest="T_events",
+                    help=f"events per node per evaluation (default {T})")
+    ap.add_argument("--out", default=None,
+                    help=f"artifact directory (default {SEARCH_DIR})")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue an existing trajectory in --out up to "
+                         "--generations total")
+    ap.add_argument("--trace-backend", choices=("device", "numpy"),
+                    default="device")
+    ap.add_argument("--replay", metavar="BEST_JSON", default=None,
+                    help="replay an existing best.json as a plain "
+                         "Experiment, byte-compare its derived string, "
+                         "and exit")
+    args = ap.parse_args(argv)
+
+    if args.replay:
+        r = replay_best(load_best(args.replay),
+                        trace_backend=args.trace_backend)
+        print(f"recorded: {r['recorded']}")
+        print(f"replayed: {r['derived']}")
+        print(f"matches:  {r['matches']}")
+        sys.exit(0 if r["matches"] else 1)
+
+    print("name,us_per_call,derived")
+    rows = run(quick=not args.full, trace_backend=args.trace_backend,
+               proposer=args.proposer, generations=args.generations,
+               population=args.population, seed=args.seed,
+               space=args.space, T_events=args.T_events,
+               out_dir=args.out, resume=args.resume)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.3f},\"{r['derived']}\"",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

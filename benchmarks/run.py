@@ -18,6 +18,13 @@ figures that support it (fig12)::
 
     python -m benchmarks.run --policies scheduler=fifo,wfq,strict \\
         --policies prefetch=spp,nextline fig12
+
+``search`` hands the remaining arguments to the design-space search
+driver (``benchmarks.fig_search`` over ``repro.search``)::
+
+    python -m benchmarks.run search --proposer evolutionary
+    python -m benchmarks.run search --proposer random --generations 2
+    python -m benchmarks.run search --replay results/search/best.json
 """
 from __future__ import annotations
 
@@ -34,6 +41,12 @@ FIGURE_NAMES = ("fig08", "fig10", "fig12", "fig14", "fig15", "fig16")
 
 
 def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "search":
+        # the search subcommand owns its whole argument tail
+        from benchmarks import fig_search
+        fig_search.main(argv[1:])
+        return
     ap = argparse.ArgumentParser(
         description="Run paper-figure benchmarks through repro.experiments")
     ap.add_argument("figures", nargs="*", metavar="figure",

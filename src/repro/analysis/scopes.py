@@ -113,6 +113,10 @@ JIT_SCOPE = {
 DT_SCOPE_SUFFIXES: Tuple[str, ...] = (
     "repro/traces/", "repro/core/", "repro/configs/", "repro/policies/",
     "repro/experiments/plan.py", "repro/experiments/spec.py",
+    # the search layer's trajectory/best artifacts are byte-identity
+    # contracts: seeded-Generator-only RNG, no wall clock, no set-order
+    # dependence anywhere in the package
+    "repro/search/",
     "benchmarks/",
 )
 

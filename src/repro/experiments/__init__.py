@@ -21,6 +21,7 @@ from repro.experiments.executor import (  # noqa: F401
     ExperimentResult,
     RunInfo,
     execute,
+    group_cache_keys,
     trace_arrays,
 )
 from repro.experiments.plan import (  # noqa: F401
@@ -39,6 +40,7 @@ from repro.experiments.spec import (  # noqa: F401
     ResolvedPoint,
     config_axis,
     flag_axis,
+    grid_axis,
     mix_axis,
     nodes_axis,
     policy_axis,

@@ -67,6 +67,16 @@ class RunInfo:
     xla_compiles: int = -1
     compile_s: float = 0.0
     run_s: float = 0.0
+    #: executable-cache accounting (first-class so callers — e.g. the
+    #: repro.search loop's cost model — never poke at ``_EXEC_CACHE``):
+    #: per group-runner lookup during this execute, was the compiled
+    #: executable already cached (hit) or freshly built (miss)?
+    exec_cache_hits: int = 0
+    exec_cache_misses: int = 0
+    #: groups of THIS plan whose executable predated this execute call —
+    #: the warm-start count a repeated sweep (or a search generation
+    #: moving only traced params) should drive to ``planned_groups``
+    groups_reused: int = 0
     systems: int = 0
     events: int = 0                # true simulated events (sum S*N*T)
     padded_events: int = 0         # extra events paid to T/S padding
@@ -88,6 +98,9 @@ class RunInfo:
              "planned_groups": self.planned_groups,
              "compile_s": round(self.compile_s, 3),
              "run_s": round(self.run_s, 3),
+             "exec_cache_hits": self.exec_cache_hits,
+             "exec_cache_misses": self.exec_cache_misses,
+             "groups_reused": self.groups_reused,
              "systems": self.systems, "events": self.events,
              "padded_events": self.padded_events,
              "padded_systems": self.padded_systems,
@@ -225,6 +238,51 @@ def _prepare(points: Sequence[ResolvedPoint], idxs: Sequence[int],
 _EXEC_CACHE: Dict = {}
 
 
+def _exec_key(cfg, S: int, N: int, t_pad: int, mode, *,
+              pad_sets: Optional[int] = None, pad_ways: Optional[int] = None,
+              trace_backend: str = "numpy", policies=None) -> Tuple:
+    """The executable-cache key one group resolves to — a pure function
+    of the plan (geometry-free shape + padded allocation + execution
+    widths + policy compile tags), deterministic across processes."""
+    from repro.policies import DEFAULT_POLICY_SET
+
+    policies = policies or DEFAULT_POLICY_SET
+    pad_sets = pad_sets or cfg.num_sets
+    pad_ways = pad_ways or cfg.cache_ways
+    return (cfg.geometry_free_shape(), pad_sets, pad_ways,
+            S, N, t_pad, mode, trace_backend == "device",
+            policies.compile_tags())
+
+
+def group_cache_keys(plan: Plan, *, devices: Optional[int] = None,
+                     trace_backend: Optional[str] = None) -> Tuple[Tuple, ...]:
+    """The executable-cache key each group of ``plan`` would resolve to
+    under :func:`execute` — WITHOUT compiling or executing anything.
+
+    This is the planner-level warm/cold oracle: two groups (across plans,
+    generations, or whole experiments) with equal keys share one compiled
+    executable, so a caller batching repeated sweeps (``repro.search``)
+    can predict — deterministically, before paying for the run — which
+    proposals land on warm executables and which recompile.
+    """
+    import jax
+
+    from repro.traces.backend import validate_backend
+
+    backend = validate_backend(trace_backend or plan.trace_backend)
+    D = len(jax.devices()) if devices is None else devices
+    mode = ("shard", D) if D > 1 else "vmap"
+    keys = []
+    for g in plan.groups:
+        rep = plan.points[g.indices[0]]
+        keys.append(_exec_key(
+            rep.cfg, len(_pad_systems(g.indices, g.s_pad, D)),
+            g.key.num_nodes, g.t_pad, mode, pad_sets=g.pad_sets,
+            pad_ways=g.pad_ways, trace_backend=backend,
+            policies=rep.policy_set()))
+    return tuple(keys)
+
+
 def _compiled(cfg, S: int, N: int, t_pad: int, mode,
               info: Optional[RunInfo] = None, *,
               pad_sets: Optional[int] = None, pad_ways: Optional[int] = None,
@@ -232,12 +290,14 @@ def _compiled(cfg, S: int, N: int, t_pad: int, mode,
     """AOT-compiled group runner. ``mode`` is ``"vmap"`` or
     ``("shard", D)``; ``pad_sets``/``pad_ways`` size the shared cache
     allocation (default: ``cfg``'s own geometry); compile time lands in
-    ``info`` (zero when cached). ``trace_backend="device"`` compiles the
-    in-graph trace generator into the executable (its signature takes
-    TraceParams instead of staged arrays). ``policies`` is the group's
-    representative :class:`~repro.policies.PolicySet` — the cache keys on
-    its compile tags (group members share them by construction), and it
-    donates the policy numeric-param *schema* for the abstract shapes."""
+    ``info`` (zero when cached, counted by the ``exec_cache_hits`` /
+    ``exec_cache_misses`` accounting). ``trace_backend="device"``
+    compiles the in-graph trace generator into the executable (its
+    signature takes TraceParams instead of staged arrays). ``policies``
+    is the group's representative :class:`~repro.policies.PolicySet` —
+    the cache keys on its compile tags (group members share them by
+    construction), and it donates the policy numeric-param *schema* for
+    the abstract shapes."""
     import jax
     import jax.numpy as jnp
 
@@ -247,8 +307,14 @@ def _compiled(cfg, S: int, N: int, t_pad: int, mode,
     pad_sets = pad_sets or cfg.num_sets
     pad_ways = pad_ways or cfg.cache_ways
     in_graph = trace_backend == "device"
-    key = (cfg.geometry_free_shape(), pad_sets, pad_ways,
-           S, N, t_pad, mode, in_graph, policies.compile_tags())
+    key = _exec_key(cfg, S, N, t_pad, mode, pad_sets=pad_sets,
+                    pad_ways=pad_ways, trace_backend=trace_backend,
+                    policies=policies)
+    if info is not None:
+        if key in _EXEC_CACHE:
+            info.exec_cache_hits += 1
+        else:
+            info.exec_cache_misses += 1
     if key not in _EXEC_CACHE:
         i32 = jnp.int32
         if in_graph:
@@ -374,6 +440,19 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
     exec_idxs = [_pad_systems(g.indices, g.s_pad, D) for g in plan.groups]
     mode = ("shard", D) if D > 1 else "vmap"
 
+    # snapshot BEFORE any compile: which planned groups already have a
+    # cached executable from an earlier execute (the warm-start set a
+    # repeated sweep should drive to planned_groups)
+    pre_warm = []
+    for gi, g in enumerate(plan.groups):
+        rep = plan.points[g.indices[0]]
+        key = _exec_key(rep.cfg, len(exec_idxs[gi]), g.key.num_nodes,
+                        g.t_pad, mode, pad_sets=g.pad_sets,
+                        pad_ways=g.pad_ways, trace_backend=backend,
+                        policies=rep.policy_set())
+        pre_warm.append(key in _EXEC_CACHE)
+    info.groups_reused = sum(pre_warm)
+
     results: List[Optional[Dict[str, np.ndarray]]] = [None] * plan.num_points
     pool = ThreadPoolExecutor(max_workers=1) if overlap and \
         backend == "numpy" and len(plan.groups) > 1 else None
@@ -434,7 +513,8 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
                 "S": g.size, "S_exec": S_exec, "N": N, "T_pad": t_pad,
                 "pad_sets": g.pad_sets, "pad_ways": g.pad_ways,
                 "compile_s": round(compile_s, 3), "run_s": round(run_s, 3),
-                "fresh_compile": info.compiles > before})
+                "fresh_compile": info.compiles > before,
+                "exec_cache_hit": pre_warm[gi]})
             for j, i in enumerate(g.indices):
                 results[i] = {k: v[j] for k, v in out.items()}
     finally:

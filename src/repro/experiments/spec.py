@@ -16,6 +16,7 @@ whose ``get(axis=label, ...)`` looks metrics up by coordinates.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 from dataclasses import dataclass, field
 from typing import Any, Mapping, Optional, Sequence, Tuple
@@ -104,6 +105,42 @@ def nodes_axis(counts: Sequence[int], name: str = "nodes") -> Axis:
 
 def seed_axis(seeds: Sequence[int], name: str = "seed") -> Axis:
     return Axis(name, tuple(AxisValue(label=str(s), seed=s) for s in seeds))
+
+
+def grid_axis(name: str, values: Mapping[str, Mapping[str, Any]]) -> Axis:
+    """Programmatic axis construction from plain dicts — one axis value
+    per ``{label: fields}`` entry, where ``fields`` holds any subset of
+    the :class:`AxisValue` fields (``cfg`` as a ``{field: value}`` dict,
+    converted to the hashable sorted-tuple form; ``flags`` / ``policies``
+    / ``workload`` / ``workloads`` / ``nodes`` / ``T`` / ``seed``
+    verbatim). This is the bridge a programmatic driver — e.g. the
+    ``repro.search`` loop mapping sampled candidates onto grid cells via
+    ``SearchSpace.axis_fields`` — uses to build an Experiment without
+    hand-rolling AxisValue tuples.
+    """
+    allowed = {"cfg", "flags", "workload", "workloads", "nodes", "T",
+               "seed", "policies"}
+    out = []
+    for label, fields in values.items():
+        unknown = set(fields) - allowed
+        if unknown:
+            raise ValueError(
+                f"grid_axis {name!r}, value {label!r}: unknown AxisValue "
+                f"fields {sorted(unknown)} (allowed: {sorted(allowed)})")
+        kw = dict(fields)
+        cfg = kw.pop("cfg", None)
+        if cfg:
+            valid = {f.name for f in dataclasses.fields(FamConfig)}
+            bad = set(cfg) - valid
+            if bad:
+                raise ValueError(
+                    f"grid_axis {name!r}, value {label!r}: FamConfig has "
+                    f"no field(s) {sorted(bad)}")
+            kw["cfg"] = tuple(sorted(cfg.items()))
+        if "workloads" in kw and kw["workloads"] is not None:
+            kw["workloads"] = tuple(kw["workloads"])
+        out.append(AxisValue(label=str(label), **kw))
+    return Axis(name, tuple(out))
 
 
 def policy_axis(variants: Mapping[str, PolicySet],

@@ -204,6 +204,11 @@ def available(kind: str) -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY[kind]))
 
 
+#: param_schema cache: ``(kind, policy name) -> sorted param names`` —
+#: ``params_of`` keys are config-independent, so one probe per policy
+_SCHEMA_CACHE: Dict[Tuple[str, str], Tuple[str, ...]] = {}
+
+
 class ResolvedPolicies(NamedTuple):
     """The four implementation objects a :class:`PolicySet` names."""
 
@@ -268,15 +273,64 @@ class PolicySet:
                              f"{sorted(ov)} (kinds: {POLICY_KINDS})")
         return out
 
+    def param_schema(self, kind: str) -> Tuple[str, ...]:
+        """The valid numeric-param names of ``kind``'s chosen policy —
+        the keys of ``params_of`` (config-independent), cached per
+        policy."""
+        if kind not in POLICY_KINDS:
+            raise ValueError(f"unknown policy kind {kind!r} "
+                             f"(kinds: {POLICY_KINDS})")
+        impl = self.impl(kind)
+        cached = _SCHEMA_CACHE.get((kind, impl.name))
+        if cached is None:
+            from repro.configs.base import FamConfig
+            cached = tuple(sorted(impl.params_of(FamConfig())))
+            _SCHEMA_CACHE[(kind, impl.name)] = cached
+        return cached
+
     def override(self, kind: str, **values) -> "PolicySet":
-        """A copy with ``values`` merged into ``kind``'s param overrides."""
+        """A copy with ``values`` merged into ``kind``'s param overrides.
+
+        Param names validate EAGERLY against the chosen policy's
+        ``params_of`` schema — a typo'd knob raises here, at the call
+        site, instead of silently riding along as an inert dimension
+        until ``numeric_params`` (or never, for a caller that only
+        serializes the set)."""
         if kind not in POLICY_KINDS:
             raise ValueError(f"unknown policy kind {kind!r}")
+        schema = self.param_schema(kind)
+        bad = sorted(set(values) - set(schema))
+        if bad:
+            raise ValueError(
+                f"{kind} policy {getattr(self, kind)!r} has no numeric "
+                f"param(s) {bad}; valid params: {list(schema)}")
         merged = dict((k, dict(v)) for k, v in self.overrides)
         merged.setdefault(kind, {}).update(values)
         canon = tuple(sorted(
             (k, tuple(sorted(v.items()))) for k, v in merged.items() if v))
         return replace(self, overrides=canon)
+
+    def as_dict(self) -> Dict[str, Any]:
+        """JSON-able serialization: the four choice names + overrides as
+        nested dicts. Round-trips through :meth:`from_dict` — the search
+        layer's candidate/`best.json` format."""
+        return {
+            **{k: getattr(self, k) for k in POLICY_KINDS},
+            "overrides": {k: dict(v) for k, v in self.overrides},
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "PolicySet":
+        """Inverse of :meth:`as_dict` (override params re-validate
+        against the chosen policies' schemas on the way in)."""
+        unknown = set(d) - set(POLICY_KINDS) - {"overrides"}
+        if unknown:
+            raise ValueError(f"PolicySet.from_dict: unknown keys "
+                             f"{sorted(unknown)}")
+        ps = cls(**{k: str(d[k]) for k in POLICY_KINDS if k in d})
+        for kind, params in dict(d.get("overrides", {})).items():
+            ps = ps.override(kind, **params)
+        return ps
 
     @classmethod
     def from_flags(cls, flags: Optional[SimFlags]) -> "PolicySet":

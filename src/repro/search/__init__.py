@@ -1,0 +1,52 @@
+"""repro.search — design-space search over the batched sweep engine.
+
+* :mod:`repro.search.space` — declarative :class:`SearchSpace` of typed
+  dimensions mapping sample vectors onto Experiment grid cells, split
+  into static (recompiling) and traced (free) moves;
+* :mod:`repro.search.proposers` — the ask/tell :class:`Proposer`
+  registry (``random`` / ``evolutionary`` / ``halving``);
+* :mod:`repro.search.loop` — the driver batching each generation into
+  one Experiment, with a compile-cost-penalized fitness;
+* :mod:`repro.search.trajectory` — the deterministic JSONL trajectory +
+  ``best.json`` reproducible-winner artifacts.
+
+See docs/search.md.
+"""
+from repro.search.loop import (  # noqa: F401
+    best_experiment,
+    candidate_objective,
+    derived_string,
+    generation_experiment,
+    replay_best,
+    run_search,
+)
+from repro.search.proposers import (  # noqa: F401
+    EvolutionaryProposer,
+    HalvingProposer,
+    Proposer,
+    RandomProposer,
+    available,
+    get_proposer,
+    register_proposer,
+)
+from repro.search.space import (  # noqa: F401
+    Dimension,
+    SearchSpace,
+    categorical,
+    cfg_field,
+    continuous,
+    flag,
+    integer,
+    log_continuous,
+    policy_choice,
+    policy_param,
+)
+from repro.search.trajectory import (  # noqa: F401
+    TrajectoryWriter,
+    canonical_json,
+    load_best,
+    read_trajectory,
+    resume_state,
+    split_records,
+    write_best,
+)

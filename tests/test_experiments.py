@@ -397,6 +397,38 @@ def test_info_records_per_group_wallclock(small_result):
     assert d["shard_check"]["bit_exact"] is True
 
 
+def test_exec_cache_accounting_two_run_sequence():
+    """First-class executable-cache counters on RunInfo: a cold run is
+    all misses with nothing reused; re-executing the same-tag plan is all
+    hits with every group's executable predating the call — counted on
+    the info object (and per group), never by poking at _EXEC_CACHE."""
+    exp = Experiment(                 # T=901: unique exec key, cold start
+        name="cache_seq", T=901,
+        axes=(workload_axis(["LU", "bfs"]),
+              flag_axis("variant", {"base": BASE, "dram": DRAM})))
+    r1 = exp.run()
+    assert r1.info.planned_groups == 1
+    assert r1.info.exec_cache_misses == 1 and r1.info.exec_cache_hits == 0
+    assert r1.info.groups_reused == 0 and r1.info.compiles == 1
+    assert r1.info.groups[0]["exec_cache_hit"] is False
+    r2 = exp.run()
+    assert r2.info.exec_cache_hits == 1 and r2.info.exec_cache_misses == 0
+    assert r2.info.groups_reused == 1 == r2.info.planned_groups
+    assert r2.info.compiles == 0
+    assert r2.info.groups[0]["exec_cache_hit"] is True
+    for key in ("exec_cache_hits", "exec_cache_misses", "groups_reused"):
+        assert key in r2.info.as_dict()
+    # the planner-level oracle agrees with what execute actually did, and
+    # is deterministic across plan re-resolutions
+    from repro.experiments import group_cache_keys
+    keys = group_cache_keys(exp.plan())
+    assert len(keys) == 1 and keys == group_cache_keys(exp.plan())
+    # both runs returned identical metrics (cache reuse is invisible)
+    for m1, m2 in zip(r1.metrics, r2.metrics):
+        for k in m1:
+            np.testing.assert_array_equal(m1[k], m2[k])
+
+
 def test_result_coordinate_lookup(small_result):
     out = small_result.get(workload="LU", variant="dram")
     assert out["ipc"].shape == (1,)

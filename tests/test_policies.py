@@ -75,6 +75,41 @@ def test_numeric_params_schema_and_override_validation():
         ps.override("queueing", weight=1.0)
 
 
+def test_override_validates_eagerly_with_schema_listing():
+    """A typo'd knob raises AT THE OVERRIDE CALL (not when numeric_params
+    eventually runs — or never, for a caller that only serializes the
+    set), and the error lists the valid keys; the schema follows the
+    CHOSEN policy."""
+    with pytest.raises(ValueError) as e:
+        PolicySet().override("scheduler", wieght=3.0)
+    assert "wieght" in str(e.value)
+    for valid in ("weight", "backlog_cap", "use_wfq"):
+        assert valid in str(e.value)
+    assert tuple(PolicySet().param_schema("prefetch")) == \
+        ("confidence_threshold",)
+    # the strict scheduler has backlog_cap but no weight
+    strict = PolicySet(scheduler="strict")
+    strict.override("scheduler", backlog_cap=800.0)
+    with pytest.raises(ValueError, match="no numeric param"):
+        strict.override("scheduler", weight=1.0)
+
+
+def test_policyset_dict_round_trip():
+    """as_dict/from_dict is the search layer's candidate serialization:
+    exact round-trip, JSON-able, and re-validating on the way in."""
+    import json
+    ps = PolicySet(scheduler="wfq").override(
+        "scheduler", weight=3.0).override("prefetch",
+                                          confidence_threshold=0.4)
+    d = json.loads(json.dumps(ps.as_dict()))
+    assert PolicySet.from_dict(d) == ps
+    assert PolicySet.from_dict(PolicySet().as_dict()) == PolicySet()
+    with pytest.raises(ValueError, match="unknown keys"):
+        PolicySet.from_dict({"sched": "wfq"})
+    with pytest.raises(ValueError, match="no numeric param"):
+        PolicySet.from_dict({"overrides": {"scheduler": {"nope": 1.0}}})
+
+
 def test_famparams_carries_policy_pytree():
     """Policy numeric params are ordinary traced leaves: stack/vmap-able,
     and with_flags maps the legacy wfq booleans onto the chain

@@ -1,0 +1,308 @@
+"""repro.search: the SearchSpace static/traced split must match the
+planner's actual compile behavior, proposers must be deterministic
+ask/tell machines whose state round-trips exactly, the loop must batch
+each generation into one warm-after-gen-1 Experiment, and the trajectory
+artifact must be byte-identical across processes under a fixed seed —
+with resume-from-trajectory reproducing the remaining generations
+exactly."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FamConfig
+from repro.experiments import grid_axis
+from repro.policies import PolicySet, SimFlags
+from repro.search import (Dimension, SearchSpace, categorical, cfg_field,
+                          continuous, flag, get_proposer, integer,
+                          load_best, log_continuous, policy_choice,
+                          policy_param, read_trajectory, replay_best,
+                          run_search, split_records)
+from repro.search.proposers import available as proposers_available
+
+# one shared tiny search configuration: every loop test below uses the
+# SAME traced-only space / mixes / population / T, so the whole module
+# compiles ONE group executable (first run pays it, the rest are warm)
+MIXES = {"m1": ["LU", "bfs"], "m2": ["mg", "cc"]}
+T = 900
+
+
+def _space() -> SearchSpace:
+    return SearchSpace((
+        categorical("sched", policy_choice("scheduler"), ["fifo", "wfq"]),
+        continuous("weight", policy_param("scheduler", "weight"), 0.5, 4.0),
+        categorical("adapt", flag("bw_adapt"), [False, True]),
+    ))
+
+
+def _run(out_dir, **kw):
+    kw.setdefault("proposer", "evolutionary")
+    kw.setdefault("generations", 2)
+    kw.setdefault("population", 3)
+    return run_search(_space(), MIXES, T=T, seed=5, out_dir=out_dir, **kw)
+
+
+# ---------------------------------------------------------------------------
+# space
+# ---------------------------------------------------------------------------
+
+def test_dimension_sampling_types_and_bounds():
+    rng = np.random.default_rng(0)
+    c = continuous("c", policy_param("scheduler", "weight"), 0.5, 4.0)
+    lc = log_continuous("l", policy_param("scheduler", "backlog_cap"),
+                        500, 4000)
+    i = integer("i", cfg_field("prefetch_degree"), 1, 4)
+    cat = categorical("k", flag("bw_adapt"), [False, True])
+    for _ in range(50):
+        assert 0.5 <= c.sample(rng) <= 4.0
+        assert 500 <= lc.sample(rng) <= 4000
+        v = i.sample(rng)
+        assert isinstance(v, int) and 1 <= v <= 4
+        assert cat.sample(rng) in (False, True)
+        # mutation stays in range; categorical mutation moves
+        assert 0.5 <= c.mutate(2.0, rng) <= 4.0
+        assert 500 <= lc.mutate(1000.0, rng) <= 4000
+        assert 1 <= i.mutate(2, rng) <= 4
+        assert cat.mutate(True, rng) is False
+    # every sampled value is a JSON primitive (trajectory round-trip)
+    s = _space().sample(rng)
+    assert json.loads(json.dumps(s)) == s
+
+
+def test_dimension_validation():
+    with pytest.raises(ValueError, match="hi > lo"):
+        continuous("x", policy_param("scheduler", "weight"), 2.0, 1.0)
+    with pytest.raises(ValueError, match="log scale"):
+        log_continuous("x", policy_param("scheduler", "weight"), 0.0, 1.0)
+    with pytest.raises(ValueError, match=">= 2 choices"):
+        categorical("x", flag("bw_adapt"), [True])
+    with pytest.raises(ValueError, match="unknown policy kind"):
+        policy_param("queueing", "weight")
+    with pytest.raises(ValueError, match="no field"):
+        cfg_field("nope")
+    with pytest.raises(ValueError, match="no field"):
+        flag("nope")
+    with pytest.raises(ValueError, match="duplicate dimension names"):
+        SearchSpace((categorical("a", flag("bw_adapt"), [False, True]),
+                     categorical("a", flag("all_local"), [False, True])))
+
+
+def test_split_static_vs_traced():
+    """The classification feeding compile-aware mutation: policy params /
+    flags / same-tag policy choices are traced; different-tag choices,
+    shape fields, and up-sizing geometry are static."""
+    base = FamConfig()
+    sp = SearchSpace((
+        categorical("chain", policy_choice("scheduler"), ["fifo", "wfq"]),
+        continuous("w", policy_param("scheduler", "weight"), 0.5, 4.0),
+        categorical("adapt", flag("bw_adapt"), [False, True]),
+        integer("deg", cfg_field("prefetch_degree"), 1, 4),
+        # down-sizing geometry stays inside the base padded allocation
+        # (traced); up-sizing grows it and splits the executable (static)
+        categorical("geom_dn", cfg_field("block_bytes"),
+                    [base.block_bytes // 2, base.block_bytes]),
+        categorical("geom_up", cfg_field("dram_cache_bytes"),
+                    [base.dram_cache_bytes, 2 * base.dram_cache_bytes]),
+    ))
+    static, traced = sp.split(base)
+    # fifo/wfq share the chain tag -> free; shape fields recompile
+    assert set(static) == {"deg", "geom_up"}
+    assert set(traced) == {"chain", "w", "adapt", "geom_dn"}
+    s = sp.sample(np.random.default_rng(1))
+    key = sp.static_key(s, base)
+    assert [k for k, _ in key] == list(static)
+    # a different-tag policy choice is a static (recompiling) move
+    sp2 = SearchSpace((categorical("sched3", policy_choice("scheduler"),
+                                   ["fifo", "strict"]),))
+    assert sp2.split(base) == (("sched3",), ())
+    # duplicate targets (two dims steering one knob) are rejected
+    with pytest.raises(ValueError, match="duplicate dimension targets"):
+        SearchSpace((
+            integer("a", cfg_field("prefetch_degree"), 1, 4),
+            integer("b", cfg_field("prefetch_degree"), 2, 8)))
+
+
+def test_axis_fields_choice_before_param_and_eager_validation():
+    sp = SearchSpace((
+        categorical("sched", policy_choice("scheduler"), ["fifo", "wfq"]),
+        continuous("w", policy_param("scheduler", "weight"), 0.5, 4.0),
+    ))
+    f = sp.axis_fields({"sched": "wfq", "w": 1.5})
+    assert f["policies"].scheduler == "wfq"
+    assert dict(dict(f["policies"].overrides)["scheduler"])["weight"] == 1.5
+    with pytest.raises(KeyError, match="missing dimensions"):
+        sp.axis_fields({"sched": "wfq"})
+    # a typo'd param dimension raises at mapping time (eager override
+    # validation), listing the valid keys — never a silent no-op knob
+    bad = SearchSpace((
+        continuous("w", policy_param("scheduler", "wieght"), 0.5, 4.0),))
+    with pytest.raises(ValueError, match="valid params.*weight"):
+        bad.axis_fields({"w": 1.0})
+
+
+def test_grid_axis_from_dicts():
+    ax = grid_axis("candidate", {
+        "a": {"cfg": {"prefetch_degree": 2}, "policies": PolicySet()},
+        "b": {"flags": SimFlags(bw_adapt=True)},
+    })
+    assert ax.values[0].cfg == (("prefetch_degree", 2),)
+    assert ax.values[1].flags.bw_adapt
+    with pytest.raises(ValueError, match="unknown AxisValue fields"):
+        grid_axis("x", {"a": {"cfgg": {}}})
+    with pytest.raises(ValueError, match="no field"):
+        grid_axis("x", {"a": {"cfg": {"nope": 1}}})
+
+
+# ---------------------------------------------------------------------------
+# proposers
+# ---------------------------------------------------------------------------
+
+def _synthetic_fitness(s):
+    # optimum: wfq with weight 3.0, adapt on
+    return (-(s["weight"] - 3.0) ** 2
+            - (0.0 if s["sched"] == "wfq" else 0.5)
+            - (0.0 if s["adapt"] else 0.25))
+
+
+def test_proposer_registry():
+    assert set(proposers_available()) >= {"random", "evolutionary",
+                                          "halving"}
+    with pytest.raises(KeyError, match="no proposer named"):
+        get_proposer("annealing")
+
+
+def test_evolutionary_improves_and_state_round_trips():
+    sp = _space()
+    p = get_proposer("evolutionary")(sp, np.random.default_rng(3), 8)
+    firsts, bests = None, None
+    for _ in range(8):
+        samples = p.ask()
+        fits = [_synthetic_fitness(s) for s in samples]
+        if firsts is None:
+            firsts = max(fits)
+        bests = max(bests, max(fits)) if bests is not None else max(fits)
+        p.tell(samples, fits)
+    assert bests > firsts
+    top = p.parents[0][0]
+    assert top["sched"] == "wfq" and abs(top["weight"] - 3.0) < 0.5
+    # state + rng round-trip (through JSON, like the trajectory does)
+    # => identical continuation
+    state = json.loads(json.dumps(p.state()))
+    q = get_proposer("evolutionary")(sp, np.random.default_rng(0), 8)
+    q.load_state(state)
+    shared = np.random.default_rng(99).bit_generator.state
+    p.rng.bit_generator.state = shared
+    q.rng.bit_generator.state = shared
+    assert p.ask() == q.ask()
+
+
+def test_halving_schedule():
+    sp = _space()
+    p = get_proposer("halving")(sp, np.random.default_rng(1), 2,
+                                rungs=3, eta=2, min_T=512)
+    T_full = 8000
+    widths, Ts = [], []
+    for _ in range(4):                      # one full bracket + restart
+        samples = p.ask()
+        widths.append(len(samples))
+        Ts.append(p.round_T(T_full))
+        p.tell(samples, [_synthetic_fitness(s) for s in samples])
+    assert widths == [8, 4, 2, 8]           # wide screen -> promote -> restart
+    assert Ts == [2000, 4000, 8000, 2000]
+    assert p.round_T(600) == 512            # clamp floor
+
+
+def test_random_proposer_is_memoryless_and_seeded():
+    sp = _space()
+    a = get_proposer("random")(sp, np.random.default_rng(7), 4)
+    b = get_proposer("random")(sp, np.random.default_rng(7), 4)
+    a.tell([], [])                          # no-op by contract
+    assert a.ask() == b.ask()
+
+
+# ---------------------------------------------------------------------------
+# the loop (shared compile: same space/mixes/population/T everywhere)
+# ---------------------------------------------------------------------------
+
+def test_search_loop_end_to_end(tmp_path):
+    """Two generations over a traced-only space: generation 2 re-lands on
+    generation 1's executable (zero new group keys, zero XLA compiles),
+    the trajectory parses into header/candidates/generations, and the
+    winner replays through plain repro.experiments byte-identically."""
+    out = _run(tmp_path / "s")
+    assert out["generations_run"] == 2
+    t1, t2 = out["timings"]
+    assert t1["new_group_keys"] == 1 and t2["new_group_keys"] == 0
+    assert t2["xla_compiles"] == 0          # the warm-generation promise
+    assert t2["groups_reused"] == t2["planned_groups"]
+    header, cands, gens = split_records(
+        read_trajectory(out["trajectory"]))
+    assert header["space"] == _space().describe()
+    assert len(gens) == 2 and len(cands) == 6
+    assert all(not c["warm"] for c in cands if c["gen"] == 1)
+    assert all(c["warm"] for c in cands if c["gen"] == 2)
+    # baseline normalization: objectives are uplifts (baseline == 1.0)
+    best = load_best(out["best_path"])
+    assert best["objective"] == out["best"]["objective"]
+    replay = replay_best(best)
+    assert replay["matches"], replay
+
+
+def test_trajectory_byte_identical_across_processes(tmp_path):
+    """Same seed => byte-identical trajectory/best.json in fresh
+    interpreters with DIFFERENT hash randomization (the same pattern as
+    the threefry trace-seed test) — wall clock and runtime cache state
+    live in the timings sidecar, never in the contract files."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    snippet = (
+        "import sys; sys.path[:0] = [{src!r}]\n"
+        "from repro.search import run_search, SearchSpace, categorical, "
+        "continuous, policy_choice, policy_param, flag\n"
+        "sp = SearchSpace(("
+        "categorical('sched', policy_choice('scheduler'), ['fifo','wfq']),"
+        "continuous('weight', policy_param('scheduler','weight'), .5, 4.),"
+        "categorical('adapt', flag('bw_adapt'), [False, True])))\n"
+        "run_search(sp, {{'m1': ['LU', 'bfs']}}, proposer='random', "
+        "generations=2, population=2, T=600, seed=11, out_dir={out!r})\n"
+    )
+    blobs = {}
+    for hashseed in ("0", "1"):
+        out = tmp_path / f"h{hashseed}"
+        env = dict(os.environ, PYTHONHASHSEED=hashseed)
+        subprocess.run(
+            [sys.executable, "-c",
+             snippet.format(src=os.path.join(root, "src"), out=str(out))],
+            check=True, env=env, capture_output=True, text=True)
+        blobs[hashseed] = ((out / "trajectory.jsonl").read_bytes(),
+                           (out / "best.json").read_bytes())
+    assert blobs["0"] == blobs["1"]
+
+
+def test_resume_reproduces_remaining_generations(tmp_path):
+    """gens=3 in one shot vs gens=2 + resume-to-3: every record after the
+    header (candidates, generation states, best.json) must be identical —
+    the RNG/proposer state round-trip and the plan-level warm-key rebuild
+    are exact."""
+    full = _run(tmp_path / "full", generations=3)
+    part = _run(tmp_path / "part", generations=2)
+    resumed = _run(tmp_path / "part", generations=3, resume=True)
+    lines_full = (tmp_path / "full/trajectory.jsonl").read_text().splitlines()
+    lines_part = (tmp_path / "part/trajectory.jsonl").read_text().splitlines()
+    # headers differ only in the generations target
+    h_full, h_part = json.loads(lines_full[0]), json.loads(lines_part[0])
+    assert h_part.pop("generations") == 2 and h_full.pop("generations") == 3
+    assert h_full == h_part
+    assert lines_full[1:] == lines_part[1:]
+    assert resumed["generations_run"] == 1 and part["generations_run"] == 2
+    assert (tmp_path / "full/best.json").read_bytes() == \
+        (tmp_path / "part/best.json").read_bytes()
+    assert resumed["best"] == full["best"]
+    # resuming with a different space fingerprint must refuse
+    other = SearchSpace((
+        categorical("sched", policy_choice("scheduler"), ["fifo", "wfq"]),))
+    with pytest.raises(ValueError, match="resume mismatch"):
+        run_search(other, MIXES, T=T, seed=5, generations=4,
+                   out_dir=tmp_path / "part", resume=True)
