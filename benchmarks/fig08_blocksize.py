@@ -24,23 +24,26 @@ BLOCK_SIZES = [64, 128, 256, 512, 1024, 4096]
 T = 12_000
 
 
-def experiment(quick: bool = True,
-               trace_backend: str = "device") -> Experiment:
+def experiment(quick: bool = True, trace_backend: str = "device",
+               kernel_backend: str = "xla") -> Experiment:
     return Experiment(
         name="fig08_blocksize", T=T,
-        base=fam_replace(FamConfig(), num_nodes=1),
+        base=fam_replace(FamConfig(), num_nodes=1,
+                         kernel_backend=kernel_backend),
         trace_backend=trace_backend,
         axes=(config_axis("block", BLOCK_SIZES, param="block_bytes"),
               workload_axis(workloads(quick)),
               flag_axis("variant", {"base": BASELINE, "dram": DRAM})))
 
 
-def run(quick: bool = True, trace_backend: str = "device"):
+def run(quick: bool = True, trace_backend: str = "device",
+        kernel_backend: str = "xla"):
     wls = workloads(quick)
     # assert_compiles: the runtime sanitizer proves the one-executable
     # promise — actual XLA compiles == accounted groups (== 1 when cold)
-    res = experiment(quick, trace_backend).run(cross_check_shard=True,
-                                               assert_compiles=True)
+    res = experiment(quick, trace_backend,
+                     kernel_backend).run(cross_check_shard=True,
+                                         assert_compiles=True)
     info = res.info
     assert info.planned_groups == 1, info.groups  # dynamic geometry: 1 compile
 

@@ -18,7 +18,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (ADAPT, BASELINE, CORE, DRAM, FamConfig,
-                               geomean, info_row, save_rows, workloads)
+                               fam_replace, geomean, info_row, save_rows,
+                               workloads)
 from repro.experiments import Experiment, flag_axis, nodes_axis, workload_axis
 
 T = 10_000
@@ -26,19 +27,21 @@ NODE_COUNTS = (1, 2, 4)
 VARIANTS = {"base": BASELINE, "core": CORE, "dram": DRAM, "adapt": ADAPT}
 
 
-def experiment(quick: bool = True,
-               trace_backend: str = "device") -> Experiment:
+def experiment(quick: bool = True, trace_backend: str = "device",
+               kernel_backend: str = "xla") -> Experiment:
     return Experiment(
-        name="fig10_bw_adaptation", T=T, base=FamConfig(),
+        name="fig10_bw_adaptation", T=T,
+        base=fam_replace(FamConfig(), kernel_backend=kernel_backend),
         trace_backend=trace_backend,
         axes=(nodes_axis(NODE_COUNTS),
               workload_axis(workloads(quick)),
               flag_axis("variant", VARIANTS)))
 
 
-def run(quick: bool = True, trace_backend: str = "device"):
+def run(quick: bool = True, trace_backend: str = "device",
+        kernel_backend: str = "xla"):
     wls = workloads(quick)
-    res = experiment(quick, trace_backend).run()
+    res = experiment(quick, trace_backend, kernel_backend).run()
     info = res.info
 
     rows = []

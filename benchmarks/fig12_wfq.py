@@ -26,8 +26,8 @@ from typing import Mapping, Optional
 
 import numpy as np
 
-from benchmarks.common import (DRAM, WFQ, FamConfig, geomean, info_row,
-                               save_rows, workloads)
+from benchmarks.common import (DRAM, WFQ, FamConfig, fam_replace, geomean,
+                               info_row, save_rows, workloads)
 from repro.experiments import (Experiment, PolicySet, flag_axis, nodes_axis,
                                policy_axis, workload_axis)
 
@@ -51,10 +51,11 @@ def _baseline_label(policies: Mapping[str, PolicySet]) -> str:
         f"({default.describe()}, no overrides); got {sorted(policies)}")
 
 
-def experiment(quick: bool = True,
-               trace_backend: str = "device") -> Experiment:
+def experiment(quick: bool = True, trace_backend: str = "device",
+               kernel_backend: str = "xla") -> Experiment:
     return Experiment(
-        name="fig12_wfq", T=T, base=FamConfig(),
+        name="fig12_wfq", T=T,
+        base=fam_replace(FamConfig(), kernel_backend=kernel_backend),
         trace_backend=trace_backend,
         axes=(nodes_axis(NODE_COUNTS),
               workload_axis(workloads(quick)),
@@ -62,15 +63,17 @@ def experiment(quick: bool = True,
 
 
 def policy_experiment(policies: Mapping[str, PolicySet], quick: bool = True,
-                      trace_backend: str = "device") -> Experiment:
+                      trace_backend: str = "device",
+                      kernel_backend: str = "xla") -> Experiment:
     """The fig12 grid with the flag-variant axis replaced by a policy
     axis: nodes x workloads x PolicySet combos, prefetching enabled
     (flags=DRAM). Same-tag combos (spp+fifo, spp+wfq, any weight) share a
     compile group per node count; combos with a different traced program
     (strict, nextline) plan into their own groups."""
     return Experiment(
-        name="fig12_wfq_policies", T=T, base=FamConfig(), flags=DRAM,
-        trace_backend=trace_backend,
+        name="fig12_wfq_policies", T=T,
+        base=fam_replace(FamConfig(), kernel_backend=kernel_backend),
+        flags=DRAM, trace_backend=trace_backend,
         axes=(nodes_axis(NODE_COUNTS),
               workload_axis(workloads(quick)),
               policy_axis(dict(policies))))
@@ -111,11 +114,13 @@ def _rows_for(res, wls, variants, name_of, info):
 
 
 def run(quick: bool = True, trace_backend: str = "device",
-        policies: Optional[Mapping[str, PolicySet]] = None):
+        policies: Optional[Mapping[str, PolicySet]] = None,
+        kernel_backend: str = "xla"):
     wls = workloads(quick)
     if policies is not None:
-        return _run_policies(policies, wls, quick, trace_backend)
-    res = experiment(quick, trace_backend).run()
+        return _run_policies(policies, wls, quick, trace_backend,
+                             kernel_backend)
+    res = experiment(quick, trace_backend, kernel_backend).run()
     info = res.info
     variants = {f"w{w_}": ({"variant": f"w{w_}"}, {"variant": "fifo"})
                 for w_ in WEIGHTS}
@@ -129,9 +134,10 @@ def run(quick: bool = True, trace_backend: str = "device",
 
 
 def _run_policies(policies: Mapping[str, PolicySet], wls, quick: bool,
-                  trace_backend: str):
+                  trace_backend: str, kernel_backend: str = "xla"):
     baseline = _baseline_label(policies)
-    res = policy_experiment(policies, quick, trace_backend).run()
+    res = policy_experiment(policies, quick, trace_backend,
+                            kernel_backend).run()
     info = res.info
     variants = {label: ({"policy": label}, {"policy": baseline})
                 for label in policies if label != baseline}

@@ -23,7 +23,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (ADAPT, BASELINE, CORE, DRAM, WFQ, FamConfig,
-                               geomean, info_row, save_rows,
+                               fam_replace, geomean, info_row, save_rows,
                                trace_gen_compare)
 from repro.experiments import Experiment, flag_axis, mix_axis
 
@@ -47,18 +47,20 @@ def _mixes(quick: bool):
     return dict(list(MIXES.items())[:4]) if quick else MIXES
 
 
-def experiment(quick: bool = True,
-               trace_backend: str = "device") -> Experiment:
+def experiment(quick: bool = True, trace_backend: str = "device",
+               kernel_backend: str = "xla") -> Experiment:
     return Experiment(
-        name="fig14_mixes", T=T, base=FamConfig(),
+        name="fig14_mixes", T=T,
+        base=fam_replace(FamConfig(), kernel_backend=kernel_backend),
         trace_backend=trace_backend,
         axes=(mix_axis(_mixes(quick)),
               flag_axis("variant", {"base": BASELINE, **CONFIGS})))
 
 
-def run(quick: bool = True, trace_backend: str = "device"):
+def run(quick: bool = True, trace_backend: str = "device",
+        kernel_backend: str = "xla"):
     mixes = _mixes(quick)
-    exp = experiment(quick, trace_backend)
+    exp = experiment(quick, trace_backend, kernel_backend)
     res = exp.run()
     info = res.info
     if trace_backend == "device":

@@ -16,8 +16,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (ADAPT, CORE, DRAM, WFQ, FamConfig, geomean,
-                               info_row, save_rows, workloads)
+from benchmarks.common import (ADAPT, CORE, DRAM, WFQ, FamConfig,
+                               fam_replace, geomean, info_row, save_rows,
+                               workloads)
 from repro.core.famsim import SimFlags
 from repro.experiments import Experiment, config_axis, flag_axis, workload_axis
 
@@ -32,19 +33,21 @@ def _wls(quick: bool):
     return workloads(quick)[:4] if quick else workloads(False)
 
 
-def experiment(quick: bool = True,
-               trace_backend: str = "device") -> Experiment:
+def experiment(quick: bool = True, trace_backend: str = "device",
+               kernel_backend: str = "xla") -> Experiment:
     return Experiment(
-        name="fig15_allocation", T=T, base=FamConfig(), nodes=4,
-        trace_backend=trace_backend,
+        name="fig15_allocation", T=T,
+        base=fam_replace(FamConfig(), kernel_backend=kernel_backend),
+        nodes=4, trace_backend=trace_backend,
         axes=(config_axis("ratio", RATIOS, param="allocation_ratio"),
               workload_axis(_wls(quick)),
               flag_axis("variant", {"local": LOCAL, **dict(VARIANTS)})))
 
 
-def run(quick: bool = True, trace_backend: str = "device"):
+def run(quick: bool = True, trace_backend: str = "device",
+        kernel_backend: str = "xla"):
     wls = _wls(quick)
-    res = experiment(quick, trace_backend).run()
+    res = experiment(quick, trace_backend, kernel_backend).run()
     info = res.info
 
     rows = []

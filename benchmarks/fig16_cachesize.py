@@ -20,7 +20,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (BASELINE, WFQ, FamConfig, engine_row,
-                               geomean, save_rows, workloads)
+                               fam_replace, geomean, save_rows, workloads)
 from repro.experiments import Experiment, config_axis, flag_axis, workload_axis
 
 T = 16_000
@@ -29,11 +29,12 @@ T = 16_000
 SIZES_KB = (256, 512, 1024, 2048)
 
 
-def experiment(quick: bool = True,
-               trace_backend: str = "device") -> Experiment:
+def experiment(quick: bool = True, trace_backend: str = "device",
+               kernel_backend: str = "xla") -> Experiment:
     return Experiment(
-        name="fig16_cachesize", T=T, base=FamConfig(), nodes=4,
-        trace_backend=trace_backend,
+        name="fig16_cachesize", T=T,
+        base=fam_replace(FamConfig(), kernel_backend=kernel_backend),
+        nodes=4, trace_backend=trace_backend,
         axes=(config_axis("cache", [kb << 10 for kb in SIZES_KB],
                           param="dram_cache_bytes",
                           labels=[str(kb) for kb in SIZES_KB]),
@@ -41,12 +42,14 @@ def experiment(quick: bool = True,
               flag_axis("variant", {"base": BASELINE, "wfq2": WFQ(2)})))
 
 
-def run(quick: bool = True, trace_backend: str = "device"):
+def run(quick: bool = True, trace_backend: str = "device",
+        kernel_backend: str = "xla"):
     wls = workloads(quick)
     # assert_compiles: the runtime sanitizer proves the one-executable
     # promise — actual XLA compiles == accounted groups (== 1 when cold)
-    res = experiment(quick, trace_backend).run(cross_check_shard=True,
-                                               assert_compiles=True)
+    res = experiment(quick, trace_backend,
+                     kernel_backend).run(cross_check_shard=True,
+                                         assert_compiles=True)
     info = res.info
     assert info.planned_groups == 1, info.groups  # dynamic geometry: 1 compile
 

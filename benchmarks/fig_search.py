@@ -71,13 +71,18 @@ def default_space() -> SearchSpace:
 
 def full_space() -> SearchSpace:
     """The default space plus RECOMPILING dimensions — prefetcher choice
-    (``spp`` vs ``nextline`` trace different programs) and the prefetch
-    degree (a geometry-free shape field): exercises the static/traced
-    split and the compile-cost-penalized fitness."""
+    (``spp`` vs ``nextline`` trace different programs), the prefetch
+    degree (a geometry-free shape field), and the cache-engine backend
+    (xla vs the fused Pallas kernel: bit-identical metrics, different
+    traced program — on CPU a pure compile-cost probe, on TPU a genuine
+    throughput knob): exercises the static/traced split and the
+    compile-cost-penalized fitness."""
     return SearchSpace(default_space().dimensions + (
         categorical("prefetcher", policy_choice("prefetch"),
                     ["spp", "nextline"]),
         integer("prefetch_degree", cfg_field("prefetch_degree"), 1, 4),
+        categorical("kernel_backend", cfg_field("kernel_backend"),
+                    ["xla", "pallas"]),
     ))
 
 

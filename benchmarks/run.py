@@ -25,6 +25,18 @@ driver (``benchmarks.fig_search`` over ``repro.search``)::
     python -m benchmarks.run search --proposer evolutionary
     python -m benchmarks.run search --proposer random --generations 2
     python -m benchmarks.run search --replay results/search/best.json
+
+``bench`` runs the tracked famsim throughput benchmark
+(``benchmarks.bench_famsim`` — see docs/performance.md)::
+
+    python -m benchmarks.run bench                    # both backends
+    python -m benchmarks.run bench --quick            # CI scale
+
+``--kernel-backend pallas`` routes the figures' cache engine through the
+fused Pallas kernel (bit-identical to the default ``xla`` path; see
+docs/performance.md)::
+
+    python -m benchmarks.run --kernel-backend pallas fig08
 """
 from __future__ import annotations
 
@@ -47,6 +59,11 @@ def main(argv=None) -> None:
         from benchmarks import fig_search
         fig_search.main(argv[1:])
         return
+    if argv and argv[0] == "bench":
+        # so does the throughput-benchmark subcommand
+        from benchmarks import bench_famsim
+        bench_famsim.main(argv[1:])
+        return
     ap = argparse.ArgumentParser(
         description="Run paper-figure benchmarks through repro.experiments")
     ap.add_argument("figures", nargs="*", metavar="figure",
@@ -58,6 +75,14 @@ def main(argv=None) -> None:
                     help="dry-run: print each figure's resolved compile "
                          "groups (key, point count, pad overhead) without "
                          "executing anything")
+    ap.add_argument("--kernel-backend", choices=("xla", "pallas"),
+                    default="xla",
+                    help="cache-engine implementation (a STATIC compile "
+                         "tag on every figure's base config): 'xla' keeps "
+                         "the classic hot path, 'pallas' routes the "
+                         "per-event DRAM-cache work through the fused "
+                         "kernel — bit-identical metrics either way (see "
+                         "docs/performance.md)")
     ap.add_argument("--trace-backend", choices=("device", "numpy"),
                     default="device",
                     help="trace synthesis backend: 'device' generates "
@@ -122,7 +147,8 @@ def main(argv=None) -> None:
                      "explicitly")
 
     if args.plan:
-        print_plans(figures, quick=not args.full, policies=combos)
+        print_plans(figures, quick=not args.full, policies=combos,
+                    kernel_backend=args.kernel_backend)
         return
 
     print("name,us_per_call,derived")
@@ -130,7 +156,8 @@ def main(argv=None) -> None:
         t0 = time.time()
         kw = {} if combos is None else {"policies": combos}
         rows = mod.run(quick=not args.full,
-                       trace_backend=args.trace_backend, **kw)
+                       trace_backend=args.trace_backend,
+                       kernel_backend=args.kernel_backend, **kw)
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.3f},\"{r['derived']}\"",
                   flush=True)
@@ -167,7 +194,8 @@ def policy_combos(specs, error):
     return combos
 
 
-def print_plans(figures, quick: bool, policies=None) -> None:
+def print_plans(figures, quick: bool, policies=None,
+                kernel_backend: str = "xla") -> None:
     """``--plan``: resolve and print every figure's compile groups without
     generating a trace or compiling anything. One summary line per figure
     (``<name>: G group(s), P points, E events (+X padded, O% overhead)``)
@@ -177,9 +205,11 @@ def print_plans(figures, quick: bool, policies=None) -> None:
     instead."""
     for key, mod in figures.items():
         if policies is not None:
-            plan = mod.policy_experiment(policies, quick=quick).plan()
+            plan = mod.policy_experiment(
+                policies, quick=quick, kernel_backend=kernel_backend).plan()
         else:
-            plan = mod.experiment(quick=quick).plan()
+            plan = mod.experiment(
+                quick=quick, kernel_backend=kernel_backend).plan()
         events = plan.events()
         padded = plan.padded_events()
         print(f"{plan.name}: {plan.num_groups} group(s), "

@@ -107,6 +107,11 @@ JIT_SCOPE = {
     # in-graph trace generation; the host-side param builders are out
     "repro/traces/device.py": _s(include={"node_generator",
                                           "_jitted_system"}),
+    # fused cache-step kernel package: only the dispatch wrapper runs
+    # under jit here; fused_replacement_mode is build-time validation on
+    # the policy OBJECT (Python control flow on static attrs is its
+    # job). kernel.py / ref.py opt whole-file in via the jit marker.
+    "repro/kernels/famsim_step/ops.py": _s(include={"cache_step"}),
 }
 
 #: files/dirs (suffix-matched) under the determinism lints

@@ -338,6 +338,13 @@ class FamConfig:
     # topology
     num_nodes: int = 1
     allocation_ratio: int = 8          # FAM:DRAM footprint ratio (§V-A def 4)
+    # cache-engine implementation (docs/performance.md): "xla" keeps the
+    # classic pure-XLA hot path, "pallas" routes the per-event DRAM-cache
+    # work (fills + demand probe/touch + redundancy probes) through the
+    # fused kernel in repro.kernels.famsim_step. A STATIC compile tag —
+    # it selects a different traced program, so it rides on
+    # geometry_free_shape() and splits compile groups.
+    kernel_backend: str = "xla"
 
     @property
     def num_sets(self) -> int:
@@ -367,7 +374,7 @@ class FamConfig:
                 self.spp_signature_bits, self.spp_pattern_entries,
                 self.spp_signature_entries, self.spp_max_lookahead,
                 self.core_pf_degree, self.completions_per_step,
-                self.core_fill_entries)
+                self.core_fill_entries, self.kernel_backend)
 
     def static_shape(self) -> Tuple:
         """The allocation-deciding subset of this config: this config's own

@@ -60,6 +60,8 @@ from repro.core.addresses import (PAGE_BITS, dyn_block_addr,
                                   dyn_blocks_per_page, dyn_split)
 from repro.core.fam_params import FamParams, stack_params
 from repro.core.throttle import ThrottleState  # noqa: F401 (compat)
+from repro.kernels.famsim_step import (KERNEL_BACKENDS, cache_step,
+                                       fused_replacement_mode)
 from repro.policies import DEFAULT_POLICY_SET, PolicySet, SimFlags
 
 __all__ = ["SimFlags", "PolicySet", "NodeState", "build_sim", "build_sweep",
@@ -152,28 +154,18 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
     live = jnp.asarray(live)
     clock = ns.clock + jnp.where(live, gap, 0.0)
 
-    # retire completed prefetches into the cache (bounded per step)
+    # retire completed prefetches into the cache (bounded per step).
+    # top_k indices are DISTINCT, so the per-slot fill blocks/enables can
+    # be gathered up front (value-identical to reading them inside the
+    # fill loop) and the queue drained with one scatter — the sequential
+    # part (same-set fills interact) lives in the cache engine.
     done = (ns.queue.block > 0) & (ns.queue.finish <= clock) & live
     score = jnp.where(done, -ns.queue.finish, -jnp.inf)
     _, idxs = jax.lax.top_k(score, cfg.completions_per_step)
-    cache = ns.cache
-    queue_block = ns.queue.block
-
-    def fill(i, carry):
-        cache, queue_block = carry
-        slot = idxs[i]
-        ok = done[slot] & (queue_block[slot] > 0)
-        blk = queue_block[slot] - 1
-        cache, _, _ = dc.insert(cache, blk, enable=ok,
-                                num_sets=eff_sets, ways=eff_ways,
-                                policy=repl)
-        queue_block = queue_block.at[slot].set(
-            jnp.where(ok, 0, queue_block[slot]))
-        return cache, queue_block
-
-    cache, queue_block = jax.lax.fori_loop(0, cfg.completions_per_step, fill,
-                                           (cache, queue_block))
-    queue = ns.queue._replace(block=queue_block)
+    fill_blocks = ns.queue.block[idxs] - 1
+    fill_ok = done[idxs] & (ns.queue.block[idxs] > 0)
+    queue = ns.queue._replace(block=ns.queue.block.at[idxs].set(
+        jnp.where(fill_ok, 0, ns.queue.block[idxs])))
 
     page, block_in_page = dyn_split(addr, bb)
     page = page.astype(jnp.int32)
@@ -188,18 +180,10 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
     cpb_hit = jnp.any(cb_match) & p.core_prefetch
     cpb_fin = jnp.max(jnp.where(cb_match, ns.core_buf_fin, 0.0))
 
-    # demand probe (masked out entirely when DRAM-cache prefetch is off)
-    hit, si, way = dc.lookup(cache, gblock, num_sets=eff_sets, ways=eff_ways)
-    hit = hit & is_fam & p.dram_prefetch
-    cache = dc.touch(cache, si, way, enable=hit, policy=repl)
-    inflight, inflight_fin = pq.contains(queue, gblock)
-    inflight = inflight & is_fam & ~hit & p.dram_prefetch
-    hit = hit & ~cpb_hit
-    inflight = inflight & ~cpb_hit
-    demand_to_fam = is_fam & ~hit & ~inflight & ~cpb_hit
-
     # prefetch-policy train + predict (FAM-bound LLC misses only, incl.
-    # core prefetch misses per paper §III; here the demand stream trains)
+    # core prefetch misses per paper §III; here the demand stream trains).
+    # Cache-independent, so it hoists above the cache ops value-identically
+    # — which lets ALL of this event's cache work go to the engine at once.
     pf_state, ctx = impls.prefetch.train(cfg, pf_pol, ns.pf, page,
                                          block_in_page,
                                          enable=is_fam & p.dram_prefetch)
@@ -208,12 +192,38 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
         cfg, pf_pol, pf_state, page, block_in_page, ctx,
         cfg.prefetch_degree, bpp)
 
-    def not_redundant(b):
-        h, _, _ = dc.lookup(cache, b, num_sets=eff_sets, ways=eff_ways)
-        infl, _ = pq.contains(queue, b)
-        return ~h & ~infl
+    # core (stride) prefetcher target addresses (cache-independent too)
+    line = (addr >> 6).astype(jnp.int32)
+    stride = line - ns.core_last
+    stride_ok = (stride == ns.core_stride) & (stride != 0) & \
+        (jnp.abs(stride) < 32)
+    cpf_lines = line + stride * (1 + jnp.arange(cfg.core_pf_degree,
+                                                dtype=jnp.int32))
+    cpf_pages = (cpf_lines >> (PAGE_BITS - 6)).astype(jnp.int32)
+    cpf_fam = jax.vmap(lambda pg: _is_fam_page(p.allocation_ratio, pg))(
+        cpf_pages) & ~p.all_local
+    cpf_valid = stride_ok & cpf_fam & p.core_prefetch & live
+    cpf_gblock = (cpf_lines >> (bb - 6)).astype(jnp.int32)
 
-    fresh = jax.vmap(not_redundant)(cand_gblock)
+    # the event's ENTIRE cache interaction, fused (docs/performance.md):
+    # C fill inserts -> demand probe + touch -> D+CPF pure probes. The
+    # demand probe is masked out entirely when DRAM-cache prefetch is off.
+    cache, hit, probe_hits = cache_step(
+        ns.cache, fill_blocks, fill_ok, gblock,
+        is_fam & p.dram_prefetch, jnp.concatenate([cand_gblock,
+                                                   cpf_gblock]),
+        eff_sets, eff_ways, policy=repl, backend=cfg.kernel_backend)
+    cand_hit = probe_hits[:cfg.prefetch_degree]
+    cpf_raw_hits = probe_hits[cfg.prefetch_degree:]
+
+    inflight, inflight_fin = pq.contains(queue, gblock)
+    inflight = inflight & is_fam & ~hit & p.dram_prefetch
+    hit = hit & ~cpb_hit
+    inflight = inflight & ~cpb_hit
+    demand_to_fam = is_fam & ~hit & ~inflight & ~cpb_hit
+
+    cand_inflight = jax.vmap(lambda b: pq.contains(queue, b)[0])(cand_gblock)
+    fresh = ~cand_hit & ~cand_inflight
     pf_valid = cand_valid & fresh & is_fam & p.dram_prefetch
     pf_blocks = cand_gblock
     # adaptation: grant tokens for the surviving candidates (the rate
@@ -229,21 +239,8 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
     free = jnp.sum((queue.block == 0).astype(jnp.int32))
     pf_valid = pf_valid & (jnp.cumsum(pf_valid.astype(jnp.int32)) <= free)
 
-    # core (stride) prefetcher — 64B lines into LLC; may hit the DRAM cache
-    line = (addr >> 6).astype(jnp.int32)
-    stride = line - ns.core_last
-    stride_ok = (stride == ns.core_stride) & (stride != 0) & \
-        (jnp.abs(stride) < 32)
-    cpf_lines = line + stride * (1 + jnp.arange(cfg.core_pf_degree,
-                                                dtype=jnp.int32))
-    cpf_pages = (cpf_lines >> (PAGE_BITS - 6)).astype(jnp.int32)
-    cpf_fam = jax.vmap(lambda pg: _is_fam_page(p.allocation_ratio, pg))(
-        cpf_pages) & ~p.all_local
-    cpf_valid = stride_ok & cpf_fam & p.core_prefetch & live
-    cpf_gblock = (cpf_lines >> (bb - 6)).astype(jnp.int32)
-    cpf_hits = jax.vmap(
-        lambda b: dc.lookup(cache, b, num_sets=eff_sets, ways=eff_ways)[0]
-    )(cpf_gblock) & p.dram_prefetch
+    # core prefetches may hit the DRAM cache (probed by the engine above)
+    cpf_hits = cpf_raw_hits & p.dram_prefetch
     cpf_to_fam = cpf_valid & ~cpf_hits
 
     ns = ns._replace(clock=clock, pf=pf_state, cache=cache, queue=queue,
@@ -362,6 +359,14 @@ def _make_step(cfg: FamConfig, num_nodes: int,
     """
     policies = _resolve(policies)
     impls = policies.impls()
+    if cfg.kernel_backend not in KERNEL_BACKENDS:
+        raise ValueError(
+            f"FamConfig.kernel_backend={cfg.kernel_backend!r}; expected "
+            f"one of {KERNEL_BACKENDS}")
+    if cfg.kernel_backend == "pallas":
+        # fail at build time (not mid-trace) for policies the fused
+        # kernel cannot express (random needs threefry in the update)
+        fused_replacement_mode(impls.replacement)
     D = cfg.prefetch_degree
     CPF = cfg.core_pf_degree
 

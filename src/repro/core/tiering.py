@@ -32,6 +32,9 @@ from repro.configs.base import FamConfig
 from repro.core import dram_cache as dc
 from repro.core import spp as spp_lib
 from repro.core.wfq import DEMAND, PREFETCH, WfqState, init_wfq, schedule_batch
+from repro.kernels.block_gather.kernel import block_gather
+from repro.kernels.cache_lookup.kernel import cache_lookup
+from repro.kernels.cache_lookup.ref import cache_lookup_ref
 
 
 class TierState(NamedTuple):
@@ -177,11 +180,34 @@ class TieredBlockPool:
             ranks = jnp.cumsum(valid.astype(jnp.int32)) - 1
             st, _ = jax.lax.scan(pf_one, st, (cand, valid, ranks))
 
-        slots = st.slot_of_block[ids]
+        hit, _, kslot = self.probe(st, ids)
+        # every demand id was just filled, so the metadata probe resolves
+        # them all; the side table only backs up a (never-taken) miss
+        slots = jnp.where(hit, kslot, st.slot_of_block[ids])
         return st, slots
 
+    def probe(self, st: TierState, ids: jax.Array):
+        """Batched residency probe over the set-assoc metadata: the
+        paper's Fig. 6 retrieval (hash -> tag row -> compare), returning
+        (hit, way, slot) per id with slot = set*ways + way = the fast-
+        pool data slot. ``cfg.kernel_backend`` routes it through the
+        Pallas ``cache_lookup`` kernel (one VMEM-staged tag row per
+        probe; interpreted off-TPU) or the pure-XLA reference — bit-
+        identical either way (tests/test_kernels.py)."""
+        ids = ids.astype(jnp.int32)
+        if self.cfg.kernel_backend == "pallas":
+            return cache_lookup(st.cache.tags, ids,
+                                interpret=jax.default_backend() != "tpu")
+        return cache_lookup_ref(st.cache.tags, ids)
+
     def read(self, st: TierState, slots: jax.Array) -> jax.Array:
-        """Gather blocks from the fast region (Pallas block_gather target)."""
+        """Gather blocks from the fast region. ``cfg.kernel_backend``
+        routes through the Pallas ``block_gather`` kernel (streams one
+        pool block per grid cell HBM->VMEM via scalar-prefetched slot
+        indices) or a plain XLA gather — bit-identical either way."""
+        if self.cfg.kernel_backend == "pallas":
+            return block_gather(st.fast, slots.astype(jnp.int32),
+                                interpret=jax.default_backend() != "tpu")
         return st.fast[slots]
 
     def hit_rate(self, st: TierState) -> jax.Array:

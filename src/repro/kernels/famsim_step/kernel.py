@@ -1,0 +1,168 @@
+# analysis-scope: jit
+"""Pallas kernel: the fused per-event DRAM-cache step (metadata path).
+
+One ``pallas_call`` per node per event does everything the pure-XLA path
+spreads over ~15 gather/scatter ops: C sequential prefetch-fill inserts
+(vacancy scan + LRU/SRRIP victim selection + row update), the demand
+probe with its recency touch, and P pure redundancy probes — all against
+the padded ``(sets, ways)`` int32 tag/recency arrays staged once, with
+the *effective* geometry arriving as traced scalars (set hash modulo
+``num_sets``, way ops masked to the first ``ways`` lanes — the padded
+region is never read as valid and never written, exactly like
+``repro.core.dram_cache``).
+
+The replacement policy is a STATIC compile tag: ``mode="lru"`` is the
+classic stamp-LRU, ``mode="srrip"`` the 2-bit-RRPV path (hit -> 0,
+insert at ``max_rrpv - 1``, victim = aged max-RRPV way). ``random``
+replacement needs threefry and stays XLA-only (``ops.cache_step``
+raises). Booleans cross the kernel boundary as int32.
+
+Off-TPU callers pass ``interpret=True`` (tier-1 and the bench-smoke CI
+job run this mode); it is bit-identical to :func:`ref.cache_step_ref`
+by property test. The kernel composes with ``vmap`` over nodes and
+systems and with ``lax.scan`` over events — famsim invokes it per node
+inside its vmapped phase-A.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.cache_lookup.ref import HASH_MULT
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _si_of(blk, num_sets_u32):
+    """Set hash modulo the effective set count (dram_cache._set_index)."""
+    h = (blk.astype(jnp.uint32) * jnp.uint32(HASH_MULT)) >> 7
+    return (h % num_sets_u32).astype(jnp.int32)
+
+
+def _kernel(tags_ref, lru_ref, stamp_ref, fills_ref, fen_ref, q_ref,
+            qen_ref, probes_ref, eff_ref,
+            otags_ref, olru_ref, ostamp_ref, ohit_ref, ophits_ref,
+            *, mode: str, max_rrpv: int, ways_pad: int):
+    otags_ref[...] = tags_ref[...]
+    olru_ref[...] = lru_ref[...]
+    ns_u = eff_ref[0].astype(jnp.uint32)
+    eff_ways = eff_ref[1]
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, ways_pad), 1)
+    wmask = col < eff_ways
+
+    def insert_one(blk, en, stamp):
+        si = _si_of(blk, ns_u)
+        row_t = pl.load(otags_ref, (pl.ds(si, 1), slice(None)))
+        row_l = pl.load(olru_ref, (pl.ds(si, 1), slice(None)))
+        tag = blk + 1
+        already = (row_t == tag) & wmask
+        vacant = (row_t == 0) & wmask
+        has = jnp.any(already)
+        has_vacant = jnp.any(vacant)
+        stamp = stamp + en
+        en_b = en > 0
+        am_already = jnp.argmax(already, axis=1)[0]
+        am_vacant = jnp.argmax(vacant, axis=1)[0]
+        if mode == "lru":
+            victim = jnp.where(wmask, row_l, _I32_MAX)
+            way = jnp.where(has, am_already,
+                            jnp.where(has_vacant, am_vacant,
+                                      jnp.argmin(victim, axis=1)[0]))
+            onehot = col == way.astype(jnp.int32)
+            sel = en_b & onehot
+            new_t = jnp.where(sel, tag, row_t)
+            new_l = jnp.where(sel, stamp, row_l)
+        else:            # srrip: recency field holds the 2-bit RRPV
+            m = jnp.int32(max_rrpv)
+            eff_l = jnp.where(wmask, row_l, 0)
+            bump = jnp.maximum(m - jnp.max(eff_l), 0)
+            aged = jnp.where(wmask, row_l + bump, row_l)
+            evict_way = jnp.argmax(jnp.where(wmask, aged, -1), axis=1)[0]
+            way = jnp.where(has, am_already,
+                            jnp.where(has_vacant, am_vacant, evict_way))
+            onehot = col == way.astype(jnp.int32)
+            # aging applies only on the eviction path; a redundant fill
+            # of a present block re-references (promotes) it — exactly
+            # dram_cache.insert's generalized-policy path
+            base = jnp.where(has | has_vacant, row_l, aged)
+            fill_val = jnp.where(has, jnp.int32(0), m - 1)
+            new_row = jnp.where(onehot, fill_val, base)
+            new_t = jnp.where(en_b & onehot, tag, row_t)
+            new_l = jnp.where(en_b, new_row, row_l)
+        pl.store(otags_ref, (pl.ds(si, 1), slice(None)), new_t)
+        pl.store(olru_ref, (pl.ds(si, 1), slice(None)), new_l)
+        return stamp
+
+    # 1) retire prefetch fills (sequential: same-set fills interact)
+    def fill_body(i, stamp):
+        blk = pl.load(fills_ref, (pl.ds(i, 1),))[0]
+        en = pl.load(fen_ref, (pl.ds(i, 1),))[0]
+        return insert_one(blk, en, stamp)
+
+    stamp = jax.lax.fori_loop(0, fills_ref.shape[0], fill_body,
+                              stamp_ref[0])
+
+    # 2) demand probe + recency touch on the post-fill state
+    q = q_ref[0]
+    si = _si_of(q, ns_u)
+    row_t = pl.load(otags_ref, (pl.ds(si, 1), slice(None)))
+    match = (row_t == q + 1) & wmask
+    hit = jnp.any(match) & (qen_ref[0] > 0)
+    way = jnp.argmax(match, axis=1)[0].astype(jnp.int32)
+    hit_i = hit.astype(jnp.int32)
+    stamp = stamp + hit_i
+    hit_val = stamp if mode == "lru" else jnp.int32(0)
+    row_l = pl.load(olru_ref, (pl.ds(si, 1), slice(None)))
+    new_l = jnp.where(hit & (col == way), hit_val, row_l)
+    pl.store(olru_ref, (pl.ds(si, 1), slice(None)), new_l)
+    ohit_ref[0] = hit_i
+    ostamp_ref[0] = stamp
+
+    # 3) pure probes (touch never writes tags, so these are order-free)
+    def probe_body(j, carry):
+        b = pl.load(probes_ref, (pl.ds(j, 1),))[0]
+        row = pl.load(otags_ref, (pl.ds(_si_of(b, ns_u), 1), slice(None)))
+        h = jnp.any((row == b + 1) & wmask)
+        pl.store(ophits_ref, (pl.ds(j, 1),),
+                 h.astype(jnp.int32).reshape(1))
+        return carry
+
+    jax.lax.fori_loop(0, probes_ref.shape[0], probe_body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "max_rrpv", "interpret"))
+def fused_cache_step(tags, lru, stamp, fill_blocks, fill_enable,
+                     demand_block, demand_enable, probe_blocks,
+                     num_sets, ways, *, mode: str = "lru",
+                     max_rrpv: int = 0, interpret: bool = False):
+    """tags/lru: (S_pad, W_pad) int32; stamp: () int32; fills: (C,);
+    demand: scalars; probe_blocks: (P,); num_sets/ways: effective
+    geometry (traced ok). Returns (tags, lru, stamp, hit, probe_hits)
+    with the same semantics as :func:`ref.cache_step_ref`."""
+    s_pad, w_pad = tags.shape
+    kern = functools.partial(_kernel, mode=mode, max_rrpv=max_rrpv,
+                             ways_pad=w_pad)
+    p = probe_blocks.shape[0]
+    eff = jnp.stack([jnp.asarray(num_sets).astype(jnp.int32),
+                     jnp.asarray(ways).astype(jnp.int32)])
+    tags2, lru2, stamp2, hit, phits = pl.pallas_call(
+        kern,
+        out_shape=[jax.ShapeDtypeStruct((s_pad, w_pad), jnp.int32),
+                   jax.ShapeDtypeStruct((s_pad, w_pad), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32),
+                   jax.ShapeDtypeStruct((p,), jnp.int32)],
+        interpret=interpret,
+    )(tags, lru,
+      jnp.asarray(stamp, jnp.int32).reshape(1),
+      jnp.asarray(fill_blocks, jnp.int32),
+      jnp.asarray(fill_enable).astype(jnp.int32),
+      jnp.asarray(demand_block, jnp.int32).reshape(1),
+      jnp.asarray(demand_enable).astype(jnp.int32).reshape(1),
+      jnp.asarray(probe_blocks, jnp.int32),
+      eff)
+    return tags2, lru2, stamp2[0], hit[0] > 0, phits > 0

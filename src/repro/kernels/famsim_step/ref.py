@@ -1,0 +1,52 @@
+# analysis-scope: jit
+"""Pure-XLA reference for the fused cache step — the classic famsim path.
+
+This is not a shadow of the kernel: it IS the default (``xla``) backend,
+calling the exact :mod:`repro.core.dram_cache` op sequence the classic
+simulator inlined in ``famsim._phase_a``, in the same order — sequential
+fills, demand probe + recency touch, then the pure redundancy probes —
+so the restructured famsim stays byte-identical to the pre-fusion
+artifacts. The Pallas kernel (:mod:`repro.kernels.famsim_step.kernel`)
+must match this function bit for bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dram_cache as dc
+
+
+def cache_step_ref(cache: dc.CacheState, fill_blocks, fill_enable,
+                   demand_block, demand_enable, probe_blocks,
+                   num_sets, ways, policy=None):
+    """One event's cache work on one node's (padded) metadata state.
+
+    fill_blocks/fill_enable: (C,) retired prefetch fills (block addr,
+        insert-enable) — the caller gathers them from DISTINCT queue
+        slots, so sequential insertion order is the only coupling.
+    demand_block/demand_enable: the demand probe; ``demand_enable``
+        masks the hit (and therefore the recency touch), not the probe.
+    probe_blocks: (P,) pure tag-only probes (prefetch-candidate
+        redundancy + core-prefetch hits), evaluated on the post-touch
+        state — a touch never changes tags, so these are order-free.
+    num_sets/ways: effective geometry scalars (may be traced) masking
+        the padded arrays; ``policy``: a *bound* replacement policy
+        (None = classic LRU).
+
+    Returns (cache, hit, probe_hits) with hit already enable-masked.
+    """
+    def fill(i, c):
+        c2, _, _ = dc.insert(c, fill_blocks[i], enable=fill_enable[i],
+                             num_sets=num_sets, ways=ways, policy=policy)
+        return c2
+
+    cache = jax.lax.fori_loop(0, fill_blocks.shape[0], fill, cache)
+    raw, si, way = dc.lookup(cache, demand_block,
+                             num_sets=num_sets, ways=ways)
+    hit = raw & jnp.asarray(demand_enable)
+    cache = dc.touch(cache, si, way, enable=hit, policy=policy)
+    probe_hits = jax.vmap(
+        lambda b: dc.lookup(cache, b, num_sets=num_sets, ways=ways)[0]
+    )(probe_blocks)
+    return cache, hit, probe_hits

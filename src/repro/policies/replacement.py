@@ -35,6 +35,8 @@ class LruReplacement:
     kind = "replacement"
     name = "lru"
     compile_tag = "replacement:lru"
+    # the fused famsim_step kernel expresses this policy as a static mode
+    fused_mode = "lru"
 
     def params_of(self, cfg):
         return {}
@@ -77,6 +79,8 @@ class RandomReplacement:
 
 
 class _SrripBound:
+    fused_mode = "srrip"
+
     def __init__(self, max_rrpv):
         self.max_rrpv = max_rrpv
 
@@ -101,6 +105,7 @@ class SrripReplacement:
     kind = "replacement"
     name = "srrip"
     compile_tag = "replacement:srrip"
+    fused_mode = "srrip"
 
     MAX_RRPV = 3
 

@@ -55,6 +55,10 @@ STATIC_CFG_FIELDS = frozenset({
     "spp_pattern_entries", "spp_signature_entries", "spp_max_lookahead",
     "core_pf_degree", "completions_per_step", "core_fill_entries",
     "num_nodes",
+    # the cache-engine implementation (xla / fused pallas) selects a
+    # different traced program — bit-identical outputs, but a move along
+    # it always recompiles (see docs/performance.md)
+    "kernel_backend",
 })
 
 #: traced cfg fields that still size the group's PADDED allocation:

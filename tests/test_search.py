@@ -125,6 +125,16 @@ def test_split_static_vs_traced():
             integer("b", cfg_field("prefetch_degree"), 2, 8)))
 
 
+def test_kernel_backend_dimension_is_static():
+    """The cache-engine backend selects a different traced program
+    (rides ``geometry_free_shape``), so a move along it must be priced
+    as a recompile by the static/traced split."""
+    sp = SearchSpace((categorical("kb", cfg_field("kernel_backend"),
+                                  ["xla", "pallas"]),))
+    assert sp.split(FamConfig()) == (("kb",), ())
+    assert sp.static_key({"kb": "pallas"}) == (("kb", "pallas"),)
+
+
 def test_axis_fields_choice_before_param_and_eager_validation():
     sp = SearchSpace((
         categorical("sched", policy_choice("scheduler"), ["fifo", "wfq"]),
