@@ -41,7 +41,9 @@ from pathlib import Path
 import numpy as np
 
 from benchmarks import fig08_blocksize
-from benchmarks.common import BASELINE, DRAM, save_rows, workloads
+from benchmarks.common import (BASELINE, DRAM, obs_tracer, save_rows,
+                               workloads)
+from repro.obs.spans import maybe_span
 from repro.experiments import (config_axis, execute, flag_axis,
                                workload_axis)
 from repro.experiments import executor as _ex
@@ -95,10 +97,12 @@ def _measure(backend: str, quick: bool, repeats: int) -> dict:
     """Run the fig08-scale experiment ``repeats`` times on ``backend``;
     best-of steady-state throughput from the executor's accounting."""
     exp = _experiment(backend, quick)
-    plan = exp.plan()
+    with maybe_span("plan", experiment=exp.name, backend=backend):
+        plan = exp.plan()
     runs, result, compile_s = [], None, 0.0
-    for _ in range(max(repeats, 1)):
-        result = execute(plan, assert_compiles=True)
+    for rep in range(max(repeats, 1)):
+        with maybe_span("repeat", backend=backend, repeat=rep):
+            result = execute(plan, assert_compiles=True)
         runs.append(result.info.run_s)
         compile_s += result.info.compile_s
     info = result.info
@@ -176,11 +180,16 @@ def main(argv=None) -> None:
                          "is reported (default: 3)")
     ap.add_argument("--no-roofline", action="store_true",
                     help="skip the compiled-executable roofline report")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="record a host span timeline (plan/repeat/compile/"
+                         "run/fetch per backend) to results/trace/"
+                         "bench_famsim.json — see docs/observability.md")
     args = ap.parse_args(argv)
 
     backends = KERNEL_BACKENDS if args.kernel_backend == "both" \
         else (args.kernel_backend,)
-    measured = [_measure(b, args.quick, args.repeats) for b in backends]
+    with obs_tracer("bench_famsim", int(args.telemetry)):
+        measured = [_measure(b, args.quick, args.repeats) for b in backends]
 
     digests = {m["backend"]: m["digest"] for m in measured}
     if len(measured) > 1:

@@ -37,6 +37,7 @@ from __future__ import annotations
 import json
 import time
 import warnings
+from contextlib import contextmanager
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -350,6 +351,82 @@ def trace_gen_compare(plan) -> dict:
         "host_speedup": round(host_np / max(host_dev, 1e-9), 1),
         "device_not_slower": bool(host_dev <= host_np),
     }
+
+
+# ---------------------------------------------------------------------------
+# observability surfacing (repro.obs — docs/observability.md)
+# ---------------------------------------------------------------------------
+
+TRACE_DIR = RESULTS.parent / "trace"
+TELEMETRY_DIR = RESULTS.parent / "telemetry"
+
+
+@contextmanager
+def obs_tracer(figure: str, telemetry: int):
+    """Install a host span tracer for one figure run (``--telemetry``).
+
+    With ``telemetry == 0`` this is an exact no-op (the default path
+    records nothing). Otherwise every instrumented layer under the block
+    — Experiment.plan, the executor's compile/trace_stage/run/fetch —
+    lands in one nested timeline saved to ``results/trace/<figure>.json``
+    (Chrome trace-event JSON; load it in ui.perfetto.dev)."""
+    if not telemetry:
+        yield None
+        return
+    from repro.obs import SpanTracer, set_tracer
+    tracer = SpanTracer(process_name=f"benchmarks:{figure}")
+    prev = set_tracer(tracer)
+    try:
+        with tracer.span(figure, cat="figure", telemetry=telemetry):
+            yield tracer
+    finally:
+        set_tracer(prev)
+        tracer.save(TRACE_DIR / f"{figure}.json")
+
+
+def save_telemetry(figure: str, result: ExperimentResult,
+                   n_windows: int) -> Optional[Path]:
+    """Dump every point's windowed counter matrix to
+    ``results/telemetry/<figure>.json`` — the payload ``python -m
+    repro.obs report`` renders. Returns None when the result carries no
+    telemetry (the flag was off)."""
+    from repro.obs import COUNTERS, LAT_EDGES
+    points = []
+    for pt in result.points:
+        m = result.metrics_for(pt)
+        if "telemetry" not in m:
+            continue
+        points.append({"coords": dict(pt.coords),
+                       "nodes": len(pt.workloads), "T": pt.T,
+                       "windows": np.asarray(m["telemetry"]).tolist()})
+    if not points:
+        return None
+    TELEMETRY_DIR.mkdir(parents=True, exist_ok=True)
+    path = TELEMETRY_DIR / f"{figure}.json"
+    path.write_text(json.dumps(
+        {"figure": figure, "n_windows": n_windows,
+         "counters": list(COUNTERS), "lat_edges": list(LAT_EDGES),
+         "points": points}))
+    return path
+
+
+def windowed_tail(metrics) -> Optional[dict]:
+    """JSON-only windowed tail-latency summary (None when telemetry is
+    off): per-window p95/p99 plus overall p50/p95/p99, estimated from
+    the in-graph histogram buckets (``repro.obs.report``). Accepts one
+    point's metrics dict or a raw ``(n_windows, N_COUNTERS)`` matrix
+    (histogram counts sum across points, so callers may aggregate).
+    Rides the JSON rows of fig10/fig12 — never the deterministic
+    ``derived`` string."""
+    if isinstance(metrics, dict):
+        if "telemetry" not in metrics:
+            return None
+        w = np.asarray(metrics["telemetry"])
+    else:
+        w = np.asarray(metrics)
+    from repro.obs.report import overall_percentiles, window_percentiles
+    return {"overall": overall_percentiles(w),
+            **window_percentiles(w, qs=(95, 99))}
 
 
 # ---------------------------------------------------------------------------

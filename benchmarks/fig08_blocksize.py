@@ -17,7 +17,8 @@ lands in the ``fig08_engine`` row.
 from __future__ import annotations
 
 from benchmarks.common import (BASELINE, DRAM, FamConfig, engine_row,
-                               fam_replace, geomean, save_rows, workloads)
+                               fam_replace, geomean, obs_tracer, save_rows,
+                               save_telemetry, workloads)
 from repro.experiments import Experiment, config_axis, flag_axis, workload_axis
 
 BLOCK_SIZES = [64, 128, 256, 512, 1024, 4096]
@@ -25,11 +26,13 @@ T = 12_000
 
 
 def experiment(quick: bool = True, trace_backend: str = "device",
-               kernel_backend: str = "xla") -> Experiment:
+               kernel_backend: str = "xla",
+               telemetry: int = 0) -> Experiment:
     return Experiment(
         name="fig08_blocksize", T=T,
         base=fam_replace(FamConfig(), num_nodes=1,
-                         kernel_backend=kernel_backend),
+                         kernel_backend=kernel_backend,
+                         telemetry=telemetry),
         trace_backend=trace_backend,
         axes=(config_axis("block", BLOCK_SIZES, param="block_bytes"),
               workload_axis(workloads(quick)),
@@ -37,13 +40,16 @@ def experiment(quick: bool = True, trace_backend: str = "device",
 
 
 def run(quick: bool = True, trace_backend: str = "device",
-        kernel_backend: str = "xla"):
+        kernel_backend: str = "xla", telemetry: int = 0):
     wls = workloads(quick)
     # assert_compiles: the runtime sanitizer proves the one-executable
-    # promise — actual XLA compiles == accounted groups (== 1 when cold)
-    res = experiment(quick, trace_backend,
-                     kernel_backend).run(cross_check_shard=True,
-                                         assert_compiles=True)
+    # promise — actual XLA compiles == accounted groups (== 1 when cold);
+    # the telemetry tag splits NO group (it rides geometry_free_shape
+    # uniformly), so the 1-group assert below holds either way
+    with obs_tracer("fig08_blocksize", telemetry):
+        res = experiment(quick, trace_backend, kernel_backend,
+                         telemetry).run(cross_check_shard=True,
+                                        assert_compiles=True)
     info = res.info
     assert info.planned_groups == 1, info.groups  # dynamic geometry: 1 compile
 
@@ -72,5 +78,7 @@ def run(quick: bool = True, trace_backend: str = "device",
     check_pts = [p for p in res.points
                  if p.cfg.block_bytes == BLOCK_SIZES[0]]
     rows.append(engine_row("fig08_engine", res, check_pts))
+    if telemetry:
+        save_telemetry("fig08_blocksize", res, telemetry)
     save_rows("fig08_blocksize", rows)
     return rows

@@ -18,7 +18,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (ADAPT, BASELINE, CORE, DRAM, FamConfig,
-                               fam_replace, geomean, info_row, save_rows,
+                               fam_replace, geomean, info_row, obs_tracer,
+                               save_rows, save_telemetry, windowed_tail,
                                workloads)
 from repro.experiments import Experiment, flag_axis, nodes_axis, workload_axis
 
@@ -28,10 +29,12 @@ VARIANTS = {"base": BASELINE, "core": CORE, "dram": DRAM, "adapt": ADAPT}
 
 
 def experiment(quick: bool = True, trace_backend: str = "device",
-               kernel_backend: str = "xla") -> Experiment:
+               kernel_backend: str = "xla",
+               telemetry: int = 0) -> Experiment:
     return Experiment(
         name="fig10_bw_adaptation", T=T,
-        base=fam_replace(FamConfig(), kernel_backend=kernel_backend),
+        base=fam_replace(FamConfig(), kernel_backend=kernel_backend,
+                         telemetry=telemetry),
         trace_backend=trace_backend,
         axes=(nodes_axis(NODE_COUNTS),
               workload_axis(workloads(quick)),
@@ -39,9 +42,11 @@ def experiment(quick: bool = True, trace_backend: str = "device",
 
 
 def run(quick: bool = True, trace_backend: str = "device",
-        kernel_backend: str = "xla"):
+        kernel_backend: str = "xla", telemetry: int = 0):
     wls = workloads(quick)
-    res = experiment(quick, trace_backend, kernel_backend).run()
+    with obs_tracer("fig10_bw_adaptation", telemetry):
+        res = experiment(quick, trace_backend, kernel_backend,
+                         telemetry).run()
     info = res.info
 
     rows = []
@@ -69,7 +74,7 @@ def run(quick: bool = True, trace_backend: str = "device",
                 per_wl_4node[w] = {
                     k: float(out[k]["ipc"].mean() / b_ipc)
                     for k in ("core", "dram", "adapt")}
-        rows.append({
+        row = {
             "name": f"fig10_nodes{n}",
             "us_per_call": info.us_per_call(),
             "derived": (f"core={geomean(agg['core']):.3f};"
@@ -81,10 +86,22 @@ def run(quick: bool = True, trace_backend: str = "device",
             "rel_fam_latency": {k: geomean(v) for k, v in rel_lat.items()},
             "rel_prefetches_adapt": float(np.mean(rel_pf)),
             "hit_fractions": {k: float(np.mean(v)) for k, v in hits.items()},
-        })
+        }
+        if telemetry:
+            # JSON-only windowed tails (repro.obs): histogram counts sum
+            # across workloads, one aggregate per variant per node count
+            row["windowed_tail"] = {
+                k: windowed_tail(sum(
+                    np.asarray(res.get(nodes=n, workload=w_,
+                                       variant=k)["telemetry"])
+                    for w_ in wls))
+                for k in VARIANTS}
+        rows.append(row)
     rows.append({"name": "fig11_per_workload_4node", "us_per_call": 0.0,
                  "derived": "see per_workload field",
                  "per_workload": per_wl_4node})
     rows.append(info_row("fig10_engine", info))
+    if telemetry:
+        save_telemetry("fig10_bw_adaptation", res, telemetry)
     save_rows("fig10_bw_adaptation", rows)
     return rows

@@ -27,7 +27,8 @@ from typing import Mapping, Optional
 import numpy as np
 
 from benchmarks.common import (DRAM, WFQ, FamConfig, fam_replace, geomean,
-                               info_row, save_rows, workloads)
+                               info_row, obs_tracer, save_rows,
+                               save_telemetry, windowed_tail, workloads)
 from repro.experiments import (Experiment, PolicySet, flag_axis, nodes_axis,
                                policy_axis, workload_axis)
 
@@ -52,10 +53,12 @@ def _baseline_label(policies: Mapping[str, PolicySet]) -> str:
 
 
 def experiment(quick: bool = True, trace_backend: str = "device",
-               kernel_backend: str = "xla") -> Experiment:
+               kernel_backend: str = "xla",
+               telemetry: int = 0) -> Experiment:
     return Experiment(
         name="fig12_wfq", T=T,
-        base=fam_replace(FamConfig(), kernel_backend=kernel_backend),
+        base=fam_replace(FamConfig(), kernel_backend=kernel_backend,
+                         telemetry=telemetry),
         trace_backend=trace_backend,
         axes=(nodes_axis(NODE_COUNTS),
               workload_axis(workloads(quick)),
@@ -64,7 +67,8 @@ def experiment(quick: bool = True, trace_backend: str = "device",
 
 def policy_experiment(policies: Mapping[str, PolicySet], quick: bool = True,
                       trace_backend: str = "device",
-                      kernel_backend: str = "xla") -> Experiment:
+                      kernel_backend: str = "xla",
+                      telemetry: int = 0) -> Experiment:
     """The fig12 grid with the flag-variant axis replaced by a policy
     axis: nodes x workloads x PolicySet combos, prefetching enabled
     (flags=DRAM). Same-tag combos (spp+fifo, spp+wfq, any weight) share a
@@ -72,7 +76,8 @@ def policy_experiment(policies: Mapping[str, PolicySet], quick: bool = True,
     (strict, nextline) plan into their own groups."""
     return Experiment(
         name="fig12_wfq_policies", T=T,
-        base=fam_replace(FamConfig(), kernel_backend=kernel_backend),
+        base=fam_replace(FamConfig(), kernel_backend=kernel_backend,
+                         telemetry=telemetry),
         flags=DRAM, trace_backend=trace_backend,
         axes=(nodes_axis(NODE_COUNTS),
               workload_axis(workloads(quick)),
@@ -82,11 +87,15 @@ def policy_experiment(policies: Mapping[str, PolicySet], quick: bool = True,
 def _rows_for(res, wls, variants, name_of, info):
     """Shared row builder: each variant vs its baseline, per node count.
 
-    ``variants`` maps row-label -> (lookup kwargs, baseline kwargs)."""
+    ``variants`` maps row-label -> (lookup kwargs, baseline kwargs).
+    When the run carried telemetry, each row gains a JSON-only
+    ``windowed_tail`` (p50/p95/p99 from the in-graph histogram, counts
+    summed across workloads — the tail latency WFQ is judged on)."""
     rows = []
     for n in NODE_COUNTS:
         for label, (kw, base_kw) in variants.items():
             gains, lat, pf, dh, ch = [], [], [], [], []
+            tele = None
             for w in wls:
                 fifo = res.get(nodes=n, workload=w, **base_kw)
                 var = res.get(nodes=n, workload=w, **kw)
@@ -97,7 +106,10 @@ def _rows_for(res, wls, variants, name_of, info):
                           max(fifo["prefetches_issued"].sum(), 1.0))
                 dh.append(var["demand_hit_fraction"].mean())
                 ch.append(var["corepf_hit_fraction"].mean())
-            rows.append({
+                if "telemetry" in var:
+                    t = np.asarray(var["telemetry"])
+                    tele = t if tele is None else tele + t
+            row = {
                 "name": name_of(n, label),
                 "us_per_call": info.us_per_call(),
                 "derived": (f"ipc_vs_fifo={geomean(gains):.3f};"
@@ -109,18 +121,23 @@ def _rows_for(res, wls, variants, name_of, info):
                 "rel_prefetches": float(np.mean(pf)),
                 "demand_hit_fraction": float(np.mean(dh)),
                 "corepf_hit_fraction": float(np.mean(ch)),
-            })
+            }
+            if tele is not None:
+                row["windowed_tail"] = windowed_tail(tele)
+            rows.append(row)
     return rows
 
 
 def run(quick: bool = True, trace_backend: str = "device",
         policies: Optional[Mapping[str, PolicySet]] = None,
-        kernel_backend: str = "xla"):
+        kernel_backend: str = "xla", telemetry: int = 0):
     wls = workloads(quick)
     if policies is not None:
         return _run_policies(policies, wls, quick, trace_backend,
-                             kernel_backend)
-    res = experiment(quick, trace_backend, kernel_backend).run()
+                             kernel_backend, telemetry)
+    with obs_tracer("fig12_wfq", telemetry):
+        res = experiment(quick, trace_backend, kernel_backend,
+                         telemetry).run()
     info = res.info
     variants = {f"w{w_}": ({"variant": f"w{w_}"}, {"variant": "fifo"})
                 for w_ in WEIGHTS}
@@ -129,15 +146,19 @@ def run(quick: bool = True, trace_backend: str = "device",
     for row in rows:
         row["weight"] = int(row.pop("variant")[1:])
     rows.append(info_row("fig12_engine", info))
+    if telemetry:
+        save_telemetry("fig12_wfq", res, telemetry)
     save_rows("fig12_wfq", rows)
     return rows
 
 
 def _run_policies(policies: Mapping[str, PolicySet], wls, quick: bool,
-                  trace_backend: str, kernel_backend: str = "xla"):
+                  trace_backend: str, kernel_backend: str = "xla",
+                  telemetry: int = 0):
     baseline = _baseline_label(policies)
-    res = policy_experiment(policies, quick, trace_backend,
-                            kernel_backend).run()
+    with obs_tracer("fig12_wfq_policies", telemetry):
+        res = policy_experiment(policies, quick, trace_backend,
+                                kernel_backend, telemetry).run()
     info = res.info
     variants = {label: ({"policy": label}, {"policy": baseline})
                 for label in policies if label != baseline}
@@ -145,5 +166,7 @@ def _run_policies(policies: Mapping[str, PolicySet], wls, quick: bool,
                      lambda n, label: f"fig12_nodes{n}_{label}", info)
     rows.append(info_row("fig12_policies_engine", info,
                          policy_matrix=sorted(policies)))
+    if telemetry:
+        save_telemetry("fig12_wfq_policies", res, telemetry)
     save_rows("fig12_wfq_policies", rows)
     return rows

@@ -23,8 +23,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (ADAPT, BASELINE, CORE, DRAM, WFQ, FamConfig,
-                               fam_replace, geomean, info_row, save_rows,
-                               trace_gen_compare)
+                               fam_replace, geomean, info_row, obs_tracer,
+                               save_rows, save_telemetry, trace_gen_compare)
 from repro.experiments import Experiment, flag_axis, mix_axis
 
 T = 10_000
@@ -48,20 +48,23 @@ def _mixes(quick: bool):
 
 
 def experiment(quick: bool = True, trace_backend: str = "device",
-               kernel_backend: str = "xla") -> Experiment:
+               kernel_backend: str = "xla",
+               telemetry: int = 0) -> Experiment:
     return Experiment(
         name="fig14_mixes", T=T,
-        base=fam_replace(FamConfig(), kernel_backend=kernel_backend),
+        base=fam_replace(FamConfig(), kernel_backend=kernel_backend,
+                         telemetry=telemetry),
         trace_backend=trace_backend,
         axes=(mix_axis(_mixes(quick)),
               flag_axis("variant", {"base": BASELINE, **CONFIGS})))
 
 
 def run(quick: bool = True, trace_backend: str = "device",
-        kernel_backend: str = "xla"):
+        kernel_backend: str = "xla", telemetry: int = 0):
     mixes = _mixes(quick)
-    exp = experiment(quick, trace_backend, kernel_backend)
-    res = exp.run()
+    exp = experiment(quick, trace_backend, kernel_backend, telemetry)
+    with obs_tracer("fig14_mixes", telemetry):
+        res = exp.run()
     info = res.info
     if trace_backend == "device":
         # the no-host acceptance gate: the steady-state path generated
@@ -93,5 +96,7 @@ def run(quick: bool = True, trace_backend: str = "device",
     extra = {"trace_gen_compare": trace_gen_compare(exp.plan())} \
         if quick and trace_backend == "device" else {}
     rows.append(info_row("fig14_engine", info, **extra))
+    if telemetry:
+        save_telemetry("fig14_mixes", res, telemetry)
     save_rows("fig14_mixes", rows)
     return rows

@@ -17,8 +17,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (ADAPT, CORE, DRAM, WFQ, FamConfig,
-                               fam_replace, geomean, info_row, save_rows,
-                               workloads)
+                               fam_replace, geomean, info_row, obs_tracer,
+                               save_rows, save_telemetry, workloads)
 from repro.core.famsim import SimFlags
 from repro.experiments import Experiment, config_axis, flag_axis, workload_axis
 
@@ -34,10 +34,12 @@ def _wls(quick: bool):
 
 
 def experiment(quick: bool = True, trace_backend: str = "device",
-               kernel_backend: str = "xla") -> Experiment:
+               kernel_backend: str = "xla",
+               telemetry: int = 0) -> Experiment:
     return Experiment(
         name="fig15_allocation", T=T,
-        base=fam_replace(FamConfig(), kernel_backend=kernel_backend),
+        base=fam_replace(FamConfig(), kernel_backend=kernel_backend,
+                         telemetry=telemetry),
         nodes=4, trace_backend=trace_backend,
         axes=(config_axis("ratio", RATIOS, param="allocation_ratio"),
               workload_axis(_wls(quick)),
@@ -45,9 +47,11 @@ def experiment(quick: bool = True, trace_backend: str = "device",
 
 
 def run(quick: bool = True, trace_backend: str = "device",
-        kernel_backend: str = "xla"):
+        kernel_backend: str = "xla", telemetry: int = 0):
     wls = _wls(quick)
-    res = experiment(quick, trace_backend, kernel_backend).run()
+    with obs_tracer("fig15_allocation", telemetry):
+        res = experiment(quick, trace_backend, kernel_backend,
+                         telemetry).run()
     info = res.info
 
     rows = []
@@ -70,5 +74,7 @@ def run(quick: bool = True, trace_backend: str = "device",
             **{f"ipc_vs_all_local_{k}": geomean(v) for k, v in agg.items()},
         })
     rows.append(info_row("fig15_engine", info))
+    if telemetry:
+        save_telemetry("fig15_allocation", res, telemetry)
     save_rows("fig15_allocation", rows)
     return rows

@@ -20,7 +20,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (BASELINE, WFQ, FamConfig, engine_row,
-                               fam_replace, geomean, save_rows, workloads)
+                               fam_replace, geomean, obs_tracer, save_rows,
+                               save_telemetry, workloads)
 from repro.experiments import Experiment, config_axis, flag_axis, workload_axis
 
 T = 16_000
@@ -30,10 +31,12 @@ SIZES_KB = (256, 512, 1024, 2048)
 
 
 def experiment(quick: bool = True, trace_backend: str = "device",
-               kernel_backend: str = "xla") -> Experiment:
+               kernel_backend: str = "xla",
+               telemetry: int = 0) -> Experiment:
     return Experiment(
         name="fig16_cachesize", T=T,
-        base=fam_replace(FamConfig(), kernel_backend=kernel_backend),
+        base=fam_replace(FamConfig(), kernel_backend=kernel_backend,
+                         telemetry=telemetry),
         nodes=4, trace_backend=trace_backend,
         axes=(config_axis("cache", [kb << 10 for kb in SIZES_KB],
                           param="dram_cache_bytes",
@@ -43,13 +46,16 @@ def experiment(quick: bool = True, trace_backend: str = "device",
 
 
 def run(quick: bool = True, trace_backend: str = "device",
-        kernel_backend: str = "xla"):
+        kernel_backend: str = "xla", telemetry: int = 0):
     wls = workloads(quick)
     # assert_compiles: the runtime sanitizer proves the one-executable
-    # promise — actual XLA compiles == accounted groups (== 1 when cold)
-    res = experiment(quick, trace_backend,
-                     kernel_backend).run(cross_check_shard=True,
-                                         assert_compiles=True)
+    # promise — actual XLA compiles == accounted groups (== 1 when cold);
+    # the telemetry tag splits NO group (it rides geometry_free_shape
+    # uniformly), so the 1-group assert below holds either way
+    with obs_tracer("fig16_cachesize", telemetry):
+        res = experiment(quick, trace_backend, kernel_backend,
+                         telemetry).run(cross_check_shard=True,
+                                        assert_compiles=True)
     info = res.info
     assert info.planned_groups == 1, info.groups  # dynamic geometry: 1 compile
 
@@ -73,5 +79,7 @@ def run(quick: bool = True, trace_backend: str = "device",
     check_pts = [p for p in res.points
                  if p.cfg.dram_cache_bytes == SIZES_KB[0] << 10][:4]
     rows.append(engine_row("fig16_engine", res, check_pts))
+    if telemetry:
+        save_telemetry("fig16_cachesize", res, telemetry)
     save_rows("fig16_cachesize", rows)
     return rows

@@ -37,6 +37,16 @@ fused Pallas kernel (bit-identical to the default ``xla`` path; see
 docs/performance.md)::
 
     python -m benchmarks.run --kernel-backend pallas fig08
+
+``--telemetry [N]`` turns on the observability layer (``repro.obs``, see
+docs/observability.md): in-graph windowed counters saved to
+results/telemetry/<figure>.json (render with ``python -m repro.obs
+report``) plus a host span timeline saved to results/trace/<figure>.json
+(load in ui.perfetto.dev)::
+
+    python -m benchmarks.run fig10 --telemetry
+    python -m benchmarks.run fig10 --telemetry 64       # explicit windows
+    python -m repro.obs report results/telemetry/fig10_bw_adaptation.json
 """
 from __future__ import annotations
 
@@ -90,6 +100,17 @@ def main(argv=None) -> None:
                          "host-side generation), 'numpy' stages the host "
                          "reference generators (never changes compile "
                          "groups, only the trace source)")
+    ap.add_argument("--telemetry", nargs="?", const=32, default=0, type=int,
+                    metavar="N_WINDOWS",
+                    help="observability mode (repro.obs): accumulate "
+                         "in-graph windowed telemetry counters (N_WINDOWS "
+                         "windows per run; bare flag = 32) into "
+                         "results/telemetry/<figure>.json and record a "
+                         "host span timeline (plan/compile/stage/run/"
+                         "fetch) into results/trace/<figure>.json. A "
+                         "STATIC compile tag: 0 (default) runs the exact "
+                         "pre-telemetry programs (see "
+                         "docs/observability.md)")
     ap.add_argument("--policies", action="append", default=None,
                     metavar="KIND=NAME[,NAME...]",
                     help="policy-matrix mode (repeatable): sweep the named "
@@ -148,7 +169,8 @@ def main(argv=None) -> None:
 
     if args.plan:
         print_plans(figures, quick=not args.full, policies=combos,
-                    kernel_backend=args.kernel_backend)
+                    kernel_backend=args.kernel_backend,
+                    telemetry=args.telemetry)
         return
 
     print("name,us_per_call,derived")
@@ -157,7 +179,8 @@ def main(argv=None) -> None:
         kw = {} if combos is None else {"policies": combos}
         rows = mod.run(quick=not args.full,
                        trace_backend=args.trace_backend,
-                       kernel_backend=args.kernel_backend, **kw)
+                       kernel_backend=args.kernel_backend,
+                       telemetry=args.telemetry, **kw)
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.3f},\"{r['derived']}\"",
                   flush=True)
@@ -195,7 +218,7 @@ def policy_combos(specs, error):
 
 
 def print_plans(figures, quick: bool, policies=None,
-                kernel_backend: str = "xla") -> None:
+                kernel_backend: str = "xla", telemetry: int = 0) -> None:
     """``--plan``: resolve and print every figure's compile groups without
     generating a trace or compiling anything. One summary line per figure
     (``<name>: G group(s), P points, E events (+X padded, O% overhead)``)
@@ -206,10 +229,12 @@ def print_plans(figures, quick: bool, policies=None,
     for key, mod in figures.items():
         if policies is not None:
             plan = mod.policy_experiment(
-                policies, quick=quick, kernel_backend=kernel_backend).plan()
+                policies, quick=quick, kernel_backend=kernel_backend,
+                telemetry=telemetry).plan()
         else:
             plan = mod.experiment(
-                quick=quick, kernel_backend=kernel_backend).plan()
+                quick=quick, kernel_backend=kernel_backend,
+                telemetry=telemetry).plan()
         events = plan.events()
         padded = plan.padded_events()
         print(f"{plan.name}: {plan.num_groups} group(s), "

@@ -3,9 +3,9 @@
 The planner says fig08/fig16 are ONE compile group each; the static
 checks say nothing in the jitted graph can silently split a group. The
 runtime watcher closes the loop: the executor names every group
-executable ``famsim_group`` before jitting it, and
+executable ``famsim_group__<key digest>`` before jitting it, and
 :class:`CompileWatcher` counts the ``jax.log_compiles`` records for that
-name during ``execute`` — so *actual XLA compiles of group executables*
+name prefix during ``execute`` — so *actual XLA compiles of group executables*
 can be asserted equal to the planner's accounting
 (``execute(plan, assert_compiles=True)``; the count lands in
 ``RunInfo.xla_compiles`` either way). Counting by name filters out the
@@ -24,10 +24,12 @@ compile count (above) and the explicit ``jax.device_get`` after
 from __future__ import annotations
 
 import logging
+import re
 from contextlib import contextmanager
-from typing import Iterator
+from typing import Dict, Iterator
 
-#: the name the executor gives every AOT group runner before jitting it
+#: the name PREFIX the executor gives every AOT group runner before
+#: jitting it (suffixed ``__<exec-cache-key digest>`` per group)
 GROUP_RUNNER_NAME = "famsim_group"
 
 #: jax logs "Finished XLA compilation of jit(<name>) in <t> sec" here
@@ -35,11 +37,18 @@ _DISPATCH_LOGGER = "jax._src.dispatch"
 _COMPILE_MSG = "Finished XLA compilation of "
 
 
+_JIT_NAME = re.compile(r"jit\(([^)]+)\)")
+
+
 class _CountingHandler(logging.Handler):
     def __init__(self, needle: str):
         super().__init__(level=logging.DEBUG)
         self.needle = needle
         self.count = 0
+        # per jitted-function name (the executor suffixes each group
+        # runner with its cache-key digest: ``famsim_group__<digest>``),
+        # so compiles can be attributed to the group that caused them
+        self.by_name: Dict[str, int] = {}
 
     def emit(self, record: logging.LogRecord) -> None:
         try:
@@ -48,6 +57,10 @@ class _CountingHandler(logging.Handler):
             return
         if _COMPILE_MSG in msg and self.needle in msg:
             self.count += 1
+            m = _JIT_NAME.search(msg)
+            if m:
+                name = m.group(1)
+                self.by_name[name] = self.by_name.get(name, 0) + 1
 
 
 class CompileWatcher:
@@ -76,6 +89,13 @@ class CompileWatcher:
     @property
     def count(self) -> int:
         return self._handler.count
+
+    @property
+    def by_name(self) -> Dict[str, int]:
+        """Compile counts keyed by the jitted function's full name
+        (``famsim_group__<digest>``) — per-group attribution for the
+        executor's trace spans and ``info.groups`` rows."""
+        return dict(self._handler.by_name)
 
     def __enter__(self) -> "CompileWatcher":
         import jax

@@ -345,6 +345,14 @@ class FamConfig:
     # it selects a different traced program, so it rides on
     # geometry_free_shape() and splits compile groups.
     kernel_backend: str = "xla"
+    # observability (docs/observability.md): number of in-graph telemetry
+    # windows the simulator accumulates per run (0 = off, the default).
+    # A STATIC compile tag: a non-zero value adds the windowed-counter
+    # scan output to the traced program, so it rides on
+    # geometry_free_shape() and splits compile groups; the default path
+    # builds the exact pre-telemetry step function (byte-identical
+    # metrics, same single compile group per figure).
+    telemetry: int = 0
 
     @property
     def num_sets(self) -> int:
@@ -374,7 +382,8 @@ class FamConfig:
                 self.spp_signature_bits, self.spp_pattern_entries,
                 self.spp_signature_entries, self.spp_max_lookahead,
                 self.core_pf_degree, self.completions_per_step,
-                self.core_fill_entries, self.kernel_backend)
+                self.core_fill_entries, self.kernel_backend,
+                self.telemetry)
 
     def static_shape(self) -> Tuple:
         """The allocation-deciding subset of this config: this config's own

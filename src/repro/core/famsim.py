@@ -62,6 +62,7 @@ from repro.core.fam_params import FamParams, stack_params
 from repro.core.throttle import ThrottleState  # noqa: F401 (compat)
 from repro.kernels.famsim_step import (KERNEL_BACKENDS, cache_step,
                                        fused_replacement_mode)
+from repro.obs import telemetry as obs_telemetry
 from repro.policies import DEFAULT_POLICY_SET, PolicySet, SimFlags
 
 __all__ = ["SimFlags", "PolicySet", "NodeState", "build_sim", "build_sweep",
@@ -248,6 +249,13 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
                      core_last=jnp.where(live, line, ns.core_last),
                      core_stride=jnp.where(live & (stride != 0), stride,
                                            ns.core_stride))
+    if cfg.telemetry:
+        # telemetry-only signal (repro.obs): prefetch candidates dropped
+        # because the block was already cached or in flight. Added ONLY
+        # under the static telemetry tag so the default path's traced
+        # program stays byte-identical.
+        pf_redundant = jnp.sum((cand_valid & ~fresh & is_fam &
+                                p.dram_prefetch).astype(jnp.float32))
     # NOTE: cpf_lines rides along in req so phase C fills the buffer with
     # exactly the lines validated here — recomputing them after the
     # core_last/core_stride update is what phase C must NOT do.
@@ -258,12 +266,18 @@ def _phase_a(cfg: FamConfig, p: FamParams, ns: NodeState, addr, gap, warm,
                cpf_lines=cpf_lines,
                cpf_valid=cpf_valid, cpf_hits=cpf_hits & cpf_valid,
                cpf_to_fam=cpf_to_fam, gap=gap, warm=warm, live=live)
+    if cfg.telemetry:
+        req["pf_redundant"] = pf_redundant
     return ns, req
 
 
 def _phase_c(cfg: FamConfig, p: FamParams, ns: NodeState, req,
              d_fin, pf_fin, cpf_fin, policies: Optional[PolicySet] = None):
-    """Per-node post-arbitration accounting + queue fills."""
+    """Per-node post-arbitration accounting + queue fills.
+
+    Returns ``(ns, lat)`` — the per-event demand latency rides out for
+    the telemetry accumulator (``repro.obs``); with telemetry off it is
+    unused and DCE'd, so the compiled program is unchanged."""
     impls = _resolve(policies).impls()
     ad_pol = p.policy["adaptation"]
     clock = ns.clock
@@ -337,7 +351,7 @@ def _phase_c(cfg: FamConfig, p: FamParams, ns: NodeState, req,
         corepf_hit=ns.corepf_hit + w * jnp.sum(
             req["cpf_hits"].astype(jnp.float32)),
         pf_issued=ns.pf_issued + w * npf)
-    return ns
+    return ns, lat
 
 
 def _make_step(cfg: FamConfig, num_nodes: int,
@@ -356,9 +370,16 @@ def _make_step(cfg: FamConfig, num_nodes: int,
     ``policies`` selects the policy implementations statically (one traced
     program per compile-tag combination); their numeric params arrive
     traced on ``p.policy``.
+
+    ``cfg.telemetry`` (a static compile tag, see ``repro.obs``) extends
+    the carry with a windowed-counter accumulator and the inputs with a
+    per-step window index: step(p, (nodes, fam_busy, tele),
+    (addr, gap, warm, live, win)). With the default 0 the step is built
+    exactly as before — same signature, same traced program.
     """
     policies = _resolve(policies)
     impls = policies.impls()
+    n_win = cfg.telemetry
     if cfg.kernel_backend not in KERNEL_BACKENDS:
         raise ValueError(
             f"FamConfig.kernel_backend={cfg.kernel_backend!r}; expected "
@@ -372,8 +393,12 @@ def _make_step(cfg: FamConfig, num_nodes: int,
 
     def step(p, carry, inputs):
         sp = p.policy["scheduler"]
-        nodes, fam_busy = carry
-        addr, gap, warm, live = inputs     # addr/gap: (N,)
+        if n_win:
+            nodes, fam_busy, tele = carry
+            addr, gap, warm, live, win = inputs    # addr/gap: (N,)
+        else:
+            nodes, fam_busy = carry
+            addr, gap, warm, live = inputs     # addr/gap: (N,)
         nodes, req = jax.vmap(
             lambda ns, a, g: _phase_a(cfg, p, ns, a, g, warm, live,
                                       policies))(
@@ -405,10 +430,15 @@ def _make_step(cfg: FamConfig, num_nodes: int,
         cpf_fin = t.prefetch_finish[num_nodes * D:].reshape(
             num_nodes, CPF)
 
-        nodes = jax.vmap(
+        nodes, lat = jax.vmap(
             lambda ns, r, df, pf, cf: _phase_c(cfg, p, ns, r, df, pf, cf,
                                                policies)
         )(nodes, req, t.demand_finish, pf_fin, cpf_fin)
+        if n_win:
+            tele = obs_telemetry.accumulate(
+                tele, win, num_nodes=num_nodes, live=live, req=req,
+                lat=lat, nodes=nodes, new_busy=t.new_busy)
+            return (nodes, t.new_busy, tele), None
         return (nodes, t.new_busy), None
 
     return step
@@ -424,9 +454,11 @@ def _init_carry(cfg: FamConfig, p: FamParams, num_nodes: int,
     return nodes, jnp.zeros((2,), jnp.float32)
 
 
-def _metrics(nodes: NodeState, p: FamParams) -> Dict[str, jax.Array]:
+def _metrics(nodes: NodeState, p: FamParams,
+             telemetry: Optional[jax.Array] = None
+             ) -> Dict[str, jax.Array]:
     ipc = nodes.instr / jnp.maximum(nodes.cycles, 1.0)
-    return {
+    out = {
         "ipc": ipc,
         "fam_latency": nodes.fam_lat_sum / jnp.maximum(nodes.fam_cnt, 1.0),
         "demand_hit_fraction": nodes.demand_hit /
@@ -439,6 +471,11 @@ def _metrics(nodes: NodeState, p: FamParams) -> Dict[str, jax.Array]:
         "cache_occupancy": jax.vmap(
             lambda c: dc.occupancy(c, p.num_sets, p.cache_ways))(nodes.cache),
     }
+    if telemetry is not None:
+        # windowed observability streams (repro.obs.telemetry): one
+        # per-system (node-summed) ``(n_windows, N_COUNTERS)`` matrix
+        out["telemetry"] = telemetry
+    return out
 
 
 def _make_run(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2,
@@ -453,6 +490,7 @@ def _make_run(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2,
     included — comes from the traced ``FamParams``.
     """
     step = _make_step(cfg, num_nodes, policies)
+    n_win = cfg.telemetry
 
     def run(p: FamParams, addrs, gaps):
         N, T = addrs.shape
@@ -460,10 +498,19 @@ def _make_run(cfg: FamConfig, num_nodes: int, warmup_frac: float = 0.2,
         gaps = gaps.astype(jnp.float32) / p.cores_per_node  # aggregate stream
         warm = jnp.arange(T) >= int(T * warmup_frac)
         live = jnp.ones((T,), jnp.bool_)
+        carry0 = _init_carry(cfg, p, N, pad_sets, pad_ways, policies)
+        xs = (addrs.T.astype(jnp.int32), gaps.T, warm, live)
+        if n_win:
+            win = obs_telemetry.window_index(jnp.arange(T), jnp.int32(T),
+                                             n_win)
+            carry, _ = jax.lax.scan(lambda c, i: step(p, c, i),
+                                    carry0 + (obs_telemetry.init_windows(
+                                        n_win),),
+                                    xs + (win,))
+            nodes, _, tele = carry
+            return _metrics(nodes, p, tele)
         (nodes, _), _ = jax.lax.scan(
-            lambda c, i: step(p, c, i),
-            _init_carry(cfg, p, N, pad_sets, pad_ways, policies),
-            (addrs.T.astype(jnp.int32), gaps.T, warm, live))
+            lambda c, i: step(p, c, i), carry0, xs)
         return _metrics(nodes, p)
 
     return run
@@ -498,6 +545,7 @@ def _make_run_masked(cfg: FamConfig, num_nodes: int,
     ``repro.traces.device.system_traces`` arrays at the same T_pad.
     """
     step = _make_step(cfg, num_nodes, policies)
+    n_win = cfg.telemetry
 
     def _sim(p: FamParams, addrs, gaps, t_true, warm_start):
         N, T_pad = addrs.shape
@@ -506,11 +554,20 @@ def _make_run_masked(cfg: FamConfig, num_nodes: int,
         i = jnp.arange(T_pad)
         valid = i < t_true
         warm = (i >= warm_start) & valid
-
+        carry0 = _init_carry(cfg, p, N, pad_sets, pad_ways, policies)
+        xs = (addrs.T.astype(jnp.int32), gaps.T, warm, valid)
+        if n_win:
+            # windows partition the TRUE length (traced): padded tail
+            # steps all map to the last window and contribute zero
+            win = obs_telemetry.window_index(i, t_true, n_win)
+            carry, _ = jax.lax.scan(lambda c, inp: step(p, c, inp),
+                                    carry0 + (obs_telemetry.init_windows(
+                                        n_win),),
+                                    xs + (win,))
+            nodes, _, tele = carry
+            return _metrics(nodes, p, tele)
         (nodes, _), _ = jax.lax.scan(
-            lambda c, inp: step(p, c, inp),
-            _init_carry(cfg, p, N, pad_sets, pad_ways, policies),
-            (addrs.T.astype(jnp.int32), gaps.T, warm, valid))
+            lambda c, inp: step(p, c, inp), carry0, xs)
         return _metrics(nodes, p)
 
     if trace_gen is None:

@@ -38,6 +38,7 @@ per group, so ``us_per_event`` reflects simulation only;
 """
 from __future__ import annotations
 
+import hashlib
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -49,8 +50,17 @@ from repro.core.fam_params import FamParams, stack_params
 from repro.core.famsim import build_masked_vmap
 from repro.experiments.plan import CompileGroup, Plan, s_bucket
 from repro.experiments.spec import ResolvedPoint
+from repro.obs.spans import current_tracer, maybe_span
 from repro.traces import generate, node_seed
 from repro.traces.backend import DEFAULT_BACKEND
+
+
+def _key_digest(key: Tuple) -> str:
+    """Short stable digest of an executable-cache key — suffixes the
+    group runner's jit name (``famsim_group__<digest>``) so the runtime
+    CompileWatcher can attribute each XLA compile to its group, and tags
+    the group's trace spans / ``info.groups`` row."""
+    return hashlib.sha1(repr(key).encode()).hexdigest()[:8]
 
 
 @dataclass
@@ -89,9 +99,17 @@ class RunInfo:
     trace_gen_s: float = 0.0       # host trace/param staging wall-clock
     groups: List[dict] = field(default_factory=list)
     shard_check: Optional[dict] = None
+    #: span summary ``{name: {count, total_s}}`` from the installed
+    #: :mod:`repro.obs.spans` tracer, covering this execute call only;
+    #: None when no tracer is installed (the default)
+    spans: Optional[dict] = None
 
     def us_per_call(self) -> float:
-        return self.run_s / max(self.events, 1) * 1e6
+        # a plan can legitimately carry zero true events (every point
+        # fully padded away); 0.0 beats a nonsense per-event figure
+        if self.events <= 0:
+            return 0.0
+        return self.run_s / self.events * 1e6
 
     def as_dict(self) -> dict:
         d = {"compiles": self.compiles,
@@ -108,11 +126,14 @@ class RunInfo:
              "trace_backend": self.trace_backend,
              "host_trace_events": self.host_trace_events,
              "trace_gen_s": round(self.trace_gen_s, 4),
-             "us_per_event": self.us_per_call(), "groups": self.groups}
+             "us_per_event": round(self.us_per_call(), 4),
+             "groups": self.groups}
         if self.xla_compiles >= 0:
             d["xla_compiles"] = self.xla_compiles
         if self.shard_check is not None:
             d["shard_check"] = self.shard_check
+        if self.spans is not None:
+            d["spans"] = self.spans
         return d
 
 
@@ -342,17 +363,25 @@ def _compiled(cfg, S: int, N: int, t_pad: int, mode,
         params_shape = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct((S,) + jnp.shape(x), x.dtype),
             p_proto)
-        # every group executable is jitted under the canonical name so
-        # the runtime CompileWatcher (repro.analysis.runtime) can count
-        # real group compiles in jax's log_compiles stream, ignoring
-        # incidental prim jits (convert_element_type & co.)
+        # every group executable is jitted under the canonical name
+        # prefix so the runtime CompileWatcher (repro.analysis.runtime)
+        # can count real group compiles in jax's log_compiles stream,
+        # ignoring incidental prim jits (convert_element_type & co.);
+        # the per-key digest suffix attributes each compile record to
+        # its group (CompileWatcher.by_name)
+        from repro.analysis.runtime import GROUP_RUNNER_NAME
+
         def famsim_group(*call_args):
             return fn(*call_args)
+        famsim_group.__name__ = famsim_group.__qualname__ = \
+            f"{GROUP_RUNNER_NAME}__{_key_digest(key)}"
         t0 = time.perf_counter()
-        compiled = jax.jit(famsim_group).lower(
-            params_shape, *input_shapes,
-            jax.ShapeDtypeStruct((S,), i32),
-            jax.ShapeDtypeStruct((S,), i32)).compile()
+        with maybe_span("compile", key_digest=_key_digest(key),
+                        S=S, N=N, T_pad=t_pad):
+            compiled = jax.jit(famsim_group).lower(
+                params_shape, *input_shapes,
+                jax.ShapeDtypeStruct((S,), i32),
+                jax.ShapeDtypeStruct((S,), i32)).compile()
         dt = time.perf_counter() - t0
         _EXEC_CACHE[key] = compiled
         if info is not None:
@@ -363,13 +392,16 @@ def _compiled(cfg, S: int, N: int, t_pad: int, mode,
 
 def _run_group(data: _GroupData, compiled) -> Dict[str, np.ndarray]:
     import jax
-    out = compiled(data.params, *data.inputs, data.t_true, data.warm_start)
-    out = jax.block_until_ready(out)
+    with maybe_span("device_call"):
+        out = compiled(data.params, *data.inputs, data.t_true,
+                       data.warm_start)
+        out = jax.block_until_ready(out)
     # one EXPLICIT fetch after the synchronized call (bit-identical to
     # np.asarray per leaf, but stays legal under a device-to-host
     # transfer guard — the runtime sanitizer's "disallow" only targets
     # implicit transfers)
-    return dict(jax.device_get(out))
+    with maybe_span("fetch"):
+        return dict(jax.device_get(out))
 
 
 def _pad_systems(idxs: Sequence[int], s_pad: int, D: int) -> List[int]:
@@ -443,7 +475,7 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
     # snapshot BEFORE any compile: which planned groups already have a
     # cached executable from an earlier execute (the warm-start set a
     # repeated sweep should drive to planned_groups)
-    pre_warm = []
+    pre_warm, digests = [], []
     for gi, g in enumerate(plan.groups):
         rep = plan.points[g.indices[0]]
         key = _exec_key(rep.cfg, len(exec_idxs[gi]), g.key.num_nodes,
@@ -451,35 +483,47 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
                         pad_ways=g.pad_ways, trace_backend=backend,
                         policies=rep.policy_set())
         pre_warm.append(key in _EXEC_CACHE)
+        digests.append(_key_digest(key))
     info.groups_reused = sum(pre_warm)
 
     results: List[Optional[Dict[str, np.ndarray]]] = [None] * plan.num_points
     pool = ThreadPoolExecutor(max_workers=1) if overlap and \
         backend == "numpy" and len(plan.groups) > 1 else None
+    tracer = current_tracer()
+    span_mark = tracer.mark() if tracer is not None else 0
     sentry = ExitStack()       # closes BEFORE the shard cross-check: its
     watcher = None             # deliberate extra compile is not a group run
+    # the whole-execute span enters FIRST so it closes LAST (ExitStack is
+    # LIFO) — every per-group span nests inside it
+    sentry.enter_context(maybe_span(
+        "execute", groups=plan.num_groups, points=plan.num_points,
+        backend=backend, devices=D))
     if assert_compiles:
-        from repro.analysis.runtime import (CompileWatcher,
+        from repro.analysis.runtime import (GROUP_RUNNER_NAME,
+                                            CompileWatcher,
                                             no_implicit_transfers)
         watcher = sentry.enter_context(CompileWatcher())
         sentry.enter_context(no_implicit_transfers())
     try:
+        # trace staging gets its own span whether it runs inline or on
+        # the overlap worker (worker spans land on their own tid lane)
+        def staged_prepare(gi_, t_pad_):
+            with maybe_span("trace_stage", group=gi_):
+                return _prepare(plan.points, exec_idxs[gi_], t_pad_,
+                                warmup_frac, backend)
+
         pending: Optional[Future] = None
         if pool is not None:
-            pending = pool.submit(_prepare, plan.points, exec_idxs[0],
-                                  plan.groups[0].t_pad, warmup_frac, backend)
+            pending = pool.submit(staged_prepare, 0, plan.groups[0].t_pad)
         group0_data = group0_out = None
         for gi, g in enumerate(plan.groups):
             if pool is not None:
                 data = pending.result()
                 if gi + 1 < len(plan.groups):
                     nxt = plan.groups[gi + 1]
-                    pending = pool.submit(_prepare, plan.points,
-                                          exec_idxs[gi + 1],
-                                          nxt.t_pad, warmup_frac, backend)
+                    pending = pool.submit(staged_prepare, gi + 1, nxt.t_pad)
             else:
-                data = _prepare(plan.points, exec_idxs[gi],
-                                g.t_pad, warmup_frac, backend)
+                data = staged_prepare(gi, g.t_pad)
             keep_group0 = gi == 0 and cross_check_shard
 
             S_exec = len(exec_idxs[gi])
@@ -487,6 +531,7 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
             before = info.compiles
             before_s = info.compile_s
             rep = plan.points[g.indices[0]]
+            xla_before = watcher.by_name if watcher is not None else {}
             compiled = _compiled(rep.cfg, S_exec, N,
                                  t_pad, mode, info,
                                  pad_sets=g.pad_sets, pad_ways=g.pad_ways,
@@ -494,7 +539,9 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
                                  policies=rep.policy_set())
             compile_s = info.compile_s - before_s
             t0 = time.perf_counter()
-            out = _run_group(data, compiled)
+            with maybe_span("run", group=gi, key_digest=digests[gi],
+                            S=S_exec, N=N, T_pad=t_pad):
+                out = _run_group(data, compiled)
             run_s = time.perf_counter() - t0
             if keep_group0:
                 group0_data, group0_out = data, out
@@ -508,13 +555,22 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
             info.padded_systems += S_exec - g.size
             info.host_trace_events += data.host_trace_events
             info.trace_gen_s += data.prep_s
-            info.groups.append({
+            entry = {
                 "static_shape": str(g.key.static_shape),
                 "S": g.size, "S_exec": S_exec, "N": N, "T_pad": t_pad,
                 "pad_sets": g.pad_sets, "pad_ways": g.pad_ways,
                 "compile_s": round(compile_s, 3), "run_s": round(run_s, 3),
                 "fresh_compile": info.compiles > before,
-                "exec_cache_hit": pre_warm[gi]})
+                "exec_cache_hit": pre_warm[gi],
+                "key_digest": digests[gi]}
+            if watcher is not None:
+                # XLA compiles attributed to THIS group by its digest-
+                # suffixed runner name (CompileWatcher.by_name delta)
+                runner = f"{GROUP_RUNNER_NAME}__{digests[gi]}"
+                entry["xla_compiles"] = (
+                    watcher.by_name.get(runner, 0)
+                    - xla_before.get(runner, 0))
+            info.groups.append(entry)
             for j, i in enumerate(g.indices):
                 results[i] = {k: v[j] for k, v in out.items()}
     finally:
@@ -535,6 +591,10 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
     if cross_check_shard and plan.groups:
         info.shard_check = _shard_cross_check(plan, group0_data, group0_out,
                                               exec_idxs[0], mode, backend)
+    if tracer is not None:
+        # summarized AFTER sentry.close() so the whole-execute span (and
+        # any cross-check spans) are included
+        info.spans = tracer.summary(since=span_mark)
     t_pads = [0] * plan.num_points
     for g in plan.groups:
         for i in g.indices:

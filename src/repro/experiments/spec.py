@@ -267,4 +267,7 @@ class Experiment:
 
     def run(self, *, plan_kw: Optional[dict] = None, **execute_kw):
         from repro.experiments.executor import execute
-        return execute(self.plan(**(plan_kw or {})), **execute_kw)
+        from repro.obs.spans import maybe_span
+        with maybe_span("plan", experiment=self.name):
+            plan = self.plan(**(plan_kw or {}))
+        return execute(plan, **execute_kw)

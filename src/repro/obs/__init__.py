@@ -1,0 +1,21 @@
+"""repro.obs — one observability layer for the whole stack.
+
+Three parts (docs/observability.md):
+
+* :mod:`repro.obs.telemetry` — in-graph windowed counters: an optional
+  ``(n_windows, N_COUNTERS)`` scan accumulator in ``repro.core.famsim``,
+  statically gated by the ``FamConfig.telemetry`` compile tag (0 = off,
+  default path byte-identical);
+* :mod:`repro.obs.spans` — host span tracing: a dependency-free
+  Chrome/Perfetto trace-event emitter the executor, search loop, and
+  throughput benchmark are instrumented with (``maybe_span`` is a no-op
+  until a tracer is installed);
+* :mod:`repro.obs.report` — surfacing: the ``python -m repro.obs
+  report`` dashboard over saved window streams, histogram-bucket
+  percentile estimation (p50/p95/p99), and Chrome-trace validation.
+"""
+from repro.obs.spans import (SpanTracer, current_tracer,  # noqa: F401
+                             maybe_span, set_tracer)
+from repro.obs.telemetry import (COUNTERS, LAT_EDGES,  # noqa: F401
+                                 N_COUNTERS, counter_index, init_windows,
+                                 window_index)

@@ -1,0 +1,152 @@
+# analysis-scope: jit
+"""In-graph windowed telemetry counters for the FAM simulator.
+
+The simulator surfaces end-of-run scalars only; the paper's compute-node
+optimization is an *observability loop* (prefetch rate adapted from
+observed latencies, WFQ judged on tails), so this module adds the
+time-resolved half: a fixed-shape ``(n_windows, N_COUNTERS)`` float32
+accumulator that rides the scan carry of ``famsim._make_step`` and
+scatter-adds one row of per-system (node-summed) counter increments per
+live step into the step's window.
+
+Gating is STATIC: ``FamConfig.telemetry`` (= ``n_windows``; 0 = off) is
+a compile tag on ``geometry_free_shape()``. With the default 0 the step
+function is built without any of this — the traced program, its compile
+groups, and every derived metric stay byte-identical to the
+pre-telemetry simulator. With telemetry on, accumulation is purely
+observational: it reads the step's existing signals and never feeds
+back, so the non-telemetry metrics stay bit-identical too.
+
+Window semantics (asserted by tests/test_obs.py):
+
+* the step at trace index ``i`` lands in window
+  ``clip(i * n_windows // t_true, 0, n_windows - 1)`` — traced ``t_true``
+  arithmetic, so one masked executable serves every true length;
+* counters accumulate on every LIVE step, warm-up included (ramps are
+  the point; the end-of-run accumulators only count warm events, so
+  window sums equal end-of-run totals exactly when ``warmup_frac=0``);
+* a padded tail step (``live=False``) contributes exactly zero to every
+  window: event counters are gated through ``is_fam``/``pf_valid``
+  masks that already include ``live``, and the per-step gauges are
+  multiplied by ``live`` here.
+
+Counter catalog — see docs/observability.md for derived-stream recipes
+(hit-rate ramp, prefetch accuracy, p50/p95/p99 from the histogram):
+
+========================  =================================================
+``events``                live node-events (``N`` per live step)
+``demand_fam``            FAM-bound demand events
+``demand_hit``            ... that hit the DRAM cache (all cache content
+                          is prefetched, so this is also "useful
+                          prefetches consumed")
+``demand_late``           ... that matched a still-in-flight prefetch
+                          (prefetch issued, but too late)
+``pf_issued``             DRAM-cache prefetches issued to FAM
+``pf_redundant``          prefetch candidates dropped because the block
+                          was already cached or in flight
+``queue_occupancy``       gauge-sum: occupied prefetch-queue slots,
+                          summed over nodes once per live step
+                          (average per node-event = / ``events``)
+``wfq_demand_backlog``    gauge-sum: demand-chain busy-until minus mean
+                          node clock (cycles), once per live step
+                          (average per step = / (``events`` / N))
+``wfq_prefetch_backlog``  same for the prefetch chain — the backlog WFQ
+                          backpressure acts on
+``token_rate``            gauge-sum: adaptation issue rate, summed over
+                          nodes once per live step
+                          (average per node-event = / ``events``)
+``lat_sum``               total demand latency over FAM-bound demands
+                          (cycles; mean = / ``demand_fam``)
+``lat_le_<edge>``...      latency histogram: FAM-bound demand count per
+                          geometric bucket (upper edges ``LAT_EDGES``,
+                          final bucket ``lat_gt_<last>``)
+========================  =================================================
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: latency histogram upper edges (cycles), half-octave geometric — wide
+#: enough for a local hit (~90) through a congested FAM chain (>4096).
+#: Static: the bucket count shapes the telemetry array.
+LAT_EDGES = (128.0, 181.0, 256.0, 362.0, 512.0, 724.0, 1024.0, 1448.0,
+             2048.0, 2896.0, 4096.0)
+
+BASE_COUNTERS = (
+    "events", "demand_fam", "demand_hit", "demand_late",
+    "pf_issued", "pf_redundant", "queue_occupancy",
+    "wfq_demand_backlog", "wfq_prefetch_backlog", "token_rate", "lat_sum",
+)
+
+#: full counter-name tuple; index into the last telemetry-array axis
+COUNTERS = BASE_COUNTERS + tuple(
+    f"lat_le_{int(e)}" for e in LAT_EDGES) + (f"lat_gt_{int(LAT_EDGES[-1])}",)
+
+N_COUNTERS = len(COUNTERS)
+
+#: first histogram-bucket index into COUNTERS
+HIST_OFFSET = len(BASE_COUNTERS)
+N_BUCKETS = len(LAT_EDGES) + 1
+
+
+def counter_index(name: str) -> int:
+    return COUNTERS.index(name)
+
+
+def init_windows(n_windows: int) -> jnp.ndarray:
+    """The zero telemetry accumulator: ``(n_windows, N_COUNTERS)`` f32."""
+    return jnp.zeros((n_windows, N_COUNTERS), jnp.float32)
+
+
+def window_index(i, t_true, n_windows: int):
+    """Window of trace step ``i`` for a run of true length ``t_true``.
+
+    ``i`` may be a vector (the scan's step-index input is precomputed);
+    ``t_true`` is a traced scalar — indices are value arithmetic, not
+    shapes, so one executable serves every true length. Padded steps
+    (``i >= t_true``) clip into the last window; they carry
+    ``live=False`` and add zero there.
+    """
+    t = jnp.maximum(jnp.asarray(t_true, jnp.int32), 1)
+    w = (jnp.asarray(i, jnp.int32) * jnp.int32(n_windows)) // t
+    return jnp.clip(w, 0, n_windows - 1)
+
+
+def accumulate(windows, win, *, num_nodes: int, live, req, lat, nodes,
+               new_busy):
+    """Scatter-add one step's counter row into window ``win``.
+
+    Purely observational: reads phase A's request signals (``req``),
+    phase C's per-node demand latency (``lat``), the updated node state
+    and the scheduler's per-class busy-until times; writes only the
+    telemetry accumulator. Every event counter is gated through masks
+    that already include ``live``; the per-step gauges are gated here,
+    so a non-live (padded-tail) step adds an exact zero row.
+    """
+    f32 = jnp.float32
+    live_f = jnp.asarray(live).astype(f32)
+    is_fam = req["is_fam"]                       # (N,) bool, includes live
+    fam_f = is_fam.astype(f32)
+    lat_fam = jnp.where(is_fam, lat, 0.0)
+    clock_mean = jnp.mean(nodes.clock)
+    base = jnp.stack([
+        live_f * f32(num_nodes),                              # events
+        jnp.sum(fam_f),                                       # demand_fam
+        jnp.sum(req["hit"].astype(f32)),                      # demand_hit
+        jnp.sum(req["inflight"].astype(f32)),                 # demand_late
+        jnp.sum(req["pf_valid"].astype(f32)),                 # pf_issued
+        jnp.sum(jnp.asarray(req["pf_redundant"], f32)),       # pf_redundant
+        jnp.sum((nodes.queue.block > 0).astype(f32)) * live_f,
+        jnp.maximum(new_busy[0] - clock_mean, 0.0) * live_f,
+        jnp.maximum(new_busy[1] - clock_mean, 0.0) * live_f,
+        jnp.sum(nodes.throttle.issue_rate) * live_f,          # token_rate
+        jnp.sum(lat_fam),                                     # lat_sum
+    ])
+    edges = jnp.asarray(LAT_EDGES, f32)
+    bucket = jnp.sum((lat[:, None] > edges[None, :]).astype(jnp.int32),
+                     axis=1)                                  # (N,)
+    onehot = (bucket[:, None] ==
+              jnp.arange(N_BUCKETS, dtype=jnp.int32)[None, :]).astype(f32)
+    hist = jnp.sum(onehot * fam_f[:, None], axis=0)           # (N_BUCKETS,)
+    row = jnp.concatenate([base, hist])
+    return windows.at[win].add(row)

@@ -40,6 +40,7 @@ from repro.configs.base import FamConfig
 from repro.core.ipc_model import geomean
 from repro.experiments import Experiment, grid_axis, mix_axis
 from repro.experiments.executor import execute, group_cache_keys
+from repro.obs.spans import SpanTracer, maybe_span, set_tracer
 from repro.policies import PolicySet, SimFlags
 from repro.search.proposers import get_proposer
 from repro.search.space import SearchSpace
@@ -175,56 +176,69 @@ def run_search(space: SearchSpace, mixes: Mapping[str, Sequence[str]], *,
     timings = TrajectoryWriter(out / "timings.jsonl", append=resume)
     timing_rows: List[dict] = []
     gens_run = 0
+    # one host-span timeline for the whole search (repro.obs.spans):
+    # generation / plan / executor spans nest into out/trace.json, and
+    # each timings row carries its generation's span summary (via
+    # RunInfo.spans — same emitter schema as every other trace in the
+    # repo). Restore any caller-installed tracer on the way out.
+    tracer = SpanTracer(process_name=f"repro.search:{proposer}")
+    prev_tracer = set_tracer(tracer)
     try:
         if not resume:
             writer.write(header)
         for gen in range(start_gen, generations + 1):
-            samples = prop.ask()
-            gen_T = int(prop.round_T(T))
-            labels = [f"g{gen}c{i}" for i in range(len(samples))]
-            exp = generation_experiment(
-                space, samples, labels, mixes, base=base, T=gen_T,
-                seed=seed, trace_backend=trace_backend,
-                name=f"search_gen{gen}")
-            plan = exp.plan()
-            key_strs = [str(k) for k in
-                        group_cache_keys(plan, trace_backend=trace_backend)]
-            cand_keys = _candidate_keys(plan, key_strs)
-            new_keys = sorted(set(key_strs) - warm_keys)
+            with maybe_span("generation", gen=gen):
+                samples = prop.ask()
+                gen_T = int(prop.round_T(T))
+                labels = [f"g{gen}c{i}" for i in range(len(samples))]
+                exp = generation_experiment(
+                    space, samples, labels, mixes, base=base, T=gen_T,
+                    seed=seed, trace_backend=trace_backend,
+                    name=f"search_gen{gen}")
+                with maybe_span("plan", gen=gen):
+                    plan = exp.plan()
+                key_strs = [str(k) for k in
+                            group_cache_keys(plan,
+                                             trace_backend=trace_backend)]
+                cand_keys = _candidate_keys(plan, key_strs)
+                new_keys = sorted(set(key_strs) - warm_keys)
 
-            result = execute(plan, assert_compiles=assert_compiles)
-            info = result.info
+                result = execute(plan, assert_compiles=assert_compiles)
+                info = result.info
 
-            fitnesses = []
-            for lb, s in zip(labels, samples):
-                per_mix, obj = candidate_objective(result, lb, mixes)
-                keys = cand_keys[lb]
-                cold = sum(k not in warm_keys for k in keys)
-                fit = obj - compile_penalty * cold
-                fitnesses.append(fit)
-                cand = {"type": "candidate", "gen": gen, "label": lb,
-                        "sample": dict(s), "objective": obj, "fitness": fit,
-                        "per_mix": per_mix, "exec_key": "|".join(keys),
-                        "warm": cold == 0, "T": gen_T}
-                writer.write(cand)
-                consider(cand)
-            warm_keys.update(key_strs)
+                fitnesses = []
+                for lb, s in zip(labels, samples):
+                    per_mix, obj = candidate_objective(result, lb, mixes)
+                    keys = cand_keys[lb]
+                    cold = sum(k not in warm_keys for k in keys)
+                    fit = obj - compile_penalty * cold
+                    fitnesses.append(fit)
+                    cand = {"type": "candidate", "gen": gen, "label": lb,
+                            "sample": dict(s), "objective": obj,
+                            "fitness": fit, "per_mix": per_mix,
+                            "exec_key": "|".join(keys),
+                            "warm": cold == 0, "T": gen_T}
+                    writer.write(cand)
+                    consider(cand)
+                warm_keys.update(key_strs)
 
-            prop.tell(samples, fitnesses)
-            writer.write({"type": "generation", "gen": gen,
-                          "candidates": len(samples), "T": gen_T,
-                          "new_group_keys": len(new_keys),
-                          "proposer_state": prop.state(),
-                          "rng_state": rng.bit_generator.state})
-            trow = {"type": "generation_timing", "gen": gen,
-                    "new_group_keys": len(new_keys), **info.as_dict()}
-            trow.pop("groups", None)
-            timings.write(trow)
-            timing_rows.append(trow)
-            gens_run += 1
+                prop.tell(samples, fitnesses)
+                writer.write({"type": "generation", "gen": gen,
+                              "candidates": len(samples), "T": gen_T,
+                              "new_group_keys": len(new_keys),
+                              "proposer_state": prop.state(),
+                              "rng_state": rng.bit_generator.state})
+                trow = {"type": "generation_timing", "gen": gen,
+                        "new_group_keys": len(new_keys), **info.as_dict()}
+                trow.pop("groups", None)
+                timings.write(trow)
+                timing_rows.append(trow)
+                gens_run += 1
     finally:
         writer.close()
         timings.close()
+        set_tracer(prev_tracer)
+        tracer.save(out / "trace.json")
 
     if best is None:
         raise RuntimeError("search produced no full-budget candidate "
@@ -242,6 +256,7 @@ def run_search(space: SearchSpace, mixes: Mapping[str, Sequence[str]], *,
     write_best(out / "best.json", best_record)
     return {"best": best_record, "trajectory": str(traj_path),
             "best_path": str(out / "best.json"),
+            "trace": str(out / "trace.json"),
             "generations_run": gens_run, "timings": timing_rows}
 
 

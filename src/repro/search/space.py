@@ -59,6 +59,10 @@ STATIC_CFG_FIELDS = frozenset({
     # different traced program — bit-identical outputs, but a move along
     # it always recompiles (see docs/performance.md)
     "kernel_backend",
+    # in-graph telemetry window count (repro.obs): a compile tag on
+    # geometry_free_shape() — turning it on (or changing the window
+    # count) builds a different step function and recompiles
+    "telemetry",
 })
 
 #: traced cfg fields that still size the group's PADDED allocation:

@@ -154,7 +154,7 @@ def test_phase_c_uses_phase_a_cpf_lines():
     d_fin = jnp.float32(500.0)
     pf_fin = jnp.zeros((cfg.prefetch_degree,), jnp.float32)
     cpf_fin = jnp.full((famsim.CORE_PF_DEGREE,), 400.0, jnp.float32)
-    ns3 = famsim._phase_c(cfg, p, ns2, req, d_fin, pf_fin, cpf_fin)
+    ns3, _ = famsim._phase_c(cfg, p, ns2, req, d_fin, pf_fin, cpf_fin)
     recorded = np.asarray(ns3.core_buf_line)
     recorded = recorded[recorded > 0] - 1
     valid = np.asarray(req["cpf_valid"])
@@ -172,8 +172,8 @@ def test_phase_c_records_nothing_when_stride_breaks():
     ns2, req = famsim._phase_a(cfg, p, ns, addr, jnp.float32(10.0),
                                jnp.bool_(True))
     assert not np.asarray(req["cpf_valid"]).any()
-    ns3 = famsim._phase_c(cfg, p, ns2, req, jnp.float32(500.0),
-                          jnp.zeros((cfg.prefetch_degree,), jnp.float32),
-                          jnp.full((famsim.CORE_PF_DEGREE,), 400.0,
-                                   jnp.float32))
+    ns3, _ = famsim._phase_c(cfg, p, ns2, req, jnp.float32(500.0),
+                             jnp.zeros((cfg.prefetch_degree,), jnp.float32),
+                             jnp.full((famsim.CORE_PF_DEGREE,), 400.0,
+                                      jnp.float32))
     assert (np.asarray(ns3.core_buf_line) == 0).all()
