@@ -438,6 +438,29 @@ def save_rows(figure: str, rows: List[dict]):
     (RESULTS / f"{figure}.json").write_text(json.dumps(rows, indent=2))
 
 
+def plan_lines(plan, axes=None) -> List[str]:
+    """The ``--plan`` dry-run text for one resolved plan: the summary
+    line, an ``axes:`` line naming every axis and its size (so
+    programmatic ``grid_axis`` grids — e.g. fig_pond's fleet cells — are
+    inspectable before running), and one line per compile group. Shared
+    by ``run.py --plan`` and ``fig_pond --plan``; deterministic, so
+    tests assert the one-group ceilings on this exact output."""
+    events = plan.events()
+    padded = plan.padded_events()
+    lines = [f"{plan.name}: {plan.num_groups} group(s), "
+             f"{plan.num_points} points, {events} events "
+             f"(+{padded} padded, {padded / max(events, 1):.1%} overhead)"]
+    if axes:
+        lines.append("  axes: " + " x ".join(
+            f"{a.name}({len(a.values)})" for a in axes))
+    for i, d in enumerate(plan.describe()):
+        lines.append(f"  group {i}: S={d['S']} S_pad={d['S_pad']} "
+                     f"N={d['N']} T_pad={d['T_pad']} "
+                     f"pad_geom=({d['pad_sets']}x{d['pad_ways']}) "
+                     f"key={d['static_shape']}")
+    return lines
+
+
 def workloads(quick: bool) -> List[str]:
     if quick:
         return QUICK_WORKLOADS

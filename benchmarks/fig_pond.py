@@ -1,0 +1,162 @@
+"""Multi-tenant fleet scenario driver (``run.py pond``).
+
+The Pond-style companion to the paper figures (docs/tenants.md): sweeps
+tenant count x weight skew x admission policy as ONE compile group —
+every tenant of every fleet (plus the deduplicated isolated baselines)
+is a vmap lane of a single ``grid_axis("tenant", ...)`` Experiment over
+``repro.tenants``. Per-tenant QoS knobs (WFQ weight, issue-rate
+entitlement) ride traced policy params, contention-derated bandwidth/
+latency ride traced config scalars, and admission gates lifetimes
+through the masked runner's ``t_live`` — so fleet size only widens the
+vmap lane.
+
+Rows (results/benchmarks/fig_pond.json): one row per fleet with the
+tail/fairness aggregates (p50/p95/p99 from the in-graph histogram,
+slowdown-vs-isolated geomean, Jain index, SLO-violation counts) AND the
+full per-tenant records under ``tenants`` (schema:
+``repro.tenants.metrics.TENANT_SCHEMA`` — the CI pond-smoke gate
+validates it), plus the standard ``pond_engine`` accounting row. The
+run executes under ``assert_compiles=True`` and this driver additionally
+asserts the planner folded everything into exactly one group.
+
+    python -m benchmarks.run pond --quick       # {16,64,256} tenants
+    python -m benchmarks.run pond --full        # adds 1024-tenant fleets
+    python -m benchmarks.run pond --plan        # dry-run the fleet grids
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional, Sequence
+
+# allow `python benchmarks/fig_pond.py` (script path on sys.path only)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import (QUICK_WORKLOADS, info_row, plan_lines,
+                               save_rows)
+from repro.configs.base import FamConfig
+from repro.tenants import (FleetSpec, fleet_report, lower_fleets,
+                           make_tenants)
+
+T = 4096
+T_QUICK = 1024
+N_WINDOWS = 8
+
+#: the sweep: tenant count x weight skew x admission policy
+COUNTS = (16, 64, 256, 1024)
+COUNTS_QUICK = (16, 64, 256)
+SKEWS = ("uniform", "zipf")
+ADMISSIONS = ("none", "cap", "load_shed")
+ADMISSIONS_QUICK = ("none", "load_shed")
+
+
+def default_fleets(quick: bool = True) -> List[FleetSpec]:
+    counts = COUNTS_QUICK if quick else COUNTS
+    admissions = ADMISSIONS_QUICK if quick else ADMISSIONS
+    pool = QUICK_WORKLOADS if quick else None
+    fleets = []
+    for count in counts:
+        for skew in SKEWS:
+            for adm in admissions:
+                fleets.append(FleetSpec(
+                    name=f"c{count}_{skew}_{adm}",
+                    tenants=make_tenants(count, skew=skew, workloads=pool),
+                    admission=adm, max_tenants=count // 2))
+    return fleets
+
+
+def lowered(quick: bool = True, kernel_backend: str = "xla",
+            telemetry: int = 0, trace_backend: str = "device",
+            fleets: Optional[Sequence[FleetSpec]] = None):
+    base = FamConfig(kernel_backend=kernel_backend,
+                     telemetry=telemetry or N_WINDOWS)
+    return lower_fleets(fleets if fleets is not None
+                        else default_fleets(quick),
+                        base=base, T=T_QUICK if quick else T,
+                        trace_backend=trace_backend, name="fig_pond")
+
+
+def experiment(quick: bool = True, kernel_backend: str = "xla",
+               telemetry: int = 0, trace_backend: str = "device"):
+    """The ``--plan`` hook (same shape as every figure module's)."""
+    return lowered(quick, kernel_backend, telemetry, trace_backend
+                   ).experiment
+
+
+def run(quick: bool = True, trace_backend: str = "device",
+        kernel_backend: str = "xla", telemetry: int = 0,
+        fleets: Optional[Sequence[FleetSpec]] = None) -> List[dict]:
+    low = lowered(quick, kernel_backend, telemetry, trace_backend,
+                  fleets=fleets)
+    biggest = max(f.size for f in low.fleets)
+    assert biggest >= 256 or fleets is not None, \
+        f"fleet sweep tops out at {biggest} tenants (acceptance: >= 256)"
+    plan = low.experiment.plan()
+    assert plan.num_groups == 1, (
+        f"fleet sweep planned {plan.num_groups} compile groups — the "
+        "whole population must fold into ONE (a static tag leaked; run "
+        "python -m repro.analysis)", [str(g.key) for g in plan.groups])
+    result = low.experiment.run(assert_compiles=True)
+    info = result.info
+    assert info.xla_compiles <= 1, info.groups
+    summaries, records = fleet_report(result, low)
+    by_fleet = {}
+    for r in records:
+        by_fleet.setdefault(r["fleet"], []).append(r)
+    rows = []
+    for s in summaries:
+        rows.append({"name": f"pond_{s['fleet']}",
+                     "us_per_call": info.us_per_call(), **s,
+                     "tenants_detail": by_fleet[s["fleet"]]})
+    rows.append(info_row("pond_engine", info,
+                         fleets=len(low.fleets),
+                         tenant_lanes=len(low.cells),
+                         isolated_lanes=len(low.iso_labels),
+                         largest_fleet=biggest))
+    save_rows("fig_pond", rows)
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Multi-tenant fleet scenario (repro.tenants)")
+    ap.add_argument("--quick", action="store_true", default=True,
+                    help="CI-scale fleets {16,64,256} at T=1024 (the "
+                         "default; --full overrides)")
+    ap.add_argument("--full", action="store_true",
+                    help="adds 1024-tenant fleets and the 'cap' "
+                         "admission column, T=4096, all 19 workloads")
+    ap.add_argument("--plan", action="store_true",
+                    help="dry-run: print the fleet grid's compile "
+                         "group(s) and axis sizes without executing")
+    ap.add_argument("--trace-backend", choices=("device", "numpy"),
+                    default="device")
+    ap.add_argument("--kernel-backend", choices=("xla", "pallas"),
+                    default="xla")
+    ap.add_argument("--telemetry", type=int, default=0,
+                    metavar="N_WINDOWS",
+                    help=f"histogram windows per run (default "
+                         f"{N_WINDOWS}; always on — tail metrics need "
+                         "the in-graph histogram)")
+    args = ap.parse_args(argv)
+    quick = not args.full
+
+    if args.plan:
+        exp = experiment(quick, args.kernel_backend, args.telemetry,
+                         args.trace_backend)
+        for line in plan_lines(exp.plan(), exp.axes):
+            print(line)
+        return
+
+    print("name,us_per_call,derived")
+    rows = run(quick=quick, trace_backend=args.trace_backend,
+               kernel_backend=args.kernel_backend,
+               telemetry=args.telemetry)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.3f},\"{r['derived']}\"",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,13 @@ driver (``benchmarks.fig_search`` over ``repro.search``)::
     python -m benchmarks.run bench                    # both backends
     python -m benchmarks.run bench --quick            # CI scale
 
+``pond`` runs the multi-tenant fleet scenario (``benchmarks.fig_pond``
+over ``repro.tenants`` — see docs/tenants.md)::
+
+    python -m benchmarks.run pond --quick             # CI-scale fleets
+    python -m benchmarks.run pond --full              # up to 1024 tenants
+    python -m benchmarks.run pond --plan              # dry-run the grids
+
 ``--kernel-backend pallas`` routes the figures' cache engine through the
 fused Pallas kernel (bit-identical to the default ``xla`` path; see
 docs/performance.md)::
@@ -73,6 +80,12 @@ def main(argv=None) -> None:
         # so does the throughput-benchmark subcommand
         from benchmarks import bench_famsim
         bench_famsim.main(argv[1:])
+        return
+    if argv and argv[0] == "pond":
+        # multi-tenant fleet scenario (benchmarks.fig_pond over
+        # repro.tenants — see docs/tenants.md)
+        from benchmarks import fig_pond
+        fig_pond.main(argv[1:])
         return
     ap = argparse.ArgumentParser(
         description="Run paper-figure benchmarks through repro.experiments")
@@ -226,25 +239,18 @@ def print_plans(figures, quick: bool, policies=None,
     one-group-per-figure ceilings on this exact output. With ``policies``
     (the --policies matrix) the figure's policy experiment is planned
     instead."""
+    from benchmarks.common import plan_lines
     for key, mod in figures.items():
         if policies is not None:
-            plan = mod.policy_experiment(
+            exp = mod.policy_experiment(
                 policies, quick=quick, kernel_backend=kernel_backend,
-                telemetry=telemetry).plan()
+                telemetry=telemetry)
         else:
-            plan = mod.experiment(
+            exp = mod.experiment(
                 quick=quick, kernel_backend=kernel_backend,
-                telemetry=telemetry).plan()
-        events = plan.events()
-        padded = plan.padded_events()
-        print(f"{plan.name}: {plan.num_groups} group(s), "
-              f"{plan.num_points} points, {events} events "
-              f"(+{padded} padded, {padded / max(events, 1):.1%} overhead)")
-        for i, d in enumerate(plan.describe()):
-            print(f"  group {i}: S={d['S']} S_pad={d['S_pad']} "
-                  f"N={d['N']} T_pad={d['T_pad']} "
-                  f"pad_geom=({d['pad_sets']}x{d['pad_ways']}) "
-                  f"key={d['static_shape']}")
+                telemetry=telemetry)
+        for line in plan_lines(exp.plan(), exp.axes):
+            print(line)
 
 
 if __name__ == "__main__":

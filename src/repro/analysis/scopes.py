@@ -122,6 +122,10 @@ DT_SCOPE_SUFFIXES: Tuple[str, ...] = (
     # contracts: seeded-Generator-only RNG, no wall clock, no set-order
     # dependence anywhere in the package
     "repro/search/",
+    # tenant fleets lower onto compile-keyed experiments: seed derivation,
+    # admission order, and the per-tenant record schema are all
+    # byte-identity contracts
+    "repro/tenants/",
     "benchmarks/",
 )
 

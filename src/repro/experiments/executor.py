@@ -88,7 +88,7 @@ class RunInfo:
     #: moving only traced params) should drive to ``planned_groups``
     groups_reused: int = 0
     systems: int = 0
-    events: int = 0                # true simulated events (sum S*N*T)
+    events: int = 0                # true simulated events (sum N*t_true)
     padded_events: int = 0         # extra events paid to T/S padding
     padded_systems: int = 0        # inert systems added for canonical S
     devices: int = 1
@@ -243,10 +243,14 @@ def _prepare(points: Sequence[ResolvedPoint], idxs: Sequence[int],
         inputs = (addrs, gaps)
     params = stack_params([FamParams.of(pt.cfg, pt.flags, pt.policy_set())
                            for pt in pts])
-    t_true = np.array([pt.T for pt in pts], np.int32)
+    # ``pt.t_true`` == pt.T unless the point is lifetime-gated (t_live,
+    # e.g. an admission-throttled tenant): the traced masked-runner input
+    # no-ops the non-live tail, never the compile key
+    t_true = np.array([pt.t_true for pt in pts], np.int32)
     # host-side int arithmetic, matching famsim._make_run's static
     # ``int(T * warmup_frac)`` exactly
-    warm_start = np.array([int(pt.T * warmup_frac) for pt in pts], np.int32)
+    warm_start = np.array([int(pt.t_true * warmup_frac) for pt in pts],
+                          np.int32)
     return _GroupData(params, inputs, t_true, warm_start,
                       host_trace_events=host_events,
                       prep_s=time.perf_counter() - t0)
@@ -547,7 +551,7 @@ def execute(plan: Plan, *, devices: Optional[int] = None,
                 group0_data, group0_out = data, out
 
             true_events = sum(len(plan.points[i].workloads) *
-                              plan.points[i].T for i in g.indices)
+                              plan.points[i].t_true for i in g.indices)
             info.run_s += run_s
             info.systems += g.size
             info.events += true_events

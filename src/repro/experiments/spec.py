@@ -52,6 +52,13 @@ class AxisValue:
     T: Optional[int] = None
     seed: Optional[int] = None
     policies: Optional[PolicySet] = None
+    #: live step count <= T: the point simulates only its first ``t_live``
+    #: events through the masked runner's traced ``t_true`` input (the
+    #: remaining steps are exact no-ops). Planner membership still keys on
+    #: ``T`` — gating a point's lifetime never moves it between compile
+    #: groups, which is what lets an admission controller throttle
+    #: tenants without recompiling. None = fully live (t_live == T).
+    t_live: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -119,7 +126,7 @@ def grid_axis(name: str, values: Mapping[str, Mapping[str, Any]]) -> Axis:
     hand-rolling AxisValue tuples.
     """
     allowed = {"cfg", "flags", "workload", "workloads", "nodes", "T",
-               "seed", "policies"}
+               "seed", "policies", "t_live"}
     out = []
     for label, fields in values.items():
         unknown = set(fields) - allowed
@@ -178,10 +185,21 @@ class ResolvedPoint:
     seed: int = 0
     coords: Tuple[Tuple[str, str], ...] = ()
     policies: Optional[PolicySet] = None
+    #: live step count (see :class:`AxisValue`); None = fully live
+    t_live: Optional[int] = None
 
     @property
     def num_nodes(self) -> int:
         return len(self.workloads)
+
+    @property
+    def t_true(self) -> int:
+        """The step count this point actually simulates — what the
+        executor feeds the masked runner's traced ``t_true`` input and
+        what the true-events accounting charges. ``T`` stays the
+        allocation/planning length (``t_live is None`` means fully
+        live)."""
+        return self.T if self.t_live is None else self.t_live
 
     def policy_set(self) -> PolicySet:
         if self.policies is not None:
@@ -228,6 +246,7 @@ class Experiment:
             # replicates over the node count, ("tuple", ws) is explicit
             wl = ("tuple", tuple(self.workloads)) if self.workloads else None
             nodes, T, seed = self.nodes, self.T, self.seed
+            t_live = None
             for av in combo:
                 if av.cfg:
                     cfg = fam_replace(cfg, **dict(av.cfg))
@@ -245,6 +264,8 @@ class Experiment:
                     T = av.T
                 if av.seed is not None:
                     seed = av.seed
+                if av.t_live is not None:
+                    t_live = av.t_live
             workloads = None
             if wl is not None:
                 workloads = (wl[1],) * nodes if wl[0] == "single" else wl[1]
@@ -253,11 +274,17 @@ class Experiment:
                     f"experiment {self.name!r}: no workload for cell "
                     f"{[av.label for av in combo]} — add a workload/mix "
                     "axis or set Experiment.workloads")
+            if t_live is not None and not 0 <= t_live <= T:
+                raise ValueError(
+                    f"experiment {self.name!r}: t_live={t_live} out of "
+                    f"range for T={T} at cell "
+                    f"{[av.label for av in combo]} (need 0 <= t_live <= T)")
             coords = tuple((ax.name, av.label)
                            for ax, av in zip(self.axes, combo))
             out.append(ResolvedPoint(cfg=cfg, flags=flags,
                                      workloads=workloads, T=T, seed=seed,
-                                     coords=coords, policies=pol))
+                                     coords=coords, policies=pol,
+                                     t_live=t_live))
         return tuple(out)
 
     def plan(self, **kw):

@@ -14,8 +14,10 @@ Three parts (docs/observability.md):
   report`` dashboard over saved window streams, histogram-bucket
   percentile estimation (p50/p95/p99), and Chrome-trace validation.
 """
+from repro.obs.report import (bucket_exceedance,  # noqa: F401
+                              bucket_percentile)
 from repro.obs.spans import (SpanTracer, current_tracer,  # noqa: F401
                              maybe_span, set_tracer)
 from repro.obs.telemetry import (COUNTERS, LAT_EDGES,  # noqa: F401
-                                 N_COUNTERS, counter_index, init_windows,
-                                 window_index)
+                                 N_BUCKETS, N_COUNTERS, counter_index,
+                                 init_windows, window_index)

@@ -69,10 +69,17 @@ def _hist(windows: np.ndarray) -> np.ndarray:
                                            HIST_OFFSET + N_BUCKETS]
 
 
-def _bucket_percentile(counts: np.ndarray, q: float) -> float:
+def bucket_percentile(counts: np.ndarray, q: float) -> float:
     """Estimate the q-th percentile from one histogram row by linear
     interpolation inside the covering bucket (last bucket is open-ended;
-    its interpolation span caps at 1.5x the last edge)."""
+    its interpolation span caps at 1.5x the last edge).
+
+    THE latency-percentile implementation: the telemetry dashboard
+    (:func:`window_percentiles` / :func:`overall_percentiles`) and the
+    per-tenant tail metrics (``repro.tenants.metrics``) both call this —
+    a second copy would silently drift on the open-bucket convention.
+    ``counts`` is one ``(N_BUCKETS,)`` row binned on ``LAT_EDGES``."""
+    counts = np.asarray(counts, np.float64)
     total = counts.sum()
     if total <= 0:
         return 0.0
@@ -85,6 +92,32 @@ def _bucket_percentile(counts: np.ndarray, q: float) -> float:
         seen += n
         lo = hi
     return lo
+
+
+#: backward-compatible private alias (pre-factor spelling)
+_bucket_percentile = bucket_percentile
+
+
+def bucket_exceedance(counts: np.ndarray, threshold: float) -> float:
+    """Estimated number of events whose latency exceeds ``threshold``
+    cycles, from one histogram row — the SLO-violation estimator of
+    ``repro.tenants.metrics``. Uses the same linear-within-bucket model
+    and open-ended last-bucket convention as :func:`bucket_percentile`:
+    the covering bucket contributes the fraction of its span above the
+    threshold; buckets entirely above contribute fully."""
+    counts = np.asarray(counts, np.float64)
+    total = counts.sum()
+    if total <= 0 or threshold <= 0:
+        return float(total)
+    over, lo = 0.0, 0.0
+    for b, n in enumerate(counts):
+        hi = LAT_EDGES[b] if b < len(LAT_EDGES) else LAT_EDGES[-1] * 1.5
+        if threshold <= lo:
+            over += n
+        elif threshold < hi:
+            over += n * (hi - threshold) / (hi - lo)
+        lo = hi
+    return float(over)
 
 
 def window_percentiles(windows: np.ndarray,

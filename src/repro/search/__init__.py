@@ -7,6 +7,9 @@
   registry (``random`` / ``evolutionary`` / ``halving``);
 * :mod:`repro.search.loop` — the driver batching each generation into
   one Experiment, with a compile-cost-penalized fitness;
+* :mod:`repro.search.objectives` — the pluggable objective registry
+  (default: the fig14 mix-IPC objective; ``repro.tenants.search``
+  registers the ``pond_tail`` fleet objective);
 * :mod:`repro.search.trajectory` — the deterministic JSONL trajectory +
   ``best.json`` reproducible-winner artifacts.
 
@@ -19,6 +22,13 @@ from repro.search.loop import (  # noqa: F401
     generation_experiment,
     replay_best,
     run_search,
+)
+from repro.search.objectives import (  # noqa: F401
+    MixObjective,
+    Objective,
+    available_objectives,
+    get_objective,
+    register_objective,
 )
 from repro.search.proposers import (  # noqa: F401
     EvolutionaryProposer,

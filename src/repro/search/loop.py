@@ -114,7 +114,9 @@ def _candidate_keys(plan, key_strs: Sequence[str]) -> Dict[str, Tuple[str, ...]]
 
 # -- the driver -------------------------------------------------------------
 
-def run_search(space: SearchSpace, mixes: Mapping[str, Sequence[str]], *,
+def run_search(space: SearchSpace,
+               mixes: Optional[Mapping[str, Sequence[str]]] = None, *,
+               objective=None,
                proposer: str = "evolutionary", generations: int = 3,
                population: int = 8, T: int = 10_000, seed: int = 0,
                base: Optional[FamConfig] = None,
@@ -125,6 +127,12 @@ def run_search(space: SearchSpace, mixes: Mapping[str, Sequence[str]], *,
                proposer_opts: Optional[dict] = None) -> dict:
     """Run (or resume) a search; returns a summary dict with the winner.
 
+    ``mixes`` selects the classic fig14 IPC objective; ``objective``
+    (an :class:`~repro.search.objectives.Objective` instance or a
+    registered name, e.g. ``"pond_tail"`` from ``repro.tenants.search``)
+    swaps in a different evaluation scenario — it owns both the
+    per-generation grid and the per-candidate score (docs/search.md).
+
     ``resume=True`` continues an existing ``out_dir/trajectory.jsonl``
     from its last completed generation up to ``generations`` total: the
     RNG bit-generator state and proposer state round-trip through the
@@ -132,16 +140,23 @@ def run_search(space: SearchSpace, mixes: Mapping[str, Sequence[str]], *,
     recorded candidate exec keys, so the remaining generations are
     byte-identical to an uninterrupted run.
     """
+    from repro.search.objectives import MixObjective, resolve_objective
+
+    obj_impl = resolve_objective(objective, mixes)
     base = base or FamConfig()
     out = Path(out_dir)
     traj_path = out / "trajectory.jsonl"
     header = {
         "type": "header", "space": space.describe(), "proposer": proposer,
         "seed": seed, "generations": generations, "population": population,
-        "T": T, "mixes": {k: list(v) for k, v in mixes.items()},
+        "T": T, "mixes": obj_impl.header_mixes(),
         "base_cfg": dataclasses.asdict(base),
         "compile_penalty": compile_penalty,
     }
+    if obj_impl.name != MixObjective.name:
+        # the default objective keeps pre-objective trajectories
+        # byte-identical; anything else records its identity
+        header["objective"] = obj_impl.name
     rng = np.random.default_rng(seed)
     prop = get_proposer(proposer)(space, rng, population,
                                   **(proposer_opts or {}))
@@ -191,8 +206,8 @@ def run_search(space: SearchSpace, mixes: Mapping[str, Sequence[str]], *,
                 samples = prop.ask()
                 gen_T = int(prop.round_T(T))
                 labels = [f"g{gen}c{i}" for i in range(len(samples))]
-                exp = generation_experiment(
-                    space, samples, labels, mixes, base=base, T=gen_T,
+                exp = obj_impl.build(
+                    space, samples, labels, base=base, T=gen_T,
                     seed=seed, trace_backend=trace_backend,
                     name=f"search_gen{gen}")
                 with maybe_span("plan", gen=gen):
@@ -208,7 +223,7 @@ def run_search(space: SearchSpace, mixes: Mapping[str, Sequence[str]], *,
 
                 fitnesses = []
                 for lb, s in zip(labels, samples):
-                    per_mix, obj = candidate_objective(result, lb, mixes)
+                    per_mix, obj = obj_impl.score(result, lb)
                     keys = cand_keys[lb]
                     cold = sum(k not in warm_keys for k in keys)
                     fit = obj - compile_penalty * cold

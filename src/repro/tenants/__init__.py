@@ -1,0 +1,36 @@
+"""repro.tenants — Pond-style multi-tenant fleets on the sweep engine.
+
+The scenario the ROADMAP's top open item asked for: tenants as a
+first-class axis over the existing WorkloadSpecs, scheduler/adaptation
+policies, and padded system axis, scaled to ~1000 tenants under ONE
+compile group. Five pieces (docs/tenants.md):
+
+* :mod:`repro.tenants.spec` — declarative :class:`TenantSpec` /
+  :class:`FleetSpec` (workload, WFQ weight, rate entitlement, SLO);
+* :mod:`repro.tenants.admission` — fleet-level admission mechanisms
+  (``none`` / ``cap`` / ``load_shed``) returning per-tenant live
+  fractions, lowered onto the masked runner's traced lifetime input;
+* :mod:`repro.tenants.lower` — the lowering: tenants -> vmap lanes, QoS
+  -> traced policy params, contention -> traced config scalars,
+  admission -> ``t_live``, isolated baselines embedded per archetype;
+* :mod:`repro.tenants.metrics` — per-tenant p50/p95/p99 (shared
+  ``repro.obs`` histogram estimator), SLO violations,
+  slowdown-vs-isolated, Jain fairness;
+* :mod:`repro.tenants.search` — the ``pond_tail`` search objective
+  (tail-latency-aware QoS tuning through ``repro.search``).
+
+Driver: ``benchmarks/fig_pond.py`` (``python -m benchmarks.run pond``).
+"""
+from repro.tenants.admission import (ADMISSIONS, admit,  # noqa: F401
+                                     priority_order, register_admission)
+from repro.tenants.lower import (Contention, Lowered,  # noqa: F401
+                                 TenantCell, cache_slice_bytes, contention,
+                                 fleet_axis_cells, lower_fleets,
+                                 offered_load, tenant_policies)
+from repro.tenants.metrics import (TENANT_SCHEMA,  # noqa: F401
+                                   fleet_report, fleet_summary,
+                                   jain_index, latency_hist,
+                                   tenant_record, validate_tenant_records)
+from repro.tenants.spec import (FleetSpec, TenantSpec,  # noqa: F401
+                                make_tenants, qos_for_weight, skew_weight,
+                                tenant_seed)

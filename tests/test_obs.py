@@ -16,7 +16,7 @@ from repro.core.famsim import SimFlags, build_sim
 from repro.core.traces import generate, node_seed
 from repro.experiments import (Axis, AxisValue, Experiment, execute,
                                flag_axis, workload_axis)
-from repro.obs import (COUNTERS, LAT_EDGES, N_COUNTERS, SpanTracer,
+from repro.obs import (COUNTERS, LAT_EDGES, N_BUCKETS, N_COUNTERS, SpanTracer,
                        counter_index, current_tracer, init_windows,
                        maybe_span, set_tracer, window_index)
 from repro.obs.report import (derived_streams, overall_percentiles,
@@ -344,3 +344,53 @@ def test_render_report_dashboard():
     assert "workload=LU" in text
     md = render_report(payload, fmt="md")
     assert "| win |" in md and "|---" in md
+
+
+# ---------------------------------------------------------------------------
+# the shared bucket estimators (repro.obs.report — imported by
+# repro.tenants.metrics; the single percentile implementation)
+# ---------------------------------------------------------------------------
+
+def test_bucket_percentile_exact_interpolation():
+    from repro.obs import bucket_percentile
+
+    counts = np.zeros(N_BUCKETS)
+    counts[0] = 10.0                       # bucket [0, 128)
+    counts[-1] = 10.0                      # overflow [4096, 6144]
+    # p50 lands exactly at the top of bucket 0
+    assert bucket_percentile(counts, 50.0) == pytest.approx(128.0)
+    # p75 is 5/10 into the overflow bucket: 4096 + 0.5 * 2048
+    assert bucket_percentile(counts, 75.0) == pytest.approx(5120.0)
+    # q=100 tops out at the capped overflow edge
+    assert bucket_percentile(counts, 100.0) == pytest.approx(6144.0)
+    # single mid bucket [181, 256): p50 interpolates to the midpoint
+    one = np.zeros(N_BUCKETS)
+    one[2] = 8.0
+    assert bucket_percentile(one, 50.0) == pytest.approx(218.5)
+    # empty histogram reports 0, not NaN
+    assert bucket_percentile(np.zeros(N_BUCKETS), 99.0) == 0.0
+    # accepts plain lists (np coercion happens inside)
+    assert bucket_percentile([0.0] * 11 + [4.0], 50.0) > LAT_EDGES[-1]
+
+
+def test_bucket_exceedance_interpolates_threshold():
+    from repro.obs import bucket_exceedance
+
+    counts = np.zeros(N_BUCKETS)
+    counts[2] = 8.0                        # all mass in [181, 256)
+    # threshold at the bucket floor: everything exceeds
+    assert bucket_exceedance(counts, 181.0) == pytest.approx(8.0)
+    # midpoint: half the bucket exceeds (uniform-in-bucket assumption)
+    assert bucket_exceedance(counts, 218.5) == pytest.approx(4.0)
+    # at/above the bucket ceiling: nothing does
+    assert bucket_exceedance(counts, 256.0) == pytest.approx(0.0)
+    assert bucket_exceedance(counts, 10_000.0) == 0.0
+    # threshold <= 0 counts the whole histogram
+    assert bucket_exceedance(counts, 0.0) == pytest.approx(8.0)
+    # round-trip with the percentile estimator: by construction ~5% of
+    # the mass sits above the p95 estimate
+    mixed = np.arange(N_BUCKETS, dtype=float)
+    from repro.obs import bucket_percentile
+    p95 = bucket_percentile(mixed, 95.0)
+    assert bucket_exceedance(mixed, p95) == pytest.approx(
+        0.05 * mixed.sum(), rel=1e-6)

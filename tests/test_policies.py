@@ -462,3 +462,36 @@ def test_new_policy_combo_through_executor():
     got = res.get(policy="combo")
     for k, v in ref.items():
         np.testing.assert_array_equal(np.asarray(v), got[k], err_msg=k)
+
+
+def test_wfq_fairness_bound_64_distinct_weights():
+    """The deficit-round-robin fairness-gap bound of
+    ``test_schedule_batch_deficit_round_robin_fairness`` must survive the
+    multi-tenant regime: >= 64 DISTINCT per-tenant weights riding one
+    traced weight input through one jitted executable (exactly how
+    repro.tenants lowers a fleet's WFQ entitlements — weight is a vmap
+    lane, never a compile key). For every weight w, consecutive
+    prefetch-grant gaps stay <= 2*(w+1) and prefetch never starves."""
+    from repro.core import wfq
+
+    max_issues = 256
+
+    def drain(w):
+        _, order = wfq.schedule_batch(
+            wfq.init_wfq(), jnp.int32(512), jnp.int32(512),
+            weight=w, max_issues=max_issues)
+        return order
+
+    weights = jnp.arange(1, 65, dtype=jnp.int32)      # 64 distinct weights
+    orders = np.asarray(jax.jit(jax.vmap(drain))(weights))
+    assert orders.shape == (64, max_issues)
+    for w, order in zip(np.asarray(weights), orders):
+        assert not np.any(order == wfq.IDLE)          # saturated backlog
+        pf = np.flatnonzero(order == wfq.PREFETCH)
+        bound = 2 * (int(w) + 1)
+        # no starvation: at least the DRR floor of prefetch grants
+        assert len(pf) >= max(1, max_issues // bound - 1), int(w)
+        # first grant arrives within one full demand quantum
+        assert pf[0] <= bound, int(w)
+        if len(pf) > 1:
+            assert int(np.diff(pf).max()) <= bound, int(w)

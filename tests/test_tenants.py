@@ -1,0 +1,250 @@
+"""repro.tenants: the multi-tenant fleet scenario must lower onto ONE
+compile group (admission mechanism and fleet size never key compiles),
+the masked-runner lifetime gate (``t_live``) must be bit-exact against
+a genuinely shorter run and fully inert at zero, the embedded isolated
+baselines must make uncontended slowdown exactly 1.0, the fleet report
+must satisfy the published per-tenant schema, and the ``pond_tail``
+search objective must ride warm executables after generation 1."""
+import numpy as np
+import pytest
+
+from repro.configs.base import FamConfig
+from repro.experiments import Experiment, grid_axis
+from repro.experiments.executor import group_cache_keys
+from repro.tenants import (ADMISSIONS, FleetSpec, TenantSpec, admit,
+                           fleet_report, lower_fleets, make_tenants,
+                           offered_load, priority_order, tenant_seed)
+from repro.tenants.metrics import TENANT_SCHEMA, validate_tenant_records
+
+BASE = FamConfig()
+
+
+# ---------------------------------------------------------------------------
+# specs + admission (host-side, no jax)
+# ---------------------------------------------------------------------------
+
+def test_make_tenants_deterministic_and_skewed():
+    a = make_tenants(64, skew="zipf")
+    b = make_tenants(64, skew="zipf")
+    assert a == b                                  # fully deterministic
+    weights = [t.weight for t in a]
+    assert weights[0] == 8.0 and weights[1] == 4.0
+    assert sorted(set(weights)) == [1.0, 2.0, 4.0, 8.0]
+    # QoS class follows weight: heavier -> larger rate, tighter SLO
+    assert a[0].rate == 1.0 and a[0].slo_latency == 512
+    assert a[63].rate == 0.25 and a[63].slo_latency == 2048
+    uniform = make_tenants(8, skew="uniform")
+    assert {t.weight for t in uniform} == {2.0}
+    # archetype seeds are shared across fleets, distinct across workloads
+    assert a[0].trace_seed == tenant_seed(a[0].workload, 8.0, 1.0)
+    assert a[0].trace_seed != a[1].trace_seed
+
+
+def test_tenant_spec_validation():
+    with pytest.raises(ValueError, match="unknown workload"):
+        TenantSpec(name="x", workload="nope")
+    with pytest.raises(ValueError, match="weight"):
+        TenantSpec(name="x", workload="LU", weight=0.0)
+    with pytest.raises(ValueError, match="rate"):
+        TenantSpec(name="x", workload="LU", rate=1.5)
+
+
+def test_admission_mechanisms():
+    fleet = FleetSpec(name="f", tenants=make_tenants(6, skew="zipf"),
+                      admission="cap", max_tenants=3)
+    loads = [offered_load(t, BASE, fleet) for t in fleet.tenants]
+    # priority: heaviest first, spec order breaking ties
+    order = priority_order(fleet)
+    ws = [fleet.tenants[i].weight for i in order]
+    assert ws == sorted(ws, reverse=True)
+    # cap: exactly max_tenants fully admitted, rest rejected
+    fracs = admit(fleet, loads, pool_bpc=1e9)
+    assert sorted(fracs, reverse=True) == [1.0, 1.0, 1.0, 0.0, 0.0, 0.0]
+    assert fracs[0] == 1.0                         # heaviest always in
+    # load_shed: partial admission of the marginal tenant, monotone in
+    # priority (a rejected tenant never outranks an admitted one)
+    shed = FleetSpec(name="g", tenants=fleet.tenants,
+                     admission="load_shed", rho_target=0.5,
+                     pool_bw_gbps=BASE.fam_bw_gbps)
+    fr = admit(shed, loads, shed.pool_bw_gbps / BASE.clock_ghz)
+    assert any(0.0 < f < 1.0 for f in fr) or all(f == 1.0 for f in fr)
+    ranked = [fr[i] for i in priority_order(shed)]
+    assert all(x >= y - 1e-12 for x, y in zip(ranked, ranked[1:]))
+    # none: everyone fully admitted
+    assert admit(FleetSpec(name="h", tenants=fleet.tenants),
+                 loads, 1.0) == [1.0] * 6
+    with pytest.raises(ValueError, match="unknown admission"):
+        admit(FleetSpec(name="i", tenants=fleet.tenants,
+                        admission="bogus"), loads, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# lowering: one compile group, mechanism-invariant keys
+# ---------------------------------------------------------------------------
+
+def test_lowering_single_group_and_iso_dedup():
+    fleets = [FleetSpec(name="a", tenants=make_tenants(6, skew="zipf"),
+                        admission="none"),
+              FleetSpec(name="b", tenants=make_tenants(6, skew="zipf"),
+                        admission="load_shed", rho_target=0.01)]
+    low = lower_fleets(fleets, T=512)
+    plan = low.experiment.plan()
+    assert plan.num_groups == 1
+    # both fleets share archetypes -> isolated baselines deduplicate
+    assert len(low.cells) == 12
+    assert 0 < len(low.iso_labels) < 12
+    assert plan.num_points == 12 + len(low.iso_labels)
+    # admission throttled fleet b's lifetimes, not its planning
+    b_lives = [c.t_live for c in low.cells if c.fleet == "b"]
+    assert min(b_lives) < 512 and any(v == 0 for v in b_lives)
+
+
+def test_admission_mechanism_never_changes_compile_keys():
+    tenants = make_tenants(8, skew="zipf")
+    keys = []
+    for adm in sorted(ADMISSIONS):
+        fleet = FleetSpec(name="f", tenants=tenants, admission=adm,
+                          max_tenants=4, rho_target=0.3)
+        plan = lower_fleets([fleet], T=512,
+                            include_isolated=False).experiment.plan()
+        keys.append((tuple(str(g.key) for g in plan.groups),
+                     group_cache_keys(plan)))
+    assert all(k == keys[0] for k in keys[1:]), keys
+
+
+# ---------------------------------------------------------------------------
+# the t_live engine hook (masked-runner lifetime gating)
+# ---------------------------------------------------------------------------
+
+def test_t_live_bit_exact_vs_shorter_run():
+    """T=512 gated to t_live=256 must be BIT-identical to a plain T=256
+    point of the same group (same t_pad, same device-generated trace
+    prefix, same warmup) — the admission gate is exact masking, not an
+    approximation."""
+    exp = Experiment(
+        name="tlive", workloads=("LU",), trace_backend="device",
+        axes=(grid_axis("cell", {
+            "short": {"T": 256},
+            "gated": {"T": 512, "t_live": 256}}),))
+    plan = exp.plan()
+    assert plan.num_groups == 1          # same t_bucket -> one group
+    res = exp.run()
+    short = res.get(cell="short")
+    gated = res.get(cell="gated")
+    assert set(short) == set(gated)
+    for k in short:
+        np.testing.assert_array_equal(short[k], gated[k], err_msg=k)
+
+
+def test_t_live_zero_is_inert():
+    exp = Experiment(
+        name="tzero", workloads=("LU",), trace_backend="device",
+        axes=(grid_axis("cell", {
+            "live": {"T": 256},
+            "dead": {"T": 256, "t_live": 0}}),))
+    res = exp.run()
+    dead = res.get(cell="dead")
+    assert float(np.asarray(dead["ipc"]).sum()) == 0.0
+    assert float(np.asarray(dead["prefetches_issued"]).sum()) == 0.0
+    assert float(np.asarray(res.get(cell="live")["ipc"]).sum()) > 0.0
+    # accounting charges only live events: 256 (live) + 0 (dead)
+    assert res.info.events == 256
+
+
+def test_t_live_validation():
+    exp = Experiment(
+        name="bad", workloads=("LU",),
+        axes=(grid_axis("cell", {"x": {"T": 128, "t_live": 129}}),))
+    with pytest.raises(ValueError, match="t_live"):
+        exp.points()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end fleet report
+# ---------------------------------------------------------------------------
+
+def test_fleet_report_end_to_end():
+    fleets = [
+        # effectively infinite pool: zero contention -> slowdown == 1.0
+        FleetSpec(name="iso_like", tenants=make_tenants(4, skew="zipf"),
+                  admission="none", pool_bw_scale=10000.0),
+        FleetSpec(name="shed", tenants=make_tenants(4, skew="uniform"),
+                  admission="load_shed", rho_target=0.01),
+    ]
+    low = lower_fleets(fleets, T=512)
+    res = low.experiment.run(assert_compiles=True)
+    assert res.info.planned_groups == 1
+    assert res.info.xla_compiles <= 1
+    summaries, records = fleet_report(res, low)
+    validate_tenant_records(records)      # schema holds
+    assert len(records) == 8
+    by_name = {s["fleet"]: s for s in summaries}
+    # uncontended fleet: every tenant exactly at its isolated baseline
+    iso = [r for r in records if r["fleet"] == "iso_like"]
+    assert all(r["slowdown"] == 1.0 for r in iso)
+    assert by_name["iso_like"]["slowdown_geomean"] == 1.0
+    assert by_name["iso_like"]["jain_fairness"] == pytest.approx(1.0)
+    # throttled fleet: rejected tenants carry zero metrics, live ones
+    # dominate the summary; derived string is deterministic
+    shed = [r for r in records if r["fleet"] == "shed"]
+    rejected = [r for r in shed if r["admitted_frac"] == 0.0]
+    assert rejected and all(r["ipc"] == 0.0 and r["slowdown"] is None
+                            for r in rejected)
+    assert by_name["shed"]["admitted"] == len(shed) - len(rejected)
+    assert by_name["shed"]["derived"].startswith(
+        f"admitted={by_name['shed']['admitted']}/4;rho=")
+    for r in records:
+        assert r["p99"] >= r["p95"] >= r["p50"] >= 0.0
+        assert 0.0 <= r["violation_rate"] <= 1.0
+
+
+def test_fleet_record_schema_is_complete():
+    with pytest.raises(ValueError, match="missing schema"):
+        validate_tenant_records([{k: 0 for k in TENANT_SCHEMA[:-1]}])
+
+
+# ---------------------------------------------------------------------------
+# the --plan surface (axis names/sizes for programmatic grids)
+# ---------------------------------------------------------------------------
+
+def test_plan_lines_show_programmatic_axes():
+    from benchmarks.common import plan_lines
+    low = lower_fleets([FleetSpec(name="f",
+                                  tenants=make_tenants(4, skew="zipf"))],
+                       T=512)
+    lines = plan_lines(low.experiment.plan(), low.experiment.axes)
+    assert lines[0].startswith("fig_pond: 1 group(s)")
+    assert lines[1].startswith("  axes: tenant(")
+    assert "group 0:" in lines[2]
+
+
+# ---------------------------------------------------------------------------
+# the pond_tail search objective
+# ---------------------------------------------------------------------------
+
+def test_pond_search_objective_warm_after_gen1(tmp_path):
+    from repro.search import run_search
+    from repro.search.objectives import get_objective
+    from repro.tenants.search import PondObjective, qos_space
+
+    obj = get_objective("pond_tail")      # registry lookup auto-imports
+    assert isinstance(obj, PondObjective)
+    fleet = FleetSpec(name="mini", tenants=make_tenants(4, skew="zipf"),
+                      admission="none")
+    summary = run_search(
+        qos_space(), objective=PondObjective(fleet=fleet),
+        proposer="random", generations=2, population=2, T=512,
+        seed=3, out_dir=tmp_path / "search", trace_backend="device")
+    assert summary["best"]["objective"] > 0.0
+    assert len(summary["best"]["per_mix"]) == 4    # one entry per tenant
+    timings = summary["timings"]
+    assert [t["gen"] for t in timings] == [1, 2]
+    # every QoS knob is traced: generation 2 rides generation 1's
+    # executable — zero new group keys, one planned group throughout
+    assert timings[0]["planned_groups"] == 1
+    assert timings[1]["new_group_keys"] == 0
+    from repro.search import read_trajectory, split_records
+    header, cands, gens = split_records(
+        read_trajectory(tmp_path / "search" / "trajectory.jsonl"))
+    assert header["objective"] == "pond_tail"
+    assert header["mixes"]["scenario"] == "pond"
